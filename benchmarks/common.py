@@ -1,0 +1,22 @@
+"""Shared helpers for paper-figure benchmarks."""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+ROWS: List[str] = []
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    line = f"{name},{us_per_call:.1f},{derived}"
+    ROWS.append(line)
+    print(line, flush=True)
+
+
+class timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.seconds = time.perf_counter() - self.t0

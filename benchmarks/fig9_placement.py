@@ -1,0 +1,38 @@
+"""Fig. 9: even vs packed sandbox placement under a sinusoidal single-DAG
+workload (avg 1200 RPS, amplitude 600, 20 s period, scaled)."""
+from __future__ import annotations
+
+from repro.core import ClusterConfig, SGSConfig
+from repro.core.types import DagSpec, FunctionSpec
+from repro.sim import Sinusoidal, WorkloadSpec, run_archipelago
+
+from .common import emit
+
+
+def run(duration: float = 24.0) -> None:
+    fn = FunctionSpec("d/f", exec_time=0.10, mem_mb=128, setup_time=0.3)
+    dag = DagSpec("d", (fn,), (), deadline=0.25)
+    # peaks push concurrency near capacity: packed placement then schedules
+    # on workers without a warm sandbox (paper: ~70% misses at peaks)
+    spec = WorkloadSpec([(dag, Sinusoidal(550.0, 280.0, 8.0))], duration)
+    cc = ClusterConfig(n_sgs=1, workers_per_sgs=10, cores_per_worker=8)
+    # paper-faithful pair: revival only via the background allocator
+    for tag, even in [("even", True), ("packed", False)]:
+        res = run_archipelago(
+            spec, cluster=cc,
+            sgs_cfg=SGSConfig(even_placement=even,
+                              revive_on_dispatch=False))
+        m = res.metrics.after_warmup(4.0)
+        emit(f"fig9_{tag}_deadlines_met", 0.0,
+             f"{m.deadline_met_frac()*100:.2f}%")
+        emit(f"fig9_{tag}_cold_starts", 0.0, str(m.cold_start_count()))
+        emit(f"fig9_{tag}_p999", m.latency_pct(99.9) * 1e6)
+    # beyond-paper: dispatch-time revival heals the packed pathology
+    res = run_archipelago(
+        spec, cluster=cc,
+        sgs_cfg=SGSConfig(even_placement=False, revive_on_dispatch=True))
+    m = res.metrics.after_warmup(4.0)
+    emit("fig9_packed_plus_revival_deadlines_met", 0.0,
+         f"{m.deadline_met_frac()*100:.2f}% (beyond-paper)")
+    emit("fig9_packed_plus_revival_cold_starts", 0.0,
+         str(m.cold_start_count()))

@@ -1,0 +1,54 @@
+"""§6.1 fault tolerance: worker fail-stop mid-run — deadline adherence
+before/after, and whether the queuing-delay signal drives recovery
+scale-out."""
+from __future__ import annotations
+
+from repro.core import ClusterConfig, Request
+from repro.core.cluster import build_cluster
+from repro.core.fault import fail_worker
+from repro.core.types import DagSpec, FunctionSpec
+from repro.sim import ConstantRate, WorkloadSpec
+from repro.sim.engine import SimEnv
+from repro.sim.metrics import Metrics
+
+from .common import emit
+
+
+def run(duration: float = 20.0) -> None:
+    env = SimEnv()
+    cc = ClusterConfig(n_sgs=3, workers_per_sgs=3, cores_per_worker=4)
+    lbs = build_cluster(env, cc)
+    dag = DagSpec("d", (FunctionSpec("d/f", 0.08, setup_time=0.25),), (),
+                  deadline=0.33)
+    metrics = Metrics()
+    spec = WorkloadSpec([(dag, ConstantRate(80.0))], duration)
+    for t, d in spec.generate(0):
+        def fire(t=t, d=d):
+            req = Request(dag=d, arrival_time=env.now())
+            metrics.requests.append(req)
+            lbs.route(req, env.now())
+        env.call_at(t, fire)
+    env.every(0.05, lambda: lbs.check_scaling(env.now()), until=duration)
+
+    home = lbs.sgss[lbs.ring.lookup("d")]
+    t_fail = duration / 3.0
+
+    def inject():
+        for w in list(home.workers[:2]):
+            fail_worker(home, w.worker_id)
+
+    env.call_at(t_fail, inject)
+    env.run_until(duration + 3.0)
+
+    pre = Metrics(requests=[r for r in metrics.requests
+                            if 2.0 <= r.arrival_time < t_fail])
+    post = Metrics(requests=[r for r in metrics.requests
+                             if r.arrival_time >= t_fail + 2.0])
+    emit("fault_pre_failure_deadlines_met", 0.0,
+         f"{pre.deadline_met_frac()*100:.2f}%")
+    emit("fault_post_failure_deadlines_met", 0.0,
+         f"{post.deadline_met_frac()*100:.2f}%")
+    emit("fault_all_requests_completed", 0.0,
+         str(len(metrics.completed) == len(metrics.requests)))
+    emit("fault_recovery_scale_out", 0.0,
+         f"n_active={lbs.n_active('d')} (>=2 expected)")

@@ -1,0 +1,28 @@
+"""Deliverable (g): per-(arch x shape) roofline terms from the compiled
+dry-run (reads results/roofline/*.json; run `python -m repro.launch.roofline`
+first — benchmarks.run invokes it automatically if the table is missing)."""
+from __future__ import annotations
+
+import json
+import os
+
+from .common import emit
+
+TABLE = os.path.join(os.path.dirname(__file__), "..", "results", "roofline",
+                     "table.json")
+
+
+def run() -> None:
+    if not os.path.exists(TABLE):
+        emit("roofline_table", 0.0, "missing - run repro.launch.roofline")
+        return
+    with open(TABLE) as f:
+        rows = json.load(f)
+    for r in rows:
+        emit(f"roofline_{r['arch']}_{r['shape']}_compute",
+             r["compute_s"] * 1e6)
+        emit(f"roofline_{r['arch']}_{r['shape']}_memory",
+             r["memory_s"] * 1e6)
+        emit(f"roofline_{r['arch']}_{r['shape']}_collective",
+             r["collective_s"] * 1e6,
+             f"dom={r['bottleneck']};useful={r['useful_ratio']*100:.1f}%")

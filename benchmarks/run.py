@@ -1,0 +1,64 @@
+"""Benchmark harness: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  Run:
+    PYTHONPATH=src python -m benchmarks.run [--only fig7,...] [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+from .common import ROWS, emit
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="")
+    ap.add_argument("--quick", action="store_true",
+                    help="shorter durations (CI smoke)")
+    args = ap.parse_args()
+
+    from . import (fig2d_sparrow, fig7_macro, fig8b_estimation,
+                   fig9_placement, fig10_deadline_scaling, fig11_contention,
+                   fig12_sot, fig13_sgs_size, fig_eviction, fig_fault,
+                   fig_scaleout_gradual, roofline_table, tbl_overheads)
+
+    benches = {
+        "fig2d": lambda: fig2d_sparrow.run(8.0 if args.quick else 16.0),
+        "fig7": lambda: fig7_macro.run(12.0 if args.quick else 25.0),
+        "fig8b": lambda: fig8b_estimation.run(12.0 if args.quick else 20.0),
+        "fig9": lambda: fig9_placement.run(12.0 if args.quick else 24.0),
+        "eviction": lambda: fig_eviction.run(12.0 if args.quick else 24.0),
+        "fig10": lambda: fig10_deadline_scaling.run(
+            12.0 if args.quick else 20.0),
+        "fig11": lambda: fig11_contention.run(12.0 if args.quick else 24.0),
+        "fig12": lambda: fig12_sot.run(10.0 if args.quick else 16.0),
+        "fig13": lambda: fig13_sgs_size.run(10.0 if args.quick else 20.0),
+        "scaleout": lambda: fig_scaleout_gradual.run(
+            14.0 if args.quick else 30.0),
+        "fault": lambda: fig_fault.run(12.0 if args.quick else 20.0),
+        "overheads": lambda: tbl_overheads.run(500 if args.quick else 2000),
+        "roofline": roofline_table.run,
+    }
+    only = [s for s in args.only.split(",") if s]
+    failures = 0
+    print("name,us_per_call,derived")
+    for name, fn in benches.items():
+        if only and name not in only:
+            continue
+        t0 = time.time()
+        try:
+            fn()
+            emit(f"_bench_{name}_wall", (time.time() - t0) * 1e6, "ok")
+        except Exception:
+            traceback.print_exc()
+            emit(f"_bench_{name}_wall", (time.time() - t0) * 1e6, "FAILED")
+            failures += 1
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,73 @@
+"""§7.4 system overheads: wall-clock microbenchmarks of OUR implementation's
+control-plane decisions (paper's Go prototype: LBS route ~190us median, SGS
+schedule ~241us, scale-out ~128us, estimation ~879us)."""
+from __future__ import annotations
+
+import time
+
+from repro.core import (ClusterConfig, DemandEstimator, Request, SGSConfig)
+from repro.core.cluster import build_cluster
+from repro.core.types import DagSpec, FunctionSpec
+from repro.sim.engine import SimEnv
+from repro.sim.metrics import percentile
+
+from .common import emit
+
+
+def run(n: int = 2000) -> None:
+    env = SimEnv()
+    cc = ClusterConfig(n_sgs=8, workers_per_sgs=8, cores_per_worker=20)
+    lbs = build_cluster(env, cc)
+    dags = [DagSpec(f"d{i}",
+                    (FunctionSpec(f"d{i}/f", 0.1, setup_time=0.25),), (),
+                    deadline=0.3) for i in range(20)]
+
+    # LBS routing decision cost (lottery + state lookup)
+    lat = []
+    for i in range(n):
+        req = Request(dag=dags[i % len(dags)], arrival_time=env.now())
+        t0 = time.perf_counter()
+        sgs = lbs.select(req, env.now())
+        lat.append(time.perf_counter() - t0)
+        sgs.submit_request(req)
+        env.run_until(env.now() + 0.001)
+    emit("tbl_lbs_route_p50", percentile(lat, 50) * 1e6,
+         "paper Go prototype: 190us")
+    emit("tbl_lbs_route_p99", percentile(lat, 99) * 1e6, "paper: 212us")
+
+    # SGS scheduling decision cost (SRSF pick + worker choice)
+    sgs = next(iter(lbs.sgss.values()))
+    lat = []
+    for i in range(n):
+        req = Request(dag=dags[i % len(dags)], arrival_time=env.now())
+        t0 = time.perf_counter()
+        sgs.submit_request(req)            # enqueue + dispatch decision
+        lat.append(time.perf_counter() - t0)
+        env.run_until(env.now() + 0.001)
+    emit("tbl_sgs_schedule_p50", percentile(lat, 50) * 1e6,
+         "paper: 241us")
+    emit("tbl_sgs_schedule_p99", percentile(lat, 99) * 1e6, "paper: 342us")
+
+    # estimation decision cost
+    est = DemandEstimator()
+    for i in range(500):
+        est.record_arrival("f", i * 0.002)
+    lat = []
+    for i in range(n):
+        t0 = time.perf_counter()
+        est.demand("f", exec_time=0.1, now=1.0 + i * 1e-4)
+        lat.append(time.perf_counter() - t0)
+    emit("tbl_estimation_p50", percentile(lat, 50) * 1e6, "paper: 879us")
+    emit("tbl_estimation_p99", percentile(lat, 99) * 1e6, "paper: 1352us")
+
+    # scale-out decision cost
+    lat = []
+    for i in range(200):
+        st = lbs._state(dags[i % len(dags)], env.now())
+        t0 = time.perf_counter()
+        lbs._scale_out(st, env.now())
+        lat.append(time.perf_counter() - t0)
+        if len(st.active) > 1:
+            st.active, st.removed = st.active[:1], []
+    emit("tbl_scaleout_p50", percentile(lat, 50) * 1e6, "paper: 128us")
+    emit("tbl_scaleout_p99", percentile(lat, 99) * 1e6, "paper: 197us")

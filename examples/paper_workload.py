@@ -1,0 +1,41 @@
+"""Reproduce the paper's headline macrobenchmark (Fig. 7) at full testbed
+scale: 8 SGSs x 8 workers x 20 cores, Workloads 1 & 2, Archipelago vs the
+centralized-FIFO-reactive baseline.
+
+    PYTHONPATH=src python examples/paper_workload.py [--duration 25]
+"""
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.core import ClusterConfig
+from repro.sim import (paper_workload_1, paper_workload_2, run_archipelago,
+                       run_baseline, summarize)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--duration", type=float, default=25.0)
+    args = ap.parse_args()
+    cc = ClusterConfig()
+    for name, spec in [
+            ("Workload1", paper_workload_1(duration=args.duration, scale=1.3,
+                                           dags_per_class=2)),
+            ("Workload2", paper_workload_2(duration=args.duration, scale=1.0,
+                                           dags_per_class=2))]:
+        ra = run_archipelago(spec, cluster=cc)
+        rb = run_baseline(spec, cluster=cc)
+        ma = ra.metrics.after_warmup(5.0)
+        mb = rb.metrics.after_warmup(5.0)
+        print(f"== {name} ==")
+        print(" ", summarize("archipelago", ma))
+        print(" ", summarize("baseline   ", mb))
+        ratio = mb.latency_pct(99.9) / max(ma.latency_pct(99.9), 1e-9)
+        print(f"  tail (99.9%) reduction: {ratio:.1f}x   "
+              f"deadlines: {ma.deadline_met_frac()*100:.2f}% vs "
+              f"{mb.deadline_met_frac()*100:.2f}%")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""Archipelago core: the paper's contribution as a composable library.
+
+Public API:
+    FunctionSpec, DagSpec, Request        -- workload model
+    SemiGlobalScheduler, SGSConfig        -- deadline-aware SRSF scheduler
+    LoadBalancer, LBSConfig               -- sandbox-aware routing + scaling
+    DemandEstimator, poisson_ppf          -- proactive demand estimation
+    SandboxManager, Worker                -- even placement, soft/hard evict
+    CentralizedFIFO, SparrowScheduler     -- paper baselines
+    build_cluster, ClusterConfig          -- one-call stack construction
+"""
+from .types import (DagSpec, FunctionSpec, Invocation, Request, Sandbox,
+                    SandboxState)
+from .estimator import DemandEstimator, RateEstimator, poisson_ppf
+from .sandbox import SandboxManager, Worker
+from .sgs import Env, SGSConfig, SemiGlobalScheduler
+from .lbs import ConsistentHashRing, LBSConfig, LoadBalancer
+from .baselines import CentralizedFIFO, SparrowScheduler
+from .cluster import ClusterConfig, build_cluster, build_flat_workers
+from .fault import (StateStore, checkpoint_lbs, checkpoint_sgs, fail_worker,
+                    restore_lbs, restore_sgs)
+
+__all__ = [
+    "DagSpec", "FunctionSpec", "Invocation", "Request", "Sandbox",
+    "SandboxState", "DemandEstimator", "RateEstimator", "poisson_ppf",
+    "SandboxManager", "Worker", "Env", "SGSConfig", "SemiGlobalScheduler",
+    "ConsistentHashRing", "LBSConfig", "LoadBalancer", "CentralizedFIFO",
+    "SparrowScheduler", "ClusterConfig", "build_cluster", "build_flat_workers",
+    "StateStore", "checkpoint_lbs", "checkpoint_sgs", "fail_worker",
+    "restore_lbs", "restore_sgs",
+]

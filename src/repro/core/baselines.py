@@ -1,0 +1,214 @@
+"""Baseline scheduling stacks the paper compares against (§2.4, §7.1).
+
+* ``CentralizedFIFO`` — the paper's main baseline: one global scheduler,
+  FIFO request order, *reactive* sandbox allocation, fixed keep-alive
+  (15 min) eviction.  Mirrors OpenWhisk-style platforms [3].
+* ``SparrowScheduler`` — parallel global scheduling with power-of-two random
+  probing [41] (Fig. 2d): per-worker FIFO queues, no sandbox awareness.
+"""
+from __future__ import annotations
+
+import heapq
+import random
+from collections import deque
+from typing import Deque, Dict, List, Optional, Tuple
+
+from .sandbox import Worker
+from .sgs import Env
+from .types import (DagSpec, Invocation, Request, Sandbox, SandboxState)
+
+
+class CentralizedFIFO:
+    """One cluster-wide FIFO queue; reactive sandboxes with keep-alive."""
+
+    def __init__(self, workers: List[Worker], env: Env,
+                 keepalive: float = 900.0):
+        self.workers = workers
+        self.env = env
+        self.keepalive = keepalive
+        self._queue: Deque[Invocation] = deque()
+        self._completed_fns: Dict[int, set] = {}
+        self.n_cold_starts = 0
+        self.n_warm_hits = 0
+        self.queuing_delays: List[float] = []
+        self.completed_requests: List[Request] = []
+
+    # -- intake ---------------------------------------------------------------
+    def submit_request(self, req: Request) -> None:
+        now = self.env.now()
+        self._completed_fns[req.req_id] = set()
+        for root in req.dag.roots():
+            self._queue.append(Invocation(request=req, fn=req.dag.fn(root),
+                                          ready_time=now))
+        self._dispatch()
+
+    # -- dispatch ---------------------------------------------------------------
+    def _dispatch(self) -> None:
+        now = self.env.now()
+        while self._queue:
+            inv = self._queue[0]
+            w, sbx = self._choose_worker(inv, now)
+            if w is None:
+                return          # head-of-line blocking: strict FIFO
+            self._queue.popleft()
+            self._start(inv, w, sbx, now)
+
+    def _choose_worker(self, inv: Invocation, now: float
+                       ) -> Tuple[Optional[Worker], Optional[Sandbox]]:
+        cold: Optional[Worker] = None
+        for w in self.workers:
+            if w.free_cores <= 0:
+                continue
+            s = w.warm_available(inv.fn.name, now)
+            if s is not None:
+                return w, s
+            if cold is None:
+                cold = w
+        return cold, None
+
+    def _start(self, inv: Invocation, w: Worker, sbx: Optional[Sandbox],
+               now: float) -> None:
+        inv.start_time = now
+        qd = now - inv.ready_time
+        self.queuing_delays.append(qd)
+        inv.request.total_queuing_delay += qd
+        w.busy_cores += 1
+        setup = 0.0
+        if sbx is None:
+            inv.cold_start = True
+            inv.request.n_cold_starts += 1
+            self.n_cold_starts += 1
+            setup = inv.fn.setup_time
+            self._make_room(w, inv.fn.mem_mb, now)
+            sbx = Sandbox(fn=inv.fn, worker_id=w.worker_id,
+                          state=SandboxState.BUSY,
+                          ready_at=now + setup, last_used=now)
+            w.sandboxes.append(sbx)
+        else:
+            self.n_warm_hits += 1
+            sbx.state = SandboxState.BUSY
+            sbx.last_used = now
+        self.env.call_after(setup + inv.fn.exec_time,
+                            lambda: self._complete(inv, w, sbx))
+
+    def _make_room(self, w: Worker, mem_mb: float, now: float) -> None:
+        """Keep-alive expiry first, then oldest-idle eviction if still full."""
+        for s in list(w.sandboxes):
+            if (s.state == SandboxState.WARM
+                    and now - s.last_used > self.keepalive):
+                w.sandboxes.remove(s)
+        while w.free_pool_mem < mem_mb:
+            idle = [s for s in w.sandboxes if s.state == SandboxState.WARM]
+            if not idle:
+                return
+            w.sandboxes.remove(min(idle, key=lambda s: s.last_used))
+
+    def _complete(self, inv: Invocation, w: Worker, sbx: Sandbox) -> None:
+        now = self.env.now()
+        w.busy_cores -= 1
+        sbx.state = SandboxState.WARM
+        sbx.ready_at = min(sbx.ready_at, now)
+        sbx.last_used = now
+        req = inv.request
+        done = self._completed_fns[req.req_id]
+        done.add(inv.fn.name)
+        dag = req.dag
+        if len(done) == len(dag.functions):
+            req.completion_time = now
+            self.completed_requests.append(req)
+            del self._completed_fns[req.req_id]
+        else:
+            for child in dag.children(inv.fn.name):
+                if all(p in done for p in dag.parents(child)):
+                    self._queue.append(Invocation(request=req,
+                                                  fn=dag.fn(child),
+                                                  ready_time=now))
+        self._dispatch()
+
+
+class SparrowScheduler:
+    """Batch-sampling/power-of-two-choices decentralized scheduler [41].
+
+    Each invocation probes ``probes`` random workers and joins the shortest
+    per-worker FIFO queue.  Workers run their queues in order; sandbox reuse
+    happens only by accident of placement (no sandbox awareness).
+    """
+
+    def __init__(self, workers: List[Worker], env: Env, probes: int = 2,
+                 seed: int = 0, keepalive: float = 900.0):
+        self.workers = workers
+        self.env = env
+        self.probes = probes
+        self.keepalive = keepalive
+        self._rng = random.Random(seed)
+        self._wqueues: Dict[int, Deque[Invocation]] = {
+            w.worker_id: deque() for w in workers}
+        self._completed_fns: Dict[int, set] = {}
+        self.n_cold_starts = 0
+        self.n_warm_hits = 0
+        self.queuing_delays: List[float] = []
+        self.completed_requests: List[Request] = []
+
+    def submit_request(self, req: Request) -> None:
+        now = self.env.now()
+        self._completed_fns[req.req_id] = set()
+        for root in req.dag.roots():
+            self._place(Invocation(request=req, fn=req.dag.fn(root),
+                                   ready_time=now))
+
+    def _place(self, inv: Invocation) -> None:
+        cands = self._rng.sample(self.workers,
+                                 min(self.probes, len(self.workers)))
+        w = min(cands, key=lambda w: len(self._wqueues[w.worker_id])
+                + w.busy_cores)
+        self._wqueues[w.worker_id].append(inv)
+        self._drain(w)
+
+    def _drain(self, w: Worker) -> None:
+        now = self.env.now()
+        q = self._wqueues[w.worker_id]
+        while q and w.free_cores > 0:
+            inv = q.popleft()
+            inv.start_time = now
+            qd = now - inv.ready_time
+            self.queuing_delays.append(qd)
+            inv.request.total_queuing_delay += qd
+            w.busy_cores += 1
+            sbx = w.warm_available(inv.fn.name, now)
+            setup = 0.0
+            if sbx is None:
+                inv.cold_start = True
+                inv.request.n_cold_starts += 1
+                self.n_cold_starts += 1
+                setup = inv.fn.setup_time
+                sbx = Sandbox(fn=inv.fn, worker_id=w.worker_id,
+                              state=SandboxState.BUSY,
+                              ready_at=now + setup, last_used=now)
+                w.sandboxes.append(sbx)
+            else:
+                self.n_warm_hits += 1
+                sbx.state = SandboxState.BUSY
+            self.env.call_after(
+                setup + inv.fn.exec_time,
+                lambda inv=inv, w=w, sbx=sbx: self._complete(inv, w, sbx))
+
+    def _complete(self, inv: Invocation, w: Worker, sbx: Sandbox) -> None:
+        now = self.env.now()
+        w.busy_cores -= 1
+        sbx.state = SandboxState.WARM
+        sbx.ready_at = min(sbx.ready_at, now)
+        sbx.last_used = now
+        req = inv.request
+        done = self._completed_fns[req.req_id]
+        done.add(inv.fn.name)
+        dag = req.dag
+        if len(done) == len(dag.functions):
+            req.completion_time = now
+            self.completed_requests.append(req)
+            del self._completed_fns[req.req_id]
+        else:
+            for child in dag.children(inv.fn.name):
+                if all(p in done for p in dag.parents(child)):
+                    self._place(Invocation(request=req, fn=dag.fn(child),
+                                           ready_time=now))
+        self._drain(w)

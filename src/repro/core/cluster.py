@@ -1,0 +1,49 @@
+"""Cluster partitioning (§4.1): carve a machine set into (SGS, worker pool)
+pairs.  "A simple approach we espouse is to organize each rack as a worker
+pool with one of the machines running the SGS."
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Optional
+
+from .lbs import LBSConfig, LoadBalancer
+from .sandbox import Worker
+from .sgs import Env, SGSConfig, SemiGlobalScheduler
+from .types import ExecuteFn
+
+
+@dataclass
+class ClusterConfig:
+    n_sgs: int = 8                 # paper testbed: 8 SGSs x 8 workers (§7.1)
+    workers_per_sgs: int = 8
+    cores_per_worker: int = 20
+    # paper machines have 256GB (§7.1); a quarter reserved as proactive pool
+    pool_mem_mb: float = 65536.0
+
+
+def build_cluster(env: Env, cluster: Optional[ClusterConfig] = None,
+                  sgs_cfg: Optional[SGSConfig] = None,
+                  lbs_cfg: Optional[LBSConfig] = None,
+                  execute: Optional[ExecuteFn] = None) -> LoadBalancer:
+    """Construct the full Archipelago stack: workers -> SGSs -> LBS."""
+    cc = cluster or ClusterConfig()
+    sgss: List[SemiGlobalScheduler] = []
+    wid = 0
+    for sid in range(cc.n_sgs):
+        pool = []
+        for _ in range(cc.workers_per_sgs):
+            pool.append(Worker(worker_id=wid, cores=cc.cores_per_worker,
+                               pool_mem_mb=cc.pool_mem_mb))
+            wid += 1
+        sgss.append(SemiGlobalScheduler(sgs_id=sid, workers=pool, env=env,
+                                        config=sgs_cfg, execute=execute))
+    return LoadBalancer(sgss, config=lbs_cfg)
+
+
+def build_flat_workers(cluster: Optional[ClusterConfig] = None) -> List[Worker]:
+    """All workers in one flat pool (for the centralized baselines)."""
+    cc = cluster or ClusterConfig()
+    n = cc.n_sgs * cc.workers_per_sgs
+    return [Worker(worker_id=i, cores=cc.cores_per_worker,
+                   pool_mem_mb=cc.pool_mem_mb) for i in range(n)]

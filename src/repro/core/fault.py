@@ -1,0 +1,122 @@
+"""Fault tolerance (§6.1).
+
+Fail-stop model with an immediate failure detector:
+
+* **Worker failures** — the owning SGS updates its cluster view (the worker
+  leaves the pool, its sandboxes are gone); invocations that were executing
+  there are re-enqueued (retry).  Recovery pressure is handled by the
+  existing machinery: lost capacity raises queuing delay, the LBS observes
+  it and scales the affected DAGs out; even placement means surviving
+  workers still hold proactive sandboxes.
+* **SGS / LB failures** — all state an SGS or the LB needs to resume
+  (estimator state, sandbox demand targets, per-DAG SGS mappings) is kept
+  in a reliable external ``StateStore``; a replacement instance restores
+  from it and continues.
+"""
+from __future__ import annotations
+
+import copy
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+from .lbs import LoadBalancer
+from .sgs import SemiGlobalScheduler
+from .types import Invocation, SandboxState
+
+
+class StateStore:
+    """The paper's 'reliable external store' (a KV store; in the prototype a
+    goroutine-served map, here an in-process dict with deep-copy semantics
+    so restored state is decoupled from the writer's objects)."""
+
+    def __init__(self):
+        self._data: Dict[str, Any] = {}
+        self.n_writes = 0
+
+    def put(self, key: str, value: Any) -> None:
+        self._data[key] = copy.deepcopy(value)
+        self.n_writes += 1
+
+    def get(self, key: str, default: Any = None) -> Any:
+        v = self._data.get(key, default)
+        return copy.deepcopy(v)
+
+
+# ---------------------------------------------------------------------------
+# SGS state checkpoint / restore
+# ---------------------------------------------------------------------------
+
+
+def checkpoint_sgs(sgs: SemiGlobalScheduler, store: StateStore) -> None:
+    """Persist the soft state a replacement SGS needs (§6.1): demand targets
+    + estimator rates.  (Queued invocations are re-submitted by the LBS on
+    failover in a real deployment; sandboxes are soft state by design.)"""
+    store.put(f"sgs/{sgs.sgs_id}/demand", dict(sgs.sandboxes.demand_map))
+    store.put(f"sgs/{sgs.sgs_id}/fn_specs", dict(sgs.sandboxes.fn_specs))
+    store.put(f"sgs/{sgs.sgs_id}/dags", dict(sgs._dags))
+
+
+def restore_sgs(sgs: SemiGlobalScheduler, store: StateStore,
+                now: float) -> None:
+    """Bring a fresh SGS instance up from the store: re-learn served DAGs
+    and proactively re-allocate to the recorded demand."""
+    sgs._dags.update(store.get(f"sgs/{sgs.sgs_id}/dags", {}))
+    sgs.sandboxes.fn_specs.update(store.get(f"sgs/{sgs.sgs_id}/fn_specs", {}))
+    demand = store.get(f"sgs/{sgs.sgs_id}/demand", {})
+    for fn_name, d in demand.items():
+        spec = sgs.sandboxes.fn_specs.get(fn_name)
+        if spec is not None and d > 0:
+            sgs.sandboxes.set_demand(spec, d, now)
+    sgs._ensure_ticking()
+
+
+def checkpoint_lbs(lbs: LoadBalancer, store: StateStore) -> None:
+    """Persist per-DAG SGS mappings (active/removed lists)."""
+    mapping = {dag_id: {"active": list(st.active),
+                        "removed": list(st.removed),
+                        "sandbox_count": dict(st.sandbox_count)}
+               for dag_id, st in lbs._dag_state.items()}
+    store.put("lbs/mapping", mapping)
+
+
+def restore_lbs(lbs: LoadBalancer, store: StateStore, now: float) -> None:
+    mapping = store.get("lbs/mapping", {})
+    for dag_id, m in mapping.items():
+        st = lbs._dag_state.get(dag_id)
+        if st is None:
+            continue    # DAG spec re-registers on its next request
+        st.active = [s for s in m["active"] if s in lbs.sgss]
+        st.removed = [s for s in m["removed"] if s in lbs.sgss]
+        st.sandbox_count.update(m["sandbox_count"])
+
+
+# ---------------------------------------------------------------------------
+# Worker failure injection
+# ---------------------------------------------------------------------------
+
+
+def fail_worker(sgs: SemiGlobalScheduler, worker_id: int) -> int:
+    """Fail-stop one worker: remove it from the SGS's cluster view, drop its
+    sandboxes, and re-enqueue invocations that were running on it.  Returns
+    the number of re-enqueued invocations."""
+    import heapq
+
+    w = next((w for w in sgs.workers if w.worker_id == worker_id), None)
+    if w is None:
+        return 0
+    sgs.workers.remove(w)
+    # also remove from the sandbox manager's pool view
+    if w in sgs.sandboxes.workers:
+        sgs.sandboxes.workers.remove(w)
+    # retry in-flight invocations: the completion callbacks for this worker
+    # become no-ops because the request is re-driven from the queue
+    now = sgs.env.now()
+    n_retry = 0
+    for inv in list(sgs._inflight.get(worker_id, [])):
+        retry = Invocation(request=inv.request, fn=inv.fn, ready_time=now)
+        heapq.heappush(sgs._queue, (retry.priority_key(), retry))
+        n_retry += 1
+    sgs._dead_workers.add(worker_id)
+    sgs._inflight.pop(worker_id, None)
+    sgs._dispatch()
+    return n_retry

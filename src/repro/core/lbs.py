@@ -1,0 +1,251 @@
+"""Load balancing service (§5): sandbox-aware routing + per-DAG SGS scaling.
+
+Responsibilities (§5.1): spread load across SGSs, and route requests to
+maximize the number that land on a proactively allocated sandbox.  Scaling
+follows Pseudocode 2: the universal indicator is per-DAG queuing delay
+piggybacked on responses; the metric is the sandbox-count-weighted mean
+queuing delay normalized by the DAG's slack.
+"""
+from __future__ import annotations
+
+import bisect
+import hashlib
+import random
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+from .sgs import SemiGlobalScheduler
+from .types import DagSpec, Request
+
+
+def _hash(key: str) -> int:
+    return int.from_bytes(hashlib.md5(key.encode()).digest()[:8], "big")
+
+
+class ConsistentHashRing:
+    """Classic Karger ring [31] with virtual nodes."""
+
+    def __init__(self, ids: List[int], vnodes: int = 50):
+        self._points: List[int] = []
+        self._owner: Dict[int, int] = {}
+        for sid in ids:
+            for v in range(vnodes):
+                h = _hash(f"sgs-{sid}-vn{v}")
+                self._points.append(h)
+                self._owner[h] = sid
+        self._points.sort()
+        self._ids = sorted(set(ids))
+
+    def lookup(self, key: str) -> int:
+        h = _hash(key)
+        i = bisect.bisect_right(self._points, h) % len(self._points)
+        return self._owner[self._points[i]]
+
+    def successors(self, key: str) -> List[int]:
+        """All SGS ids in ring order starting at the key's owner — the scale
+        out order ("the next one in the ring", §5.2.2)."""
+        first = self.lookup(key)
+        ids = self._ids
+        start = ids.index(first)
+        return [ids[(start + k) % len(ids)] for k in range(len(ids))]
+
+
+@dataclass
+class LBSConfig:
+    scale_out_threshold: float = 0.3    # SOT (§7.5 knee)
+    scale_in_threshold: float = 0.05    # well below SOT to avoid oscillation
+    qdelay_window: int = 10             # samples per active SGS per decision
+    decision_interval: float = 0.25     # fallback cadence for low-RPS DAGs
+    scale_in_patience: int = 3          # consecutive below-SIT decisions
+    discount_factor: float = 0.25       # removed-list ticket scaling (§5.2.3)
+    ewma_alpha: float = 0.3
+    gradual: bool = True                # False -> instant scale-out ablation
+    sandbox_aware: bool = False         # handled via lottery tickets
+    seed: int = 0
+
+
+@dataclass
+class _DagState:
+    dag: DagSpec
+    active: List[int] = field(default_factory=list)     # in scale-out order
+    removed: List[int] = field(default_factory=list)
+    # piggybacked state per SGS
+    qdelay_ewma: Dict[int, float] = field(default_factory=dict)
+    qdelay_samples: Dict[int, int] = field(default_factory=dict)
+    sandbox_count: Dict[int, int] = field(default_factory=dict)
+    last_decision: float = 0.0
+    below_sit_streak: int = 0
+    n_scale_outs: int = 0
+    n_scale_ins: int = 0
+
+
+class LoadBalancer:
+    def __init__(self, sgss: List[SemiGlobalScheduler],
+                 config: Optional[LBSConfig] = None):
+        self.cfg = config or LBSConfig()
+        self.sgss: Dict[int, SemiGlobalScheduler] = {s.sgs_id: s for s in sgss}
+        self.ring = ConsistentHashRing(list(self.sgss))
+        self._dag_state: Dict[str, _DagState] = {}
+        self._rng = random.Random(self.cfg.seed)
+        # wire the piggyback channel
+        for s in sgss:
+            s.report = self.report
+        # history for benchmarks: (time, dag_id, n_active)
+        self.scale_events: List[tuple] = []
+
+    # ----------------------------------------------------------------- route
+    def select(self, req: Request, now: float) -> SemiGlobalScheduler:
+        """Routing decision only (lets callers model control-plane latency
+        between the decision and the submission)."""
+        st = self._state(req.dag, now)
+        sid = self._lottery(st)
+        return self.sgss[sid]
+
+    def route(self, req: Request, now: float) -> SemiGlobalScheduler:
+        sgs = self.select(req, now)
+        sgs.submit_request(req)
+        return sgs
+
+    def _state(self, dag: DagSpec, now: float) -> _DagState:
+        st = self._dag_state.get(dag.dag_id)
+        if st is None:
+            # Initial SGS selection by consistent hashing (§5.2.2)
+            first = self.ring.lookup(dag.dag_id)
+            st = _DagState(dag=dag, active=[first], last_decision=now)
+            st.sandbox_count[first] = 1
+            self._dag_state[dag.dag_id] = st
+        return st
+
+    def _lottery(self, st: _DagState) -> int:
+        """Lottery scheduling (§5.2.3): tickets proportional to each SGS's
+        proactive sandbox count for this DAG; removed-list SGSs keep
+        discounted tickets so scale-in drains gradually.
+
+        Hotspot damping (§5.1 responsibility (1)): tickets are divided by
+        (1 + qdelay/slack) using the piggybacked per-SGS queuing delay.
+        Without this, sandbox-proportional routing is a positive feedback
+        loop — a hot SGS receives more requests, estimates more demand,
+        allocates more sandboxes, and earns even more tickets while its
+        queue grows.
+        """
+        slack = max(st.dag.slack, 1e-6)
+
+        def damp(sid: int) -> float:
+            return 1.0 + st.qdelay_ewma.get(sid, 0.0) / slack
+
+        ids: List[int] = []
+        tickets: List[float] = []
+        for sid in st.active:
+            ids.append(sid)
+            tickets.append(max(1.0, float(st.sandbox_count.get(sid, 0)))
+                           / damp(sid))
+        for sid in st.removed:
+            ids.append(sid)
+            tickets.append(self.cfg.discount_factor
+                           * max(1.0, float(st.sandbox_count.get(sid, 0)))
+                           / damp(sid))
+        if not self.cfg.gradual:
+            # instant-scaling ablation: plain round-robin over active SGSs
+            sid = st.active[self._rng.randrange(len(st.active))]
+            return sid
+        total = sum(tickets)
+        pick = self._rng.random() * total
+        acc = 0.0
+        for sid, t in zip(ids, tickets):
+            acc += t
+            if pick <= acc:
+                return sid
+        return ids[-1]
+
+    # ------------------------------------------------------------- piggyback
+    def report(self, dag_id: str, sgs_id: int, qdelay: float,
+               sandbox_count: int) -> None:
+        st = self._dag_state.get(dag_id)
+        if st is None:
+            return
+        a = self.cfg.ewma_alpha
+        prev = st.qdelay_ewma.get(sgs_id)
+        st.qdelay_ewma[sgs_id] = qdelay if prev is None else a * qdelay + (1 - a) * prev
+        st.qdelay_samples[sgs_id] = st.qdelay_samples.get(sgs_id, 0) + 1
+        st.sandbox_count[sgs_id] = max(1, sandbox_count)
+
+    # --------------------------------------------------------------- scaling
+    def scaling_metric(self, st: _DagState) -> float:
+        """Pseudocode 2, lines 3-6: sandbox-count weighted queuing delay,
+        normalized by the DAG's available slack (deadline-awareness)."""
+        num = 0.0
+        den = 0.0
+        for sid in st.active:
+            n = st.sandbox_count.get(sid, 1)
+            qd = st.qdelay_ewma.get(sid, 0.0)
+            num += n * qd
+            den += n
+        if den == 0:
+            return 0.0
+        weighted = num / den
+        slack = max(st.dag.slack, 1e-6)
+        return weighted / slack
+
+    def check_scaling(self, now: float) -> None:
+        """Periodic scaling pass over every DAG (engine calls this each
+        decision interval; decisions also gate on filled windows, §5.2.2)."""
+        for st in self._dag_state.values():
+            window_full = all(
+                st.qdelay_samples.get(sid, 0) >= self.cfg.qdelay_window
+                for sid in st.active)
+            timed_out = now - st.last_decision >= self.cfg.decision_interval
+            if not (window_full or (timed_out and any(st.qdelay_samples.values()))):
+                continue
+            metric = self.scaling_metric(st)
+            if metric > self.cfg.scale_out_threshold:
+                st.below_sit_streak = 0
+                if not self._scale_out(st, now):
+                    continue    # already at max SGSs: keep observing
+            elif metric < self.cfg.scale_in_threshold and len(st.active) > 1:
+                # oscillation damping: require several consecutive quiet
+                # decisions before dissociating an SGS (§5.2.2 "well below")
+                st.below_sit_streak += 1
+                if st.below_sit_streak < self.cfg.scale_in_patience:
+                    st.last_decision = now
+                    continue
+                st.below_sit_streak = 0
+                self._scale_in(st, now)
+            else:
+                st.below_sit_streak = 0
+                continue
+            # reinitialize windows (and the EWMAs themselves) so the next
+            # decision observes only post-decision data (§5.2.2)
+            st.qdelay_samples = {sid: 0 for sid in st.active}
+            st.qdelay_ewma = {}
+            st.last_decision = now
+            self.scale_events.append((now, st.dag.dag_id, len(st.active)))
+
+    def _scale_out(self, st: _DagState, now: float) -> bool:
+        for sid in self.ring.successors(st.dag.dag_id):
+            if sid not in st.active:
+                if sid in st.removed:
+                    st.removed.remove(sid)
+                st.active.append(sid)
+                st.n_scale_outs += 1
+                # gradual ramp-up: the new SGS pre-allocates the mean sandbox
+                # count across active SGSs (including itself), and starts with
+                # 1 lottery ticket (§5.2.3)
+                if self.cfg.gradual:
+                    counts = [st.sandbox_count.get(s, 0) for s in st.active]
+                    avg = max(1, int(round(sum(counts) / len(st.active))))
+                    per_fn = max(1, avg // max(1, len(st.dag.functions)))
+                    self.sgss[sid].preallocate(st.dag, per_fn)
+                st.sandbox_count[sid] = 1
+                return True
+        return False
+
+    def _scale_in(self, st: _DagState, now: float) -> None:
+        # remove the SGS that was added last (§5.2.2)
+        sid = st.active.pop()
+        st.removed.append(sid)
+        st.n_scale_ins += 1
+
+    # --------------------------------------------------------------- queries
+    def n_active(self, dag_id: str) -> int:
+        st = self._dag_state.get(dag_id)
+        return len(st.active) if st else 0

@@ -1,0 +1,230 @@
+"""Workers and proactive sandbox management (§4.3.2, §4.3.3, Pseudocode 1).
+
+A worker owns a fixed number of execution slots ("cores" in the paper; HBM
+instance slots for the TPU adaptation) and a *proactive memory pool* — the
+admin-configured amount of memory usable for proactively allocated sandboxes.
+Sandboxes are soft state: they can always be evicted without correctness
+impact.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+from .types import FunctionSpec, Sandbox, SandboxState
+
+
+@dataclass
+class Worker:
+    worker_id: int
+    cores: int = 4
+    pool_mem_mb: float = 4096.0     # proactive memory pool capacity
+    busy_cores: int = 0
+    sandboxes: List[Sandbox] = field(default_factory=list)
+
+    # -- memory ---------------------------------------------------------------
+    @property
+    def used_pool_mem(self) -> float:
+        return sum(s.fn.mem_mb for s in self.sandboxes)
+
+    @property
+    def free_pool_mem(self) -> float:
+        return self.pool_mem_mb - self.used_pool_mem
+
+    @property
+    def free_cores(self) -> int:
+        return self.cores - self.busy_cores
+
+    # -- sandbox queries ------------------------------------------------------
+    def count(self, fn_name: str, *states: SandboxState) -> int:
+        states = states or tuple(SandboxState)
+        return sum(1 for s in self.sandboxes
+                   if s.fn.name == fn_name and s.state in states)
+
+    def schedulable_count(self, fn_name: str) -> int:
+        """Sandboxes counted for placement decisions: everything except
+        soft-evicted (those are invisible to the scheduler, §4.3.3)."""
+        return self.count(fn_name, SandboxState.ALLOCATING,
+                          SandboxState.WARM, SandboxState.BUSY)
+
+    def find(self, fn_name: str, state: SandboxState) -> Optional[Sandbox]:
+        for s in self.sandboxes:
+            if s.fn.name == fn_name and s.state == state:
+                return s
+        return None
+
+    def warm_available(self, fn_name: str, now: float) -> Optional[Sandbox]:
+        """A sandbox ready for immediate reuse.  ALLOCATING sandboxes whose
+        setup has finished transition to WARM lazily here."""
+        for s in self.sandboxes:
+            if s.fn.name != fn_name:
+                continue
+            if s.state == SandboxState.ALLOCATING and s.ready_at <= now + 1e-12:
+                s.state = SandboxState.WARM
+            if s.state == SandboxState.WARM and s.ready_at <= now + 1e-12:
+                return s
+        return None
+
+
+AllocHook = Callable[[Sandbox, Worker], None]
+
+
+@dataclass
+class SandboxManager:
+    """Implements Pseudocode 1: even placement, soft eviction, fair hard
+    eviction — over one SGS's worker pool.
+
+    ``set_demand`` *reconciles* the actual schedulable allocation against the
+    estimator's target each tick (rather than diffing successive estimates):
+    this self-heals after hard evictions and reactive cold-start allocations
+    change the real count behind the estimator's back.
+    """
+
+    workers: List[Worker]
+    # "even" spreads each function's sandboxes across workers (§4.3.2);
+    # "packed" fills one worker before the next (the Fig. 9 ablation).
+    placement: str = "even"
+    # "fair" = workload-aware victim choice (§4.3.3); "lru" = plain LRU
+    # (the §7.3.1 eviction ablation).
+    eviction: str = "fair"
+    # called when a brand-new sandbox begins allocation (lets the executor
+    # model / perform the actual setup work in the background)
+    on_allocate: Optional[AllocHook] = None
+    # demand targets last pushed by the SGS: fn name -> sandbox count
+    demand_map: Dict[str, int] = field(default_factory=dict)
+    fn_specs: Dict[str, FunctionSpec] = field(default_factory=dict)
+    # counters
+    n_hard_evictions: int = 0
+    n_soft_evictions: int = 0
+    n_allocations: int = 0
+    n_revivals: int = 0
+
+    # ------------------------------------------------------------------ API
+    def set_demand(self, fn: FunctionSpec, new_demand: int, now: float) -> None:
+        """SANDBOXMANAGEMENT(D): allocate when demand rises above the actual
+        allocation, soft-evict when it falls below (Pseudocode 1, lines 2-17)."""
+        self.fn_specs[fn.name] = fn
+        self.demand_map[fn.name] = new_demand
+        actual = self.total_sandboxes(fn.name)
+        if new_demand > actual:
+            self.allocate_sandboxes(fn, new_demand - actual, now)
+        elif new_demand < actual:
+            self.soft_evict_sandboxes(fn, actual - new_demand)
+
+    # ------------------------------------------------------- even placement
+    def allocate_sandboxes(self, fn: FunctionSpec, n: int, now: float) -> None:
+        """ALLOCATESANDBOXES (lines 19-38): for each needed sandbox, pick the
+        worker with the minimum count of this function's sandboxes (even) or
+        the maximum (packed ablation); prefer reviving a soft-evicted sandbox
+        there (free), else allocate from the pool, hard-evicting *surplus*
+        sandboxes if the pool is saturated."""
+        for _ in range(n):
+            placed = False
+            for w in self._placement_order(fn.name):
+                revived = w.find(fn.name, SandboxState.SOFT_EVICTED)
+                if revived is not None:
+                    # Preferentially unmark a soft-evicted sandbox: free.
+                    revived.state = (SandboxState.WARM
+                                     if revived.ready_at <= now
+                                     else SandboxState.ALLOCATING)
+                    self.n_revivals += 1
+                    placed = True
+                    break
+                if w.free_pool_mem < fn.mem_mb and not self._hard_evict(w, fn):
+                    continue        # this worker cannot host one; try next
+                sbx = Sandbox(fn=fn, worker_id=w.worker_id,
+                              state=SandboxState.ALLOCATING,
+                              ready_at=now + fn.setup_time, last_used=now)
+                w.sandboxes.append(sbx)
+                self.n_allocations += 1
+                if self.on_allocate is not None:
+                    self.on_allocate(sbx, w)
+                placed = True
+                break
+            if not placed:
+                return              # pool saturated with protected sandboxes
+
+    def _placement_order(self, fn_name: str) -> List[Worker]:
+        if self.placement == "packed":
+            return sorted(self.workers,
+                          key=lambda w: (-w.schedulable_count(fn_name),
+                                         w.worker_id))
+        return sorted(self.workers,
+                      key=lambda w: (w.schedulable_count(fn_name),
+                                     w.worker_id))
+
+    # ----------------------------------------------------------- soft evict
+    def soft_evict_sandboxes(self, fn: FunctionSpec, n: int) -> None:
+        """Lines 11-15: mirror-image of placement — repeatedly pick the worker
+        holding the *max* sandboxes of this function and soft-evict one there,
+        keeping the residue balanced for statistical multiplexing.  (In the
+        packed ablation the mirror image is the *min* non-empty worker, so
+        packing is preserved.)"""
+        for _ in range(n):
+            cands = [w for w in self.workers
+                     if w.find(fn.name, SandboxState.WARM) is not None
+                     or w.find(fn.name, SandboxState.ALLOCATING) is not None]
+            if not cands:
+                return
+            if self.placement == "packed":
+                w = min(cands, key=lambda w: (w.schedulable_count(fn.name),
+                                              w.worker_id))
+            else:
+                w = max(cands, key=lambda w: (w.schedulable_count(fn.name),
+                                              -w.worker_id))
+            sbx = (w.find(fn.name, SandboxState.WARM)
+                   or w.find(fn.name, SandboxState.ALLOCATING))
+            sbx.state = SandboxState.SOFT_EVICTED
+            self.n_soft_evictions += 1
+
+    # ----------------------------------------------------------- hard evict
+    def _hard_evict(self, w: Worker, incoming: FunctionSpec) -> bool:
+        """HARDEVICT (lines 39-46): evict until ``incoming`` fits.
+
+        Victim choice is workload-aware ("fair", §4.3.3): soft-evicted
+        sandboxes go first; among live ones, only functions at-or-above their
+        estimated demand are eligible (protects functions whose allocation is
+        far below their estimate), preferring the one closest to its estimate.
+        Never evicts BUSY sandboxes.  Returns False if ``incoming`` cannot fit
+        without harming a protected function.
+        """
+        while w.free_pool_mem < incoming.mem_mb:
+            cands = [s for s in w.sandboxes
+                     if s.state in (SandboxState.SOFT_EVICTED,
+                                    SandboxState.WARM,
+                                    SandboxState.ALLOCATING)
+                     and s.fn.name != incoming.name]
+            if not cands:
+                return False
+            if self.eviction == "lru":
+                victim = min(cands, key=lambda s: s.last_used)
+            else:
+                soft = [s for s in cands
+                        if s.state == SandboxState.SOFT_EVICTED]
+                if soft:
+                    victim = min(soft, key=self._fairness_key)
+                else:
+                    surplus = [s for s in cands
+                               if self._surplus(s.fn.name) >= 0]
+                    if not surplus:
+                        return False   # all under-provisioned: back off
+                    victim = min(surplus, key=self._fairness_key)
+            w.sandboxes.remove(victim)
+            self.n_hard_evictions += 1
+        return True
+
+    def _surplus(self, fn_name: str) -> int:
+        alloc = self.total_sandboxes(fn_name)
+        return alloc - self.demand_map.get(fn_name, 0)
+
+    def _fairness_key(self, s: Sandbox) -> float:
+        """abs(total allocation - estimated demand) for the sandbox's
+        function; smaller = closer to its estimate = preferred victim."""
+        return abs(self._surplus(s.fn.name))
+
+    # -------------------------------------------------------------- queries
+    def total_sandboxes(self, fn_name: str) -> int:
+        return sum(w.schedulable_count(fn_name) for w in self.workers)
+
+    def counts_per_worker(self, fn_name: str) -> List[int]:
+        return [w.schedulable_count(fn_name) for w in self.workers]

@@ -1,0 +1,287 @@
+"""Semi-global scheduler (§4.1, §4.2): deadline-aware SRSF over a worker pool.
+
+The SGS owns a partition of the cluster (its *worker pool*), a priority queue
+of ready function invocations, an estimator module, and a sandbox manager
+(Fig. 4a).  It is event-driven and time-agnostic: an ``Env`` provides ``now()``
+and deferred callbacks, so the same class runs under simulated and real time.
+"""
+from __future__ import annotations
+
+import heapq
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Protocol, Set, Tuple
+
+from .estimator import DemandEstimator
+from .sandbox import SandboxManager, Worker
+from .types import (DagSpec, ExecuteFn, FunctionSpec, Invocation, Request,
+                    Sandbox, SandboxState)
+
+
+class Env(Protocol):
+    """Minimal clock + timer interface implemented by repro.sim and
+    repro.serving."""
+
+    def now(self) -> float: ...
+    def call_after(self, delay: float, fn: Callable[[], None]) -> None: ...
+
+
+@dataclass
+class SGSConfig:
+    estimation_interval: float = 0.100   # estimator tick (§4.3.1)
+    sla: float = 0.99
+    ewma_alpha: float = 0.3
+    qdelay_window: int = 20              # samples before a scaling decision
+    proactive: bool = True               # proactive sandbox allocation on/off
+    ramp_window: float = 2.0             # demand floor duration after an
+                                         # LBS-triggered preallocation, so the
+                                         # local estimator (which has seen no
+                                         # arrivals yet) cannot immediately
+                                         # soft-evict the warm-up pool
+
+    even_placement: bool = True          # False -> packed placement (Fig. 9)
+    fair_eviction: bool = True           # False -> LRU hard eviction (§7.3.1)
+    # Beyond-paper enhancement (default on): reactive allocation at dispatch
+    # revives a resident soft-evicted sandbox on the chosen worker at zero
+    # cost (Pseudocode 1's preferential reuse applied to the reactive path).
+    # Off reproduces the paper's behavior where only the background allocator
+    # revives (used for the paper-faithful Fig. 9 ablation).
+    revive_on_dispatch: bool = True
+
+
+# report sent (piggybacked on responses, §5.2.1) to the LBS:
+#   (dag_id, sgs_id, queuing_delay_sample, proactive_sandbox_count)
+ReportFn = Callable[[str, int, float, int], None]
+
+
+class SemiGlobalScheduler:
+    def __init__(self, sgs_id: int, workers: List[Worker], env: Env,
+                 config: Optional[SGSConfig] = None,
+                 execute: Optional[ExecuteFn] = None,
+                 report: Optional[ReportFn] = None):
+        self.sgs_id = sgs_id
+        self.workers = workers
+        self.env = env
+        self.cfg = config or SGSConfig()
+        self.execute = execute              # real-execution hook (serving/)
+        self.report = report                # piggyback channel to the LBS
+
+        self.estimator = DemandEstimator(sla=self.cfg.sla,
+                                         interval=self.cfg.estimation_interval,
+                                         alpha=self.cfg.ewma_alpha)
+        self.sandboxes = SandboxManager(
+            workers=workers,
+            placement="even" if self.cfg.even_placement else "packed",
+            eviction="fair" if self.cfg.fair_eviction else "lru")
+
+        # SRSF priority queue of ready invocations (static key, §4.2)
+        self._queue: List[Tuple[Tuple[float, float, int], Invocation]] = []
+        # DAG progress: req_id -> set of completed function names
+        self._completed_fns: Dict[int, Set[str]] = {}
+        self._dags: Dict[str, DagSpec] = {}       # DAGs this SGS serves
+        # fn name -> (floor demand, expiry) set by LBS preallocation
+        self._demand_floor: Dict[str, Tuple[int, float]] = {}
+        self._ticking = False
+        # fault tolerance (§6.1): in-flight tracking + failed-worker view
+        self._inflight: Dict[int, List[Invocation]] = {}
+        self._dead_workers: Set[int] = set()
+
+        # metrics
+        self.n_cold_starts = 0
+        self.n_warm_hits = 0
+        self.queuing_delays: List[float] = []
+        self.completed_requests: List[Request] = []
+
+    # ---------------------------------------------------------------- intake
+    def submit_request(self, req: Request) -> None:
+        """Entry point from the LBS. Enqueues the DAG's root invocations."""
+        now = self.env.now()
+        req.sgs_id = self.sgs_id
+        dag = req.dag
+        self._dags[dag.dag_id] = dag
+        self._completed_fns[req.req_id] = set()
+        # arrival statistics feed the estimator for every constituent function
+        for f in dag.functions:
+            self.estimator.record_arrival(f.name, now)
+        self._ensure_ticking()
+        for root in dag.roots():
+            inv = Invocation(request=req, fn=dag.fn(root), ready_time=now)
+            heapq.heappush(self._queue, (inv.priority_key(), inv))
+        self._dispatch()
+
+    def preallocate(self, dag: DagSpec, n_per_fn: int) -> None:
+        """LBS-triggered warm-up during gradual scale-out (§5.2.3)."""
+        now = self.env.now()
+        self._dags[dag.dag_id] = dag
+        self._ensure_ticking()
+        for f in dag.functions:
+            self._demand_floor[f.name] = (n_per_fn, now + self.cfg.ramp_window)
+            cur = self.sandboxes.demand_map.get(f.name, 0)
+            if n_per_fn > cur:
+                self.sandboxes.set_demand(f, n_per_fn, now)
+
+    # --------------------------------------------------------------- dispatch
+    def _dispatch(self) -> None:
+        """Work-conserving SRSF dispatch: repeatedly pick the queued
+        invocation with the least remaining slack whose resource requirements
+        can currently be met, and run it (§4.2)."""
+        now = self.env.now()
+        skipped: List[Tuple[Tuple[float, float, int], Invocation]] = []
+        while self._queue and any(w.free_cores > 0 for w in self.workers):
+            key, inv = heapq.heappop(self._queue)
+            worker, sbx = self._choose_worker(inv, now)
+            if worker is None:
+                skipped.append((key, inv))
+                continue
+            self._start(inv, worker, sbx, now)
+        for item in skipped:
+            heapq.heappush(self._queue, item)
+
+    def _choose_worker(self, inv: Invocation, now: float
+                       ) -> Tuple[Optional[Worker], Optional[Sandbox]]:
+        """Prefer a free-core worker holding a WARM sandbox for this function
+        (the whole point of even placement); otherwise any free-core worker
+        that can fit a reactive sandbox."""
+        warm_best: Optional[Worker] = None
+        soft_best: Optional[Worker] = None
+        cold_best: Optional[Worker] = None
+        for w in self.workers:
+            if w.free_cores <= 0:
+                continue
+            if w.warm_available(inv.fn.name, now) is not None:
+                # among warm candidates prefer the one with most warm copies
+                if (warm_best is None or
+                        w.count(inv.fn.name, SandboxState.WARM)
+                        > warm_best.count(inv.fn.name, SandboxState.WARM)):
+                    warm_best = w
+            elif self.cfg.revive_on_dispatch and soft_best is None and any(
+                    s.fn.name == inv.fn.name
+                    and s.state == SandboxState.SOFT_EVICTED
+                    and s.ready_at <= now for s in w.sandboxes):
+                # resident soft-evicted sandbox: revivable at zero cost
+                soft_best = w
+            elif cold_best is None and (
+                    w.free_pool_mem >= inv.fn.mem_mb
+                    or any(s.state != SandboxState.BUSY for s in w.sandboxes)):
+                cold_best = w
+        if warm_best is not None:
+            return warm_best, warm_best.warm_available(inv.fn.name, now)
+        if soft_best is not None:
+            return soft_best, None      # _start revives it instantly
+        if cold_best is not None:
+            return cold_best, None
+        return None, None
+
+    def _start(self, inv: Invocation, w: Worker, sbx: Optional[Sandbox],
+               now: float) -> None:
+        inv.start_time = now
+        qdelay = now - inv.ready_time
+        self.queuing_delays.append(qdelay)
+        inv.request.total_queuing_delay += qdelay
+        w.busy_cores += 1
+        setup = 0.0
+        if sbx is None:
+            # reactive allocation: per Pseudocode 1, preferentially revive a
+            # resident soft-evicted sandbox — unmarking incurs no overhead
+            revived = (w.find(inv.fn.name, SandboxState.SOFT_EVICTED)
+                       if self.cfg.revive_on_dispatch else None)
+            if revived is not None and revived.ready_at <= now + 1e-12:
+                self.sandboxes.n_revivals += 1
+                self.n_warm_hits += 1
+                sbx = revived
+                sbx.state = SandboxState.BUSY
+                sbx.last_used = now
+            else:
+                # true cold start: set up a new sandbox on the critical path
+                inv.cold_start = True
+                inv.request.n_cold_starts += 1
+                self.n_cold_starts += 1
+                setup = inv.fn.setup_time
+                if w.free_pool_mem < inv.fn.mem_mb:
+                    self.sandboxes._hard_evict(w, inv.fn)
+                sbx = Sandbox(fn=inv.fn, worker_id=w.worker_id,
+                              state=SandboxState.BUSY,
+                              ready_at=now + setup, last_used=now)
+                w.sandboxes.append(sbx)
+        else:
+            self.n_warm_hits += 1
+            sbx.state = SandboxState.BUSY
+            sbx.last_used = now
+
+        # piggyback queuing delay + per-DAG sandbox count to the LBS (§5.2.1)
+        if self.report is not None:
+            self.report(inv.request.dag.dag_id, self.sgs_id, qdelay,
+                        self.proactive_sandbox_count(inv.request.dag.dag_id))
+
+        self._inflight.setdefault(w.worker_id, []).append(inv)
+        if self.execute is not None:
+            # real execution: measured wall time (serving engine)
+            runtime = setup + self.execute(inv)
+            self.env.call_after(runtime, lambda: self._complete(inv, w, sbx))
+        else:
+            self.env.call_after(setup + inv.fn.exec_time,
+                                lambda: self._complete(inv, w, sbx))
+
+    def _complete(self, inv: Invocation, w: Worker, sbx: Sandbox) -> None:
+        now = self.env.now()
+        if w.worker_id in self._dead_workers:
+            return      # fail-stop: this execution was lost and retried
+        inflight = self._inflight.get(w.worker_id)
+        if inflight is not None and inv in inflight:
+            inflight.remove(inv)
+        w.busy_cores -= 1
+        sbx.state = SandboxState.WARM
+        sbx.ready_at = min(sbx.ready_at, now)
+        sbx.last_used = now
+        req = inv.request
+        done = self._completed_fns.get(req.req_id)
+        if done is None:        # request finished elsewhere (defensive)
+            self._dispatch()
+            return
+        done.add(inv.fn.name)
+        dag = req.dag
+        if len(done) == len(dag.functions):
+            req.completion_time = now
+            self.completed_requests.append(req)
+            del self._completed_fns[req.req_id]
+        else:
+            # DAG awareness: release children whose parents all completed
+            for child in dag.children(inv.fn.name):
+                if all(p in done for p in dag.parents(child)):
+                    cinv = Invocation(request=req, fn=dag.fn(child),
+                                      ready_time=now)
+                    heapq.heappush(self._queue, (cinv.priority_key(), cinv))
+        self._dispatch()
+
+    # ----------------------------------------------------------- estimation
+    def _ensure_ticking(self) -> None:
+        if self._ticking or not self.cfg.proactive:
+            return
+        self._ticking = True
+        self.env.call_after(self.cfg.estimation_interval, self._tick)
+
+    def _tick(self) -> None:
+        """Estimator tick: refresh per-function demand and drive the sandbox
+        manager (allocate / soft-evict) — runs off the critical path."""
+        now = self.env.now()
+        for dag in self._dags.values():
+            for f in dag.functions:
+                d = self.estimator.demand(f.name, f.exec_time, now)
+                floor = self._demand_floor.get(f.name)
+                if floor is not None:
+                    if now < floor[1]:
+                        d = max(d, floor[0])
+                    else:
+                        del self._demand_floor[f.name]
+                self.sandboxes.set_demand(f, d, now)
+        self.env.call_after(self.cfg.estimation_interval, self._tick)
+
+    # -------------------------------------------------------------- queries
+    def queue_length(self) -> int:
+        return len(self._queue)
+
+    def proactive_sandbox_count(self, dag_id: str) -> int:
+        dag = self._dags.get(dag_id)
+        if dag is None:
+            return 0
+        return sum(self.sandboxes.total_sandboxes(f.name)
+                   for f in dag.functions)

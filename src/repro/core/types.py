@@ -1,0 +1,210 @@
+"""Core datatypes shared by the scheduler, load balancer and executors.
+
+Time is measured in float seconds.  All components are *time-agnostic*: they
+never read a wall clock; ``now`` is always passed in explicitly so that the
+same code runs under the discrete-event simulator (``repro.sim``) and the
+real-execution serving engine (``repro.serving``).
+"""
+from __future__ import annotations
+
+import enum
+import itertools
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Tuple
+
+# ---------------------------------------------------------------------------
+# Function / DAG specifications (what the user uploads, §2.1 / §3)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class FunctionSpec:
+    """A single serverless function: one node of an application DAG."""
+
+    name: str
+    exec_time: float            # seconds of pure execution (paper's "execution time")
+    mem_mb: float = 128.0       # provisioned memory (T4: 128MB is the common case)
+    setup_time: float = 0.250   # sandbox setup overhead (125-400ms modeled, §7.1)
+
+    def __post_init__(self):
+        if self.exec_time <= 0:
+            raise ValueError(f"exec_time must be positive, got {self.exec_time}")
+        if self.mem_mb <= 0:
+            raise ValueError(f"mem_mb must be positive, got {self.mem_mb}")
+
+
+@dataclass(frozen=True)
+class DagSpec:
+    """An application: a DAG of functions plus a latency deadline.
+
+    ``deadline`` is the user-specified maximum end-to-end execution time for
+    one request of this DAG (critical-path exec time + slack), per §3
+    "Initial DAG Upload".
+    """
+
+    dag_id: str
+    functions: Tuple[FunctionSpec, ...]
+    # edges are (upstream_name, downstream_name) I/O dependencies
+    edges: Tuple[Tuple[str, str], ...] = ()
+    deadline: float = 1.0
+
+    def __post_init__(self):
+        names = [f.name for f in self.functions]
+        if len(set(names)) != len(names):
+            raise ValueError("duplicate function names in DAG")
+        known = set(names)
+        for u, v in self.edges:
+            if u not in known or v not in known:
+                raise ValueError(f"edge ({u},{v}) references unknown function")
+        # reject cycles eagerly: topo_order raises on cycles
+        self.topo_order()
+
+    # -- graph helpers ------------------------------------------------------
+    def fn(self, name: str) -> FunctionSpec:
+        for f in self.functions:
+            if f.name == name:
+                return f
+        raise KeyError(name)
+
+    def parents(self, name: str) -> List[str]:
+        return [u for (u, v) in self.edges if v == name]
+
+    def children(self, name: str) -> List[str]:
+        return [v for (u, v) in self.edges if u == name]
+
+    def roots(self) -> List[str]:
+        has_parent = {v for (_, v) in self.edges}
+        return [f.name for f in self.functions if f.name not in has_parent]
+
+    def topo_order(self) -> List[str]:
+        indeg = {f.name: 0 for f in self.functions}
+        for _, v in self.edges:
+            indeg[v] += 1
+        frontier = [n for n, d in indeg.items() if d == 0]
+        order: List[str] = []
+        while frontier:
+            n = frontier.pop()
+            order.append(n)
+            for c in self.children(n):
+                indeg[c] -= 1
+                if indeg[c] == 0:
+                    frontier.append(c)
+        if len(order) != len(self.functions):
+            raise ValueError("DAG contains a cycle")
+        return order
+
+    def critical_path_time(self) -> float:
+        """Critical-path execution time of the whole DAG (Kelley [32,33])."""
+        return max(self.remaining_critical_path(r) for r in self.roots())
+
+    def remaining_critical_path(self, name: str) -> float:
+        """Critical-path exec time of the DAG suffix rooted at ``name``
+        (inclusive).  Used for remaining-slack computation (§4.2)."""
+        memo: Dict[str, float] = {}
+
+        def rec(n: str) -> float:
+            if n in memo:
+                return memo[n]
+            kids = self.children(n)
+            tail = max((rec(k) for k in kids), default=0.0)
+            memo[n] = self.fn(n).exec_time + tail
+            return memo[n]
+
+        return rec(name)
+
+    @property
+    def slack(self) -> float:
+        """Total slack the user granted on top of the critical path."""
+        return self.deadline - self.critical_path_time()
+
+
+# ---------------------------------------------------------------------------
+# Requests and function invocations (runtime objects)
+# ---------------------------------------------------------------------------
+
+_req_counter = itertools.count()
+_inv_counter = itertools.count()
+
+
+@dataclass
+class Request:
+    """One trigger event for a DAG."""
+
+    dag: DagSpec
+    arrival_time: float
+    req_id: int = field(default_factory=lambda: next(_req_counter))
+    completion_time: Optional[float] = None
+    # bookkeeping
+    n_cold_starts: int = 0
+    total_queuing_delay: float = 0.0
+    sgs_id: Optional[int] = None   # which SGS served it (set by LBS routing)
+
+    @property
+    def abs_deadline(self) -> float:
+        return self.arrival_time + self.dag.deadline
+
+    @property
+    def e2e_latency(self) -> Optional[float]:
+        if self.completion_time is None:
+            return None
+        return self.completion_time - self.arrival_time
+
+    @property
+    def deadline_met(self) -> Optional[bool]:
+        if self.completion_time is None:
+            return None
+        return self.completion_time <= self.abs_deadline + 1e-9
+
+
+@dataclass
+class Invocation:
+    """One function execution belonging to a request (a DAG node instance)."""
+
+    request: Request
+    fn: FunctionSpec
+    ready_time: float                       # when dependencies were met
+    inv_id: int = field(default_factory=lambda: next(_inv_counter))
+    start_time: Optional[float] = None
+    cold_start: bool = False
+
+    # -- deadline-aware priority (§4.2) --------------------------------------
+    def remaining_critical_path(self) -> float:
+        return self.request.dag.remaining_critical_path(self.fn.name)
+
+    def remaining_slack(self, now: float) -> float:
+        """Time this invocation can still be queued without pushing the DAG
+        past its deadline, assuming the remaining suffix runs back-to-back."""
+        return (self.request.abs_deadline - now) - self.remaining_critical_path()
+
+    def priority_key(self) -> Tuple[float, float, int]:
+        """Static SRSF key: at any common ``now``, ordering by
+        ``abs_deadline - remaining_cp`` is identical to ordering by remaining
+        slack; ties broken by least remaining work (paper §4.2), then FIFO."""
+        rcp = self.remaining_critical_path()
+        return (self.request.abs_deadline - rcp, rcp, self.inv_id)
+
+
+class SandboxState(enum.Enum):
+    ALLOCATING = "allocating"       # being set up (setup_time in flight)
+    WARM = "warm"                   # ready for reuse, idle
+    BUSY = "busy"                   # currently executing an invocation
+    SOFT_EVICTED = "soft_evicted"   # resident but not schedulable (§4.3.3)
+
+
+_sbx_counter = itertools.count()
+
+
+@dataclass
+class Sandbox:
+    fn: FunctionSpec
+    worker_id: int
+    state: SandboxState
+    ready_at: float = 0.0           # when ALLOCATING finishes
+    last_used: float = 0.0
+    sbx_id: int = field(default_factory=lambda: next(_sbx_counter))
+
+
+# Callback the scheduler uses to run a function.  Returns actual runtime (s).
+# Simulated executors return fn.exec_time (+ jitter); the real executor runs a
+# jitted JAX call and returns measured wall time.
+ExecuteFn = Callable[[Invocation], float]

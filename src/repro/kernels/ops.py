@@ -1,0 +1,67 @@
+"""Public kernel entry points with backend dispatch.
+
+``backend``:
+  "xla"              pure-jnp reference path (default on CPU; what the
+                     dry-run lowers)
+  "pallas"           compiled Pallas TPU kernels (TPU targets)
+  "pallas_interpret" Pallas kernels executed in interpret mode (CPU
+                     validation; used by the kernel test suite)
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+from . import ref
+from .decode_attention import decode_attention as _dec_pallas
+from .flash_attention import flash_attention as _fa_pallas
+from .ssd_scan import ssd_scan as _ssd_pallas
+
+_BACKEND = "xla"
+
+
+def set_backend(backend: str) -> None:
+    global _BACKEND
+    if backend not in ("xla", "pallas", "pallas_interpret"):
+        raise ValueError(backend)
+    _BACKEND = backend
+
+
+def get_backend() -> str:
+    return _BACKEND
+
+
+def attention(q, k, v, *, causal: bool = True, window: int = 0,
+              backend: Optional[str] = None) -> jnp.ndarray:
+    b = backend or _BACKEND
+    if b == "xla":
+        return ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    return _fa_pallas(q, k, v, causal=causal, window=window,
+                      interpret=(b == "pallas_interpret"))
+
+
+def decode_attention(q, k, v, valid_len, *,
+                     backend: Optional[str] = None) -> jnp.ndarray:
+    b = backend or _BACKEND
+    if b == "xla":
+        return ref.decode_attention_ref(q, k, v, valid_len)
+    return _dec_pallas(q, k, v, valid_len,
+                       interpret=(b == "pallas_interpret"))
+
+
+def ssd(x, dt, A, Bm, Cm, *, chunk: int = 64,
+        backend: Optional[str] = None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    b = backend or _BACKEND
+    if b == "xla":
+        return ref.ssd_scan_ref(x, dt, A, Bm, Cm, chunk)
+    S = x.shape[1]
+    pad = (-S) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    y, st = _ssd_pallas(x, dt, A, Bm, Cm, chunk=chunk,
+                        interpret=(b == "pallas_interpret"))
+    return y[:, :S], st

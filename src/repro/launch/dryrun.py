@@ -1,0 +1,219 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import: jax locks the device
+# count at first initialization, and the dry-run needs 512 placeholder host
+# devices to build the production meshes.  (Smoke tests / benches import via
+# other entry points and see 1 device.)
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape x
+mesh) combination against the production meshes, record memory / cost /
+collective statistics for the roofline analysis.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch minicpm-2b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh multi
+Results land in results/dryrun/<arch>__<shape>__<mesh>.json (+ .hlo.txt).
+"""
+import argparse
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs import ARCH_IDS, INPUT_SHAPES, get_config, shape_applicable
+from ..models import decode_step, init_cache, init_params, prefill
+from ..models.config import ModelConfig
+from ..models.sharding import (cache_pspecs, input_pspecs, needs_fsdp,
+                               param_pspecs)
+from ..train.optim import adamw_init
+from ..train.steps import make_train_step
+from .mesh import make_production_mesh
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+
+
+def sds(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, shape_name: str) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input: weak-type-correct,
+    shardable, no device allocation."""
+    seq, batch, kind = INPUT_SHAPES[shape_name]
+    out: Dict[str, Any] = {"kind": kind, "batch": batch, "seq": seq}
+    if kind == "train":
+        n_text = seq - (cfg.n_frontend_tokens if cfg.frontend
+                        and cfg.arch_type != "encdec" else 0)
+        out["tokens"] = sds((batch, n_text), jnp.int32)
+        if cfg.frontend:
+            out["frontend"] = sds(
+                (batch, cfg.n_frontend_tokens, cfg.d_model), cfg.dtype())
+    elif kind == "prefill":
+        n_text = seq - (cfg.n_frontend_tokens if cfg.frontend
+                        and cfg.arch_type != "encdec" else 0)
+        out["tokens"] = sds((batch, n_text), jnp.int32)
+        if cfg.frontend:
+            out["frontend"] = sds(
+                (batch, cfg.n_frontend_tokens, cfg.d_model), cfg.dtype())
+        out["cache"] = jax.eval_shape(
+            lambda: init_cache(cfg, batch, seq))
+    else:   # decode: ONE new token against a cache of `seq`
+        out["token"] = sds((batch, 1), jnp.int32)
+        out["t"] = sds((), jnp.int32)
+        out["cache"] = jax.eval_shape(
+            lambda: init_cache(cfg, batch, seq))
+    return out
+
+
+def _abstract_params(cfg: ModelConfig):
+    return jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+
+
+def lower_one(arch: str, shape_name: str, mesh, *, fsdp: Optional[bool] = None,
+              cfg: Optional[ModelConfig] = None
+              ) -> Tuple[Any, Dict[str, Any]]:
+    """Lower + compile one combination.  Returns (compiled, info).
+    ``cfg`` overrides the registry config (roofline probes)."""
+    if cfg is None:
+        cfg = get_config(arch)
+    specs = input_specs(cfg, shape_name)
+    kind = specs["kind"]
+    params = _abstract_params(cfg)
+    p_spec = param_pspecs(cfg, params, mesh, fsdp=fsdp)
+    in_sp = input_pspecs(cfg, mesh, specs["batch"])
+    ns = lambda s: NamedSharding(mesh, s)
+    nst = lambda tree: jax.tree.map(
+        lambda s: NamedSharding(mesh, s), tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+    with mesh:
+        if kind == "train":
+            step = make_train_step(cfg)
+            opt = jax.eval_shape(lambda: adamw_init(params))
+            # mu/nu mirror param shardings; step scalar replicated
+            o_spec = type(opt)(step=P(), mu=p_spec, nu=p_spec)
+            args = [params, opt, specs["tokens"]]
+            in_sh = [nst(p_spec), nst(o_spec), ns(in_sp["tokens"])]
+            if "frontend" in specs:
+                args.append(specs["frontend"])
+                in_sh.append(ns(in_sp["frontend"]))
+            out_sh = (nst(p_spec), nst(o_spec), None)
+            jitted = jax.jit(step, in_shardings=tuple(in_sh),
+                             out_shardings=out_sh)
+            lowered = jitted.lower(*args)
+        elif kind == "prefill":
+            c_spec = cache_pspecs(cfg, specs["cache"], mesh, specs["batch"])
+            fn = lambda p, tok, cache, fr=None: prefill(cfg, p, tok, cache, fr)
+            args = [params, specs["tokens"], specs["cache"]]
+            in_sh = [nst(p_spec), ns(in_sp["tokens"]), nst(c_spec)]
+            if "frontend" in specs:
+                args.append(specs["frontend"])
+                in_sh.append(ns(in_sp["frontend"]))
+            out_sh = (None, nst(c_spec))
+            lowered = jax.jit(fn, in_shardings=tuple(in_sh),
+                              out_shardings=out_sh).lower(*args)
+        else:
+            c_spec = cache_pspecs(cfg, specs["cache"], mesh, specs["batch"])
+            fn = lambda p, cache, tok, t: decode_step(cfg, p, cache, tok, t)
+            args = [params, specs["cache"], specs["token"], specs["t"]]
+            in_sh = [nst(p_spec), nst(c_spec), ns(in_sp["token"]), ns(P())]
+            out_sh = (None, nst(c_spec))
+            lowered = jax.jit(fn, in_shardings=tuple(in_sh),
+                              out_shardings=out_sh).lower(*args)
+
+        t0 = time.time()
+        compiled = lowered.compile()
+        compile_s = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0] if cost else {}
+    info = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "x".join(str(s) for s in mesh.devices.shape),
+        "n_devices": mesh.devices.size,
+        "fsdp": bool(needs_fsdp(cfg, mesh) if fsdp is None else fsdp),
+        "kind": kind, "compile_s": round(compile_s, 2),
+        "flops": float(cost.get("flops", 0.0)) if cost else 0.0,
+        "bytes_accessed": float(cost.get("bytes accessed", 0.0)) if cost else 0.0,
+        "cost_analysis": {k: float(v) for k, v in (cost or {}).items()
+                          if isinstance(v, (int, float))},
+    }
+    if mem is not None:
+        for attr in ("temp_size_in_bytes", "argument_size_in_bytes",
+                     "output_size_in_bytes", "alias_size_in_bytes",
+                     "generated_code_size_in_bytes"):
+            v = getattr(mem, attr, None)
+            if v is not None:
+                info[attr] = int(v)
+    return compiled, info
+
+
+def run_combo(arch: str, shape_name: str, mesh_kind: str,
+              save_hlo: bool = True, force: bool = False) -> Dict[str, Any]:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    tag = f"{arch}__{shape_name}__{mesh_kind}"
+    out_json = os.path.join(RESULTS_DIR, tag + ".json")
+    if os.path.exists(out_json) and not force:
+        with open(out_json) as f:
+            return json.load(f)
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    compiled, info = lower_one(arch, shape_name, mesh)
+    if save_hlo:
+        hlo_path = os.path.join(RESULTS_DIR, tag + ".hlo.txt")
+        with open(hlo_path, "w") as f:
+            f.write(compiled.as_text())
+        info["hlo_path"] = hlo_path
+    with open(out_json, "w") as f:
+        json.dump(info, f, indent=1)
+    print(f"[dryrun] {tag}: OK compile={info['compile_s']}s "
+          f"flops={info['flops']:.3e} bytes={info['bytes_accessed']:.3e}")
+    return info
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi",
+                                                         "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--no-hlo", action="store_true")
+    args = ap.parse_args()
+
+    archs = ARCH_IDS if (args.all or not args.arch) else [args.arch]
+    shapes = list(INPUT_SHAPES) if (args.all or not args.shape) \
+        else [args.shape]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            if not shape_applicable(arch, shape):
+                print(f"[dryrun] {arch}__{shape}: SKIP (see DESIGN.md)")
+                continue
+            for mk in meshes:
+                try:
+                    run_combo(arch, shape, mk, save_hlo=not args.no_hlo,
+                              force=args.force)
+                except Exception as e:
+                    traceback.print_exc()
+                    failures.append((arch, shape, mk, repr(e)))
+    if failures:
+        print(f"[dryrun] {len(failures)} FAILURES:")
+        for f in failures:
+            print("   ", f)
+        raise SystemExit(1)
+    print("[dryrun] all combinations lowered + compiled.")
+
+
+if __name__ == "__main__":
+    main()

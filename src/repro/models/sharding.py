@@ -1,0 +1,176 @@
+"""Sharding rules: parameter / cache / input PartitionSpecs for any mesh.
+
+Scheme (DESIGN.md §4):
+  * weights — tensor-parallel over ``model`` (heads / FFN hidden / experts /
+    vocab); replicated over ``data`` (and ``pod``).
+  * activations & caches — batch over ``data`` (x ``pod``); for batch-1
+    long-context decode the KV cache is sharded over ``data`` on the
+    *sequence* axis instead (context-parallel decode).
+  * MoE experts — expert-parallel over ``model`` when the expert count
+    divides the axis; otherwise tensor-parallel within each expert.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .config import ModelConfig
+
+
+def data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def model_axes(mesh: Mesh):
+    """The tensor-parallel logical axis: plain ``model``, or the 2D
+    ``(expert, tp)`` split used by the expert-parallel perf variant."""
+    if "model" in mesh.axis_names:
+        return "model"
+    return ("expert", "tp")
+
+
+def model_axis_size(mesh: Mesh) -> int:
+    if "model" in mesh.axis_names:
+        return mesh.shape["model"]
+    return mesh.shape["expert"] * mesh.shape["tp"]
+
+
+def _last(ndim: int, axis: str) -> P:
+    return P(*([None] * (ndim - 1)), axis)
+
+
+def _second_last(ndim: int, axis: str) -> P:
+    return P(*([None] * (ndim - 2)), axis, None)
+
+
+FSDP_THRESHOLD_BYTES = 8 << 30      # add data-axis weight sharding above this
+
+
+def needs_fsdp(cfg: ModelConfig, mesh: Mesh) -> bool:
+    """True when model-axis tensor parallelism alone cannot fit the weights
+    in a v5e's 16GB HBM (e.g. mixtral-8x22b, llama4-scout)."""
+    bytes_per_dev = cfg.param_count() * 2 / model_axis_size(mesh)
+    return bytes_per_dev > FSDP_THRESHOLD_BYTES
+
+
+def param_pspecs(cfg: ModelConfig, params: Any, mesh: Mesh,
+                 fsdp: Optional[bool] = None) -> Any:
+    """PartitionSpec tree mirroring ``params`` (name-based rules).
+
+    With ``fsdp`` the d_model dimension of large matrices is additionally
+    sharded over ``data`` (2D weight sharding); GSPMD then all-gathers
+    weights per layer — the standard recipe for models whose weights exceed
+    HBM under pure tensor parallelism."""
+    msize = model_axis_size(mesh)
+    max_ = model_axes(mesh)
+    if fsdp is None:
+        fsdp = needs_fsdp(cfg, mesh)
+    dshard = "data" if fsdp else None
+    if max_ == "model":
+        expert_parallel = cfg.n_experts > 0 and cfg.n_experts % msize == 0
+        e_ax, t_ax = "model", None
+    else:
+        # 2D split: experts over `expert`, within-expert tensor over `tp`
+        expert_parallel = (cfg.n_experts > 0
+                           and cfg.n_experts % mesh.shape["expert"] == 0)
+        e_ax, t_ax = "expert", "tp"
+
+    def rule(path, leaf) -> P:
+        name = None
+        for p in reversed(path):
+            k = getattr(p, "key", None)
+            if isinstance(k, str):
+                name = k
+                break
+        nd = leaf.ndim
+        if name in ("embed",):
+            return P(max_, dshard)
+        if name == "lm_head":
+            return P(dshard, max_)
+        if name in ("final_norm", "enc_norm") or name.startswith("ln") \
+                or name in ("norm_w", "conv_b", "dt_bias", "A_log", "D",
+                            "conv_w", "router"):
+            return P()
+        if name in ("wq", "wk", "wv", "xwq", "xwk", "xwv", "in_proj"):
+            # (..., d, h): d over data (fsdp), h over model
+            return P(*([None] * (nd - 2)), dshard, max_)
+        if name in ("wo", "xwo", "out_proj"):
+            # (..., h, d): h over model, d over data (fsdp)
+            return P(*([None] * (nd - 2)), max_, dshard)
+        if name in ("w_gate", "w_up"):
+            if nd == 4:     # stacked MoE (L, E, d, f)
+                return (P(None, e_ax, dshard, t_ax) if expert_parallel
+                        else P(None, None, dshard, max_))
+            return P(*([None] * (nd - 2)), dshard, max_)
+        if name == "w_down":
+            if nd == 4:     # (L, E, f, d)
+                return (P(None, e_ax, t_ax, dshard) if expert_parallel
+                        else P(None, None, max_, dshard))
+            return P(*([None] * (nd - 2)), max_, dshard)
+        return P()
+
+    return jax.tree_util.tree_map_with_path(rule, params)
+
+
+def cache_pspecs(cfg: ModelConfig, cache: Any, mesh: Mesh,
+                 batch: int) -> Any:
+    """Cache specs.  batch >= data-axis size -> shard batch; batch smaller
+    (long-context) -> shard the KV sequence axis over ``data``."""
+    dp = data_axes(mesh)
+    max_ = model_axes(mesh)
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+    batch_sharded = batch % dp_size == 0 and batch >= dp_size
+    msize = model_axis_size(mesh)
+    kv_axis_ok = cfg.n_kv_heads and cfg.n_kv_heads % msize == 0
+    hd_ok = cfg.hd % msize == 0 if cfg.n_heads else False
+    ssm_heads_ok = cfg.n_ssm_heads % msize == 0 if cfg.ssm_state else False
+
+    def rule(path, leaf) -> P:
+        name = None
+        for p in reversed(path):
+            k = getattr(p, "key", None)
+            if isinstance(k, str):
+                name = k
+                break
+        if name in ("k", "v", "xk", "xv"):
+            # (L, B, W, Hkv, hd)
+            b = dp if batch_sharded else None
+            w = None if batch_sharded else "data"
+            if kv_axis_ok:
+                return P(None, b, w, max_, None)
+            if hd_ok:
+                return P(None, b, w, None, max_)
+            return P(None, b, w, None, None)
+        if name == "conv":      # (L, B, dc-1, dxbc)
+            b = dp if batch_sharded else None
+            return P(None, b, None, max_)
+        if name == "state":     # (L, B, H, P, N)
+            b = dp if batch_sharded else None
+            h = max_ if ssm_heads_ok else None
+            return P(None, b, h, None, None)
+        return P()
+
+    return jax.tree_util.tree_map_with_path(rule, cache)
+
+
+def input_pspecs(cfg: ModelConfig, mesh: Mesh, batch: int
+                 ) -> Dict[str, P]:
+    dp = data_axes(mesh)
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+    b = dp if (batch % dp_size == 0 and batch >= dp_size) else None
+    return {
+        "tokens": P(b, None),
+        "frontend": P(b, None, None),
+        "token": P(b, None),
+    }
+
+
+def named(mesh: Mesh, tree: Any) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree,
+                        is_leaf=lambda x: isinstance(x, P))

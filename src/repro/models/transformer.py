@@ -1,0 +1,527 @@
+"""Unified model zoo: dense / MoE / SSM / hybrid / enc-dec / VLM / audio.
+
+Design notes
+------------
+* Every architecture is a sequence of homogeneous *layer groups*
+  (``cfg.groups()``).  Each group lowers to one ``lax.scan`` over stacked
+  parameters, so HLO size is O(groups), not O(layers).
+* KV caches for sliding-window groups are ring buffers of size
+  ``min(window, max_len)`` — this is what makes ``long_500k`` decode feasible
+  for SWA architectures.
+* ``frontend`` embeddings (VLM patches / audio frames) are *inputs*: the
+  modality encoders are stubs per the assignment carve-out.
+
+Entry points:
+  init_params(cfg, key)                        -> params
+  forward(cfg, params, tokens, frontend=None)  -> (logits, aux)   # teacher forcing
+  init_cache(cfg, batch, max_len)              -> cache
+  prefill(cfg, params, tokens, cache, frontend=None) -> (logits, cache)
+  decode_step(cfg, params, cache, token, t)    -> (logits, cache)
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import LayerGroup, ModelConfig
+from .layers import (attention_block, causal_window_mask, gqa_attention,
+                     gelu_mlp, mamba2_block, moe_block, rms_norm, swiglu,
+                     apply_rope)
+
+Params = Dict[str, Any]
+f32 = jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# Initialization
+# ---------------------------------------------------------------------------
+
+
+def _norm_init(key, shape, dtype):
+    return jnp.zeros(shape, dtype)
+
+
+def _dense_init(key, shape, dtype, scale=0.02):
+    return (jax.random.normal(key, shape, f32) * scale).astype(dtype)
+
+
+def _attn_layer_shapes(cfg: ModelConfig, g: LayerGroup) -> Dict[str, tuple]:
+    d, hd = cfg.d_model, cfg.hd
+    hq, hkv, f = cfg.n_heads, cfg.n_kv_heads, cfg.d_ff
+    s: Dict[str, tuple] = {
+        "ln1": (d,), "ln2": (d,),
+        "wq": (d, hq * hd), "wk": (d, hkv * hd), "wv": (d, hkv * hd),
+        "wo": (hq * hd, d),
+    }
+    if g.cross_attn:
+        s.update({"ln_x": (d,), "xwq": (d, hq * hd), "xwk": (d, hkv * hd),
+                  "xwv": (d, hkv * hd), "xwo": (hq * hd, d)})
+    if g.moe:
+        E = cfg.n_experts
+        s.update({"router": (d, E), "w_gate": (E, d, f), "w_up": (E, d, f),
+                  "w_down": (E, f, d)})
+    elif cfg.mlp == "swiglu":
+        s.update({"w_gate": (d, f), "w_up": (d, f), "w_down": (f, d)})
+    else:
+        s.update({"w_up": (d, f), "w_down": (f, d)})
+    return s
+
+
+def _mamba_layer_shapes(cfg: ModelConfig) -> Dict[str, tuple]:
+    d, di, N = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    H = cfg.n_ssm_heads
+    dxbc = di + 2 * N
+    return {
+        "ln": (d,),
+        "in_proj": (d, 2 * di + 2 * N + H),
+        "conv_w": (cfg.ssm_conv, dxbc), "conv_b": (dxbc,),
+        "dt_bias": (H,), "A_log": (H,), "D": (H,),
+        "norm_w": (di,), "out_proj": (di, d),
+    }
+
+
+def _init_layer(key, shapes: Dict[str, tuple], count: int, dtype) -> Params:
+    out = {}
+    keys = jax.random.split(key, len(shapes))
+    for k, (name, shp) in zip(keys, sorted(shapes.items())):
+        full = (count,) + shp if count > 1 else shp
+        if name.startswith(("ln", "norm")):
+            out[name] = jnp.zeros(full, dtype)
+        elif name == "A_log":
+            base = jnp.log(jnp.linspace(1.0, 16.0, shp[-1], dtype=f32))
+            out[name] = jnp.broadcast_to(base, full).astype(f32)
+        elif name in ("dt_bias", "conv_b", "D"):
+            out[name] = jnp.zeros(full, f32) if name != "D" \
+                else jnp.ones(full, f32)
+        else:
+            fan_in = shp[-2] if len(shp) >= 2 else shp[-1]
+            out[name] = _dense_init(k, full, dtype,
+                                    scale=1.0 / math.sqrt(fan_in))
+    return out
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Params:
+    dtype = cfg.pdtype()
+    keys = jax.random.split(key, 8)
+    params: Params = {
+        "embed": _dense_init(keys[0], (cfg.vocab_padded, cfg.d_model), dtype),
+        "final_norm": jnp.zeros((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = _dense_init(
+            keys[1], (cfg.d_model, cfg.vocab_padded), dtype)
+
+    groups = cfg.groups()
+    gkeys = jax.random.split(keys[2], len(groups))
+    glist: List[Params] = []
+    shared_done = False
+    for gk, g in zip(gkeys, groups):
+        if g.kind == "shared_attn":
+            if not shared_done:
+                shapes = _attn_layer_shapes(
+                    cfg, LayerGroup("attn", 1, moe=False))
+                params["shared_attn"] = _init_layer(gk, shapes, 1, dtype)
+                shared_done = True
+            glist.append({})        # placeholder; uses params["shared_attn"]
+        elif g.kind == "mamba":
+            glist.append(_init_layer(gk, _mamba_layer_shapes(cfg),
+                                     g.count, dtype))
+        else:
+            glist.append(_init_layer(gk, _attn_layer_shapes(cfg, g),
+                                     g.count, dtype))
+    params["groups"] = glist
+
+    if cfg.n_enc_layers:
+        enc_shapes = _attn_layer_shapes(
+            cfg, LayerGroup("attn", cfg.n_enc_layers))
+        params["encoder"] = _init_layer(keys[3], enc_shapes,
+                                        cfg.n_enc_layers, dtype)
+        params["enc_norm"] = jnp.zeros((cfg.d_model,), dtype)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Layer-group execution (shared by forward / prefill / decode)
+# ---------------------------------------------------------------------------
+
+
+def _ffn(cfg: ModelConfig, g: LayerGroup, p: Params,
+         x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    if g.moe:
+        return moe_block(x, p, n_experts=cfg.n_experts,
+                         k=cfg.experts_per_token,
+                         capacity_factor=cfg.capacity_factor, mlp=cfg.mlp)
+    if cfg.mlp == "swiglu":
+        return swiglu(x, p["w_gate"], p["w_up"], p["w_down"]), jnp.zeros((), f32)
+    return gelu_mlp(x, p["w_up"], p["w_down"]), jnp.zeros((), f32)
+
+
+def _attn_group_fwd(cfg: ModelConfig, g: LayerGroup, gp: Params,
+                    x: jnp.ndarray, positions: jnp.ndarray,
+                    mask: Optional[jnp.ndarray],
+                    enc_out: Optional[jnp.ndarray],
+                    collect_kv: bool):
+    """Run a stacked attention group via scan.  Returns (x, aux, kv)."""
+
+    def body(carry, lp):
+        h, aux = carry
+        a, k, v = attention_block(
+            rms_norm(h, lp["ln1"], cfg.norm_eps), lp,
+            n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads, hd=cfg.hd,
+            positions=positions, mask=mask, rope_theta=cfg.rope_theta)
+        h = h + a
+        if g.cross_attn:
+            xa, _, _ = attention_block(
+                rms_norm(h, lp["ln_x"], cfg.norm_eps),
+                {"wq": lp["xwq"], "wk": lp["xwk"], "wv": lp["xwv"],
+                 "wo": lp["xwo"]},
+                n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads, hd=cfg.hd,
+                positions=positions, mask=None, rope_theta=cfg.rope_theta,
+                kv_override=_enc_kv(cfg, lp, enc_out))
+            h = h + xa
+        f, a_loss = _ffn(cfg, g, lp, rms_norm(h, lp["ln2"], cfg.norm_eps))
+        h = h + f
+        out = (k, v) if collect_kv else None
+        return (h, aux + a_loss), out
+
+    if cfg.remat:
+        body = jax.checkpoint(body)     # layer-boundary remat (training mem)
+    if g.count == 1 and not _is_stacked(gp):
+        (x, aux), kv = body((x, jnp.zeros((), f32)), gp)
+        kv = jax.tree.map(lambda t: t[None], kv) if kv is not None else None
+        return x, aux, kv
+    (x, aux), kv = jax.lax.scan(body, (x, jnp.zeros((), f32)), gp,
+                                unroll=cfg.scan_unroll)
+    return x, aux, kv
+
+
+def _is_stacked(gp: Params) -> bool:
+    ln = gp.get("ln1", gp.get("ln"))
+    return ln is not None and ln.ndim > 1
+
+
+def _enc_kv(cfg: ModelConfig, lp: Params, enc_out: jnp.ndarray):
+    B, Se, _ = enc_out.shape
+    k = (enc_out @ lp["xwk"]).reshape(B, Se, cfg.n_kv_heads, cfg.hd)
+    v = (enc_out @ lp["xwv"]).reshape(B, Se, cfg.n_kv_heads, cfg.hd)
+    return k, v
+
+
+def _mamba_group_fwd(cfg: ModelConfig, gp: Params, x: jnp.ndarray,
+                     cache: Optional[Dict], collect_state: bool):
+    def body(carry, inp):
+        h = carry
+        if cache is not None:
+            lp, lc = inp
+        else:
+            lp, lc = inp, None
+        y, new_c = mamba2_block(
+            rms_norm(h, lp["ln"], cfg.norm_eps), lp,
+            n_heads=cfg.n_ssm_heads, head_dim=cfg.ssm_head_dim,
+            d_state=cfg.ssm_state, d_conv=cfg.ssm_conv, chunk=cfg.ssm_chunk,
+            cache=lc)
+        return h + y, (new_c if (collect_state or cache is not None) else None)
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    if not _is_stacked(gp):
+        lc0 = jax.tree.map(lambda a: a[0], cache) if cache is not None \
+            else None
+        x, nc0 = body(x, (gp, lc0) if cache is not None else gp)
+        if nc0 is not None:
+            nc0 = jax.tree.map(lambda a: a[None], nc0)
+        return x, nc0
+    xs = (gp, cache) if cache is not None else gp
+    x, new_cache = jax.lax.scan(body, x, xs, unroll=cfg.scan_unroll)
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+
+def _embed(cfg: ModelConfig, params: Params, tokens: jnp.ndarray,
+           frontend: Optional[jnp.ndarray]) -> jnp.ndarray:
+    h = params["embed"][tokens].astype(cfg.dtype())
+    h = h * math.sqrt(cfg.d_model)
+    if frontend is not None and cfg.frontend and cfg.arch_type != "encdec":
+        h = jnp.concatenate([frontend.astype(cfg.dtype()), h], axis=1)
+    return h
+
+
+def _unembed(cfg: ModelConfig, params: Params, h: jnp.ndarray) -> jnp.ndarray:
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        return h @ params["embed"].T.astype(h.dtype)
+    return h @ params["lm_head"].astype(h.dtype)
+
+
+def _encode(cfg: ModelConfig, params: Params,
+            frontend: jnp.ndarray) -> jnp.ndarray:
+    """Whisper-style bidirectional encoder over (stub) frame embeddings."""
+    h = frontend.astype(cfg.dtype())
+    pos = jnp.arange(h.shape[1])[None, :]
+
+    def body(carry, lp):
+        hh = carry
+        a, _, _ = attention_block(
+            rms_norm(hh, lp["ln1"], cfg.norm_eps), lp,
+            n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads, hd=cfg.hd,
+            positions=pos, mask=None, rope_theta=cfg.rope_theta)
+        hh = hh + a
+        f, _ = _ffn(cfg, LayerGroup("attn", 1), lp,
+                    rms_norm(hh, lp["ln2"], cfg.norm_eps))
+        return hh + f, None
+
+    h, _ = jax.lax.scan(body, h, params["encoder"], unroll=cfg.scan_unroll)
+    return rms_norm(h, params["enc_norm"], cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# forward (teacher-forcing; training and smoke tests)
+# ---------------------------------------------------------------------------
+
+
+def forward(cfg: ModelConfig, params: Params, tokens: jnp.ndarray,
+            frontend: Optional[jnp.ndarray] = None,
+            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """tokens: (B, S_text); frontend: (B, F, d) when cfg.frontend is set.
+    Returns (logits (B, S_total, V), aux_loss scalar)."""
+    enc_out = None
+    if cfg.arch_type == "encdec":
+        assert frontend is not None, "encoder-decoder needs frontend frames"
+        enc_out = _encode(cfg, params, frontend)
+        frontend = None
+    h = _embed(cfg, params, tokens, frontend)
+    B, S, _ = h.shape
+    positions = jnp.arange(S)[None, :]
+    aux = jnp.zeros((), f32)
+    shared_idx = 0
+    for g, gp in zip(cfg.groups(), params["groups"]):
+        if g.kind == "mamba":
+            h, _ = _mamba_group_fwd(cfg, gp, h, None, collect_state=False)
+        else:
+            lp = params["shared_attn"] if g.kind == "shared_attn" else gp
+            mask = causal_window_mask(positions[0], positions[0],
+                                      g.window)[None, None, None]
+            h, a, _ = _attn_group_fwd(cfg, g, lp, h, positions, mask,
+                                      enc_out, collect_kv=False)
+            aux = aux + a
+            if g.kind == "shared_attn":
+                shared_idx += 1
+    return _unembed(cfg, params, h), aux
+
+
+# ---------------------------------------------------------------------------
+# KV / state caches
+# ---------------------------------------------------------------------------
+
+
+def cache_spec(cfg: ModelConfig, batch: int, max_len: int) -> Dict[str, Any]:
+    """Shapes only (jax.eval_shape-compatible via init_cache)."""
+    return jax.eval_shape(lambda: init_cache(cfg, batch, max_len))
+
+
+def _attn_cache_len(g: LayerGroup, max_len: int) -> int:
+    return min(g.window, max_len) if g.window > 0 else max_len
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               enc_len: Optional[int] = None) -> Dict[str, Any]:
+    dt = cfg.dtype()
+    groups = cfg.groups()
+    entries: List[Dict[str, jnp.ndarray]] = []
+    for g in groups:
+        if g.kind == "mamba":
+            entries.append({
+                "conv": jnp.zeros((g.count, batch, cfg.ssm_conv - 1,
+                                   cfg.d_inner + 2 * cfg.ssm_state), dt),
+                "state": jnp.zeros((g.count, batch, cfg.n_ssm_heads,
+                                    cfg.ssm_head_dim, cfg.ssm_state), f32),
+            })
+        else:
+            W = _attn_cache_len(g, max_len)
+            e = {"k": jnp.zeros((g.count, batch, W, cfg.n_kv_heads, cfg.hd), dt),
+                 "v": jnp.zeros((g.count, batch, W, cfg.n_kv_heads, cfg.hd), dt)}
+            if g.cross_attn:
+                L = enc_len or cfg.n_enc_tokens
+                e["xk"] = jnp.zeros((g.count, batch, L, cfg.n_kv_heads,
+                                     cfg.hd), dt)
+                e["xv"] = jnp.zeros((g.count, batch, L, cfg.n_kv_heads,
+                                     cfg.hd), dt)
+            entries.append(e)
+    return {"layers": entries}
+
+
+# ---------------------------------------------------------------------------
+# prefill: run the prompt, fill caches, return last-position logits
+# ---------------------------------------------------------------------------
+
+
+def prefill(cfg: ModelConfig, params: Params, tokens: jnp.ndarray,
+            cache: Dict[str, Any],
+            frontend: Optional[jnp.ndarray] = None,
+            ) -> Tuple[jnp.ndarray, Dict[str, Any]]:
+    enc_out = None
+    if cfg.arch_type == "encdec":
+        enc_out = _encode(cfg, params, frontend)
+        frontend = None
+    h = _embed(cfg, params, tokens, frontend)
+    B, S, _ = h.shape
+    positions = jnp.arange(S)[None, :]
+    new_layers = []
+    for g, gp, ce in zip(cfg.groups(), params["groups"], cache["layers"]):
+        if g.kind == "mamba":
+            zero = {"conv": jnp.zeros_like(ce["conv"][0]),
+                    "state": jnp.zeros_like(ce["state"][0])}
+            stacked_zero = jax.tree.map(
+                lambda t: jnp.zeros_like(t), ce)
+            h, nc = _mamba_group_fwd(cfg, gp, h, stacked_zero,
+                                     collect_state=True)
+            new_layers.append(nc)
+        else:
+            lp = params["shared_attn"] if g.kind == "shared_attn" else gp
+            mask = causal_window_mask(positions[0], positions[0],
+                                      g.window)[None, None, None]
+            h, _, kv = _attn_group_fwd(cfg, g, lp, h, positions, mask,
+                                       enc_out, collect_kv=True)
+            k, v = kv
+            W = ce["k"].shape[2]
+            e = {"k": _ring_fill(ce["k"], k, S, W),
+                 "v": _ring_fill(ce["v"], v, S, W)}
+            if g.cross_attn:
+                def xkv(lp_layer):
+                    return _enc_kv(cfg, lp_layer, enc_out)
+                if _is_stacked(gp):
+                    xk, xv = jax.vmap(
+                        lambda l: _enc_kv(cfg, l, enc_out))(gp)
+                else:
+                    xk1, xv1 = _enc_kv(cfg, lp, enc_out)
+                    xk, xv = xk1[None], xv1[None]
+                e["xk"], e["xv"] = xk.astype(ce["xk"].dtype), \
+                    xv.astype(ce["xv"].dtype)
+            new_layers.append(e)
+    logits = _unembed(cfg, params, h[:, -1:, :])
+    return logits, {"layers": new_layers}
+
+
+def _ring_fill(dst: jnp.ndarray, kv: jnp.ndarray, S: int, W: int
+               ) -> jnp.ndarray:
+    """Write prefill K/V (L,B,S,Hkv,hd) into a ring cache of width W."""
+    if S >= W:
+        tail = kv[:, :, S - W:, :, :]
+        slots = (jnp.arange(S - W, S) % W)
+        return dst.at[:, :, slots].set(tail.astype(dst.dtype))
+    return dst.at[:, :, :S].set(kv.astype(dst.dtype))
+
+
+# ---------------------------------------------------------------------------
+# decode_step: one token, cache of max_len (THE `serve_step` the dry-run lowers)
+# ---------------------------------------------------------------------------
+
+
+def decode_step(cfg: ModelConfig, params: Params, cache: Dict[str, Any],
+                token: jnp.ndarray, t: jnp.ndarray,
+                ) -> Tuple[jnp.ndarray, Dict[str, Any]]:
+    """token: (B,1) int32; t: scalar int32 absolute position of this token.
+    Returns (logits (B,1,V), updated cache)."""
+    h = params["embed"][token].astype(cfg.dtype()) * math.sqrt(cfg.d_model)
+    B = token.shape[0]
+    positions = jnp.full((1, 1), t, jnp.int32)
+    new_layers = []
+    for g, gp, ce in zip(cfg.groups(), params["groups"], cache["layers"]):
+        if g.kind == "mamba":
+            h, nc = _mamba_group_fwd(cfg, gp, h, ce, collect_state=False)
+            new_layers.append(nc)
+        else:
+            lp = params["shared_attn"] if g.kind == "shared_attn" else gp
+            h, nc = _attn_group_decode(cfg, g, lp, ce, h, positions, t)
+            new_layers.append(nc)
+    logits = _unembed(cfg, params, h)
+    return logits, {"layers": new_layers}
+
+
+def _attn_group_decode(cfg: ModelConfig, g: LayerGroup, gp: Params,
+                       ce: Dict[str, jnp.ndarray], x: jnp.ndarray,
+                       positions: jnp.ndarray, t: jnp.ndarray):
+    W = ce["k"].shape[2]
+    slot = jnp.mod(t, W)
+    slots = jnp.arange(W)
+    if g.window > 0:
+        # absolute position stored in slot s: t - ((t - s) mod W)
+        k_pos = t - jnp.mod(t - slots, W)
+    else:
+        k_pos = slots
+    valid = (k_pos >= 0) & (k_pos <= t)
+    mask = valid[None, None, None, None, :]          # (1,1,1,1,W)
+
+    def body(carry, inp):
+        h = carry
+        lp = gp if not _is_stacked(gp) else None
+        if lp is None:
+            lp, lc = inp
+        else:
+            lc = inp
+        hn = rms_norm(h, lp["ln1"], cfg.norm_eps)
+        B = h.shape[0]
+        q = (hn @ lp["wq"]).reshape(B, 1, cfg.n_heads, cfg.hd)
+        k1 = (hn @ lp["wk"]).reshape(B, 1, cfg.n_kv_heads, cfg.hd)
+        v1 = (hn @ lp["wv"]).reshape(B, 1, cfg.n_kv_heads, cfg.hd)
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k1 = apply_rope(k1, positions, cfg.rope_theta)
+        nk = jax.lax.dynamic_update_slice_in_dim(
+            lc["k"], k1.astype(lc["k"].dtype), slot, axis=1)
+        nv = jax.lax.dynamic_update_slice_in_dim(
+            lc["v"], v1.astype(lc["v"].dtype), slot, axis=1)
+        a = gqa_attention(q, nk, nv, mask)
+        h = h + a.reshape(B, 1, cfg.n_heads * cfg.hd) @ lp["wo"]
+        if g.cross_attn:
+            hx = rms_norm(h, lp["ln_x"], cfg.norm_eps)
+            qx = (hx @ lp["xwq"]).reshape(B, 1, cfg.n_heads, cfg.hd)
+            ax = gqa_attention(qx, lc["xk"], lc["xv"], None)
+            h = h + ax.reshape(B, 1, cfg.n_heads * cfg.hd) @ lp["xwo"]
+        f, _ = _ffn(cfg, g, lp, rms_norm(h, lp["ln2"], cfg.norm_eps))
+        h = h + f
+        nc = dict(lc)
+        nc["k"], nc["v"] = nk, nv
+        return h, nc
+
+    if not _is_stacked(gp):
+        lc0 = jax.tree.map(lambda a: a[0], ce)
+        x, nc0 = body(x, lc0)
+        return x, jax.tree.map(lambda a: a[None], nc0)
+    x, nc = jax.lax.scan(body, x, (gp, ce), unroll=cfg.scan_unroll)
+    return x, nc
+
+
+# ---------------------------------------------------------------------------
+# loss
+# ---------------------------------------------------------------------------
+
+
+def lm_loss(cfg: ModelConfig, params: Params, tokens: jnp.ndarray,
+            frontend: Optional[jnp.ndarray] = None,
+            aux_weight: float = 0.01) -> jnp.ndarray:
+    """Next-token cross-entropy (+ MoE load-balance aux).
+
+    Sharding-aware formulation: with vocab-sharded logits,
+    ``take_along_axis`` would force GSPMD to all-gather the full (B,S,V)
+    logit tensor.  Writing the picked-logit term as a one-hot contraction
+    keeps the vocab axis local (partial dot + psum of a (B,S) scalar field)
+    — identical math, ~V/shards less collective traffic (EXPERIMENTS.md
+    §Perf, bonus iteration)."""
+    logits, aux = forward(cfg, params, tokens, frontend)
+    # predictions for text positions only (frontend tokens are prompts)
+    n_text = tokens.shape[1]
+    logits = logits[:, -n_text:, :].astype(f32)
+    pred = logits[:, :-1]                        # (B, S-1, V)
+    tgt = tokens[:, 1:]                          # (B, S-1)
+    lse = jax.nn.logsumexp(pred, axis=-1)        # (B, S-1)
+    onehot = jax.nn.one_hot(tgt, pred.shape[-1], dtype=f32)
+    picked = jnp.einsum("bsv,bsv->bs", pred, onehot)
+    nll = lse - picked
+    return nll.mean() + aux_weight * aux

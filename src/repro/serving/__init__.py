@@ -1,0 +1,6 @@
+"""Serving substrate: real JAX execution beneath the Archipelago scheduler."""
+from .executor import JaxModelExecutor, ModelInstance, ServedModel
+from .engine import ServingApp, ServingStack
+
+__all__ = ["JaxModelExecutor", "ModelInstance", "ServedModel", "ServingApp",
+           "ServingStack"]

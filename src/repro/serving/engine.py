@@ -1,0 +1,87 @@
+"""Hardware-in-the-loop serving stack.
+
+The scheduler layers (LBS + SGSs) are the exact objects from ``repro.core``;
+time is advanced by the discrete-event engine, but *every execution and every
+sandbox setup is a real jitted JAX call whose wall time is measured and fed
+back* — queuing, placement, proactive allocation, scaling all operate on
+real numbers.  (A fully wall-clock-threaded server adds nothing for a
+single-host CPU container; the event engine gives deterministic, auditable
+schedules while the data plane stays real.)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from ..core.cluster import ClusterConfig, build_cluster
+from ..core.lbs import LBSConfig
+from ..core.sgs import SGSConfig
+from ..core.types import DagSpec, FunctionSpec, Request
+from ..sim.engine import SimEnv
+from ..sim.metrics import Metrics
+from .executor import JaxModelExecutor, ServedModel
+
+
+@dataclass
+class ServingApp:
+    """A tenant: one DAG over served models, with a latency deadline."""
+
+    dag_id: str
+    models: Dict[str, ServedModel]          # fn name -> model
+    edges: Tuple[Tuple[str, str], ...] = ()
+    slack: float = 0.5                      # deadline = critical path + slack
+
+
+class ServingStack:
+    def __init__(self, apps: List[ServingApp],
+                 cluster: Optional[ClusterConfig] = None,
+                 sgs_cfg: Optional[SGSConfig] = None,
+                 lbs_cfg: Optional[LBSConfig] = None):
+        served = {}
+        for app in apps:
+            served.update(app.models)
+        self.executor = JaxModelExecutor(served)
+        # calibrate: real measured exec/setup times become the FunctionSpecs
+        self.fn_specs = self.executor.calibrate()
+        self.dags: Dict[str, DagSpec] = {}
+        for app in apps:
+            fns = tuple(self.fn_specs[n] for n in app.models)
+            dag = DagSpec(dag_id=app.dag_id, functions=fns, edges=app.edges,
+                          deadline=0.0 or 1.0)
+            # set deadline from measured critical path + slack
+            cp = dag.critical_path_time()
+            self.dags[app.dag_id] = DagSpec(
+                dag_id=app.dag_id, functions=fns, edges=app.edges,
+                deadline=cp + app.slack)
+
+        self.env = SimEnv()
+        self.lbs = build_cluster(self.env, cluster, sgs_cfg, lbs_cfg,
+                                 execute=self.executor.execute)
+        self.metrics = Metrics()
+
+    def prewarm(self, dag_id: str, n_per_fn: int = 2) -> float:
+        """Proactively allocate sandboxes on the DAG's initial SGS before
+        traffic arrives (the 'initial DAG upload' step, §3).  Returns the
+        time at which they are warm — start traffic after it."""
+        dag = self.dags[dag_id]
+        sgs = self.lbs.select(Request(dag=dag, arrival_time=0.0), 0.0)
+        sgs.preallocate(dag, n_per_fn)
+        return max(f.setup_time for f in dag.functions) + 0.1
+
+    def submit_at(self, t: float, dag_id: str) -> None:
+        dag = self.dags[dag_id]
+
+        def fire():
+            req = Request(dag=dag, arrival_time=self.env.now())
+            self.metrics.requests.append(req)
+            self.lbs.route(req, self.env.now())
+
+        self.env.call_at(t, fire)
+
+    def run(self, until: float) -> Metrics:
+        self.env.every(0.1, lambda: self.lbs.check_scaling(self.env.now()),
+                       until=until)
+        self.env.run_until(until)
+        for s in self.lbs.sgss.values():
+            self.metrics.queuing_delays.extend(s.queuing_delays)
+        return self.metrics

@@ -1,0 +1,15 @@
+"""Discrete-event simulation substrate: reproduces the paper's CloudLab
+evaluation (74 machines, Workloads 1 & 2, classes C1-C4) on a laptop."""
+from .engine import SimEnv
+from .workload import (ArrivalProcess, ConstantRate, OnOffRate, PoissonResampled,
+                       Sinusoidal, WorkloadSpec, make_paper_dag,
+                       paper_workload_1, paper_workload_2)
+from .metrics import Metrics, summarize
+from .runner import SimResult, run_archipelago, run_baseline, run_sparrow
+
+__all__ = [
+    "SimEnv", "ArrivalProcess", "ConstantRate", "OnOffRate",
+    "PoissonResampled", "Sinusoidal", "WorkloadSpec", "make_paper_dag",
+    "paper_workload_1", "paper_workload_2", "Metrics", "summarize",
+    "SimResult", "run_archipelago", "run_baseline", "run_sparrow",
+]

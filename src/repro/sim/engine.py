@@ -1,0 +1,56 @@
+"""Minimal deterministic discrete-event engine implementing ``core.sgs.Env``."""
+from __future__ import annotations
+
+import heapq
+import itertools
+from typing import Callable, List, Tuple
+
+
+class SimEnv:
+    """Heap-based event loop.  Deterministic: ties broken by insertion order."""
+
+    def __init__(self):
+        self._now = 0.0
+        self._seq = itertools.count()
+        self._events: List[Tuple[float, int, Callable[[], None]]] = []
+        self.n_events = 0
+
+    # -- core.sgs.Env interface ------------------------------------------------
+    def now(self) -> float:
+        return self._now
+
+    def call_after(self, delay: float, fn: Callable[[], None]) -> None:
+        self.call_at(self._now + max(0.0, delay), fn)
+
+    def call_at(self, t: float, fn: Callable[[], None]) -> None:
+        if t < self._now - 1e-12:
+            raise ValueError(f"cannot schedule in the past: {t} < {self._now}")
+        heapq.heappush(self._events, (t, next(self._seq), fn))
+
+    # -- driving -----------------------------------------------------------------
+    def run_until(self, t_end: float) -> None:
+        while self._events and self._events[0][0] <= t_end:
+            t, _, fn = heapq.heappop(self._events)
+            self._now = t
+            self.n_events += 1
+            fn()
+        self._now = max(self._now, t_end)
+
+    def run(self) -> None:
+        while self._events:
+            t, _, fn = heapq.heappop(self._events)
+            self._now = t
+            self.n_events += 1
+            fn()
+
+    def every(self, interval: float, fn: Callable[[], None],
+              until: float = float("inf")) -> None:
+        """Recurring callback helper (estimation ticks, scaling passes)."""
+
+        def tick():
+            if self._now > until:
+                return
+            fn()
+            self.call_after(interval, tick)
+
+        self.call_after(interval, tick)

@@ -1,0 +1,78 @@
+"""Evaluation metrics (§7.1): E2E latency, % deadlines met, queuing delay,
+cold starts."""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence
+
+from ..core.types import Request
+
+
+def percentile(xs: Sequence[float], p: float) -> float:
+    """Nearest-rank percentile; p in [0,100]."""
+    if not xs:
+        return float("nan")
+    s = sorted(xs)
+    k = max(0, min(len(s) - 1, int(round(p / 100.0 * (len(s) - 1)))))
+    return s[k]
+
+
+@dataclass
+class Metrics:
+    requests: List[Request] = field(default_factory=list)
+    queuing_delays: List[float] = field(default_factory=list)
+
+    @property
+    def completed(self) -> List[Request]:
+        return [r for r in self.requests if r.completion_time is not None]
+
+    def after_warmup(self, warmup: float) -> "Metrics":
+        """Steady-state view: only requests arriving after ``warmup`` count
+        (excludes the cold-cluster transient, as any fixed-duration testbed
+        run longer than the transient effectively does)."""
+        return Metrics(requests=[r for r in self.requests
+                                 if r.arrival_time >= warmup],
+                       queuing_delays=self.queuing_delays)
+
+    def latencies(self) -> List[float]:
+        return [r.e2e_latency for r in self.completed]
+
+    def latency_pct(self, p: float) -> float:
+        return percentile(self.latencies(), p)
+
+    def deadline_met_frac(self) -> float:
+        done = self.completed
+        if not done:
+            return float("nan")
+        # incomplete requests count as missed (conservative, like the paper's
+        # fixed-duration runs)
+        met = sum(1 for r in done if r.deadline_met)
+        return met / len(self.requests)
+
+    def cold_start_count(self) -> int:
+        return sum(r.n_cold_starts for r in self.requests)
+
+    def cold_start_frac(self) -> float:
+        if not self.requests:
+            return float("nan")
+        n_inv = sum(len(r.dag.functions) for r in self.completed)
+        return self.cold_start_count() / max(1, n_inv)
+
+    def by_class(self) -> Dict[str, "Metrics"]:
+        out: Dict[str, Metrics] = {}
+        for r in self.requests:
+            cls = r.dag.dag_id.split("-")[0]
+            out.setdefault(cls, Metrics()).requests.append(r)
+        return out
+
+
+def summarize(name: str, m: Metrics) -> str:
+    lat = m.latencies()
+    if not lat:
+        return f"{name}: no completed requests"
+    return (f"{name}: n={len(m.requests)} done={len(lat)} "
+            f"p50={percentile(lat,50)*1e3:.1f}ms "
+            f"p99={percentile(lat,99)*1e3:.1f}ms "
+            f"p99.9={percentile(lat,99.9)*1e3:.1f}ms "
+            f"deadlines_met={m.deadline_met_frac()*100:.2f}% "
+            f"cold_starts={m.cold_start_count()}")

@@ -1,0 +1,134 @@
+"""End-to-end simulation drivers: Archipelago vs baseline stacks."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Optional
+
+from ..core.baselines import CentralizedFIFO, SparrowScheduler
+from ..core.cluster import ClusterConfig, build_cluster, build_flat_workers
+from ..core.lbs import LBSConfig, LoadBalancer
+from ..core.sgs import SGSConfig
+from ..core.types import Request
+from .engine import SimEnv
+from .metrics import Metrics
+from .workload import WorkloadSpec
+
+
+@dataclass
+class SimResult:
+    metrics: Metrics
+    env: SimEnv
+    lbs: Optional[LoadBalancer] = None
+    scheduler: object = None
+
+
+@dataclass
+class _ServiceClock:
+    """Serializes work through one control-plane component (M/D/1 server).
+
+    The paper's measured per-decision costs (§7.4): LBS routing ~190us,
+    SGS scheduling ~241us.  A single centralized scheduler at several
+    thousand RPS approaches rho=1 and its queue explodes — exactly the
+    §2.4 scalability argument; Archipelago spreads this cost over many
+    SGSs.
+    """
+
+    busy_until: float = 0.0
+
+    def acquire(self, now: float, service: float) -> float:
+        start = max(now, self.busy_until)
+        self.busy_until = start + service
+        return self.busy_until
+
+
+# §7.4 measured control-plane decision costs
+LB_DECISION_COST = 190e-6
+SGS_DECISION_COST = 241e-6
+
+
+def run_archipelago(spec: WorkloadSpec,
+                    cluster: Optional[ClusterConfig] = None,
+                    sgs_cfg: Optional[SGSConfig] = None,
+                    lbs_cfg: Optional[LBSConfig] = None,
+                    seed: int = 0,
+                    drain: float = 5.0,
+                    lb_cost: float = LB_DECISION_COST,
+                    sgs_cost: float = SGS_DECISION_COST,
+                    n_lbs: int = 4) -> SimResult:
+    env = SimEnv()
+    lbs = build_cluster(env, cluster, sgs_cfg, lbs_cfg)
+    metrics = Metrics()
+    lb_clocks = [_ServiceClock() for _ in range(max(1, n_lbs))]
+    sgs_clocks = {sid: _ServiceClock() for sid in lbs.sgss}
+
+    arrivals = spec.generate(seed)
+    for i, (t, dag) in enumerate(arrivals):
+        def fire(t=t, dag=dag, i=i):
+            req = Request(dag=dag, arrival_time=env.now())
+            metrics.requests.append(req)
+            # hop 1: LBS routing decision (LBS is a scalable service: many LBs)
+            t_routed = lb_clocks[i % len(lb_clocks)].acquire(env.now(), lb_cost)
+            sgs = lbs.select(req, env.now())
+            # hop 2: SGS scheduling decision, serialized per SGS
+            t_sched = sgs_clocks[sgs.sgs_id].acquire(
+                t_routed, sgs_cost * len(dag.functions))
+            env.call_at(t_sched, lambda: sgs.submit_request(req))
+        env.call_at(t, fire)
+
+    # periodic scaling pass (the LBS's background loop, §5.2)
+    lcfg = lbs.cfg
+    env.every(lcfg.decision_interval / 5.0,
+              lambda: lbs.check_scaling(env.now()),
+              until=spec.duration + drain)
+
+    env.run_until(spec.duration + drain)
+    for s in lbs.sgss.values():
+        metrics.queuing_delays.extend(s.queuing_delays)
+    return SimResult(metrics=metrics, env=env, lbs=lbs)
+
+
+def run_baseline(spec: WorkloadSpec,
+                 cluster: Optional[ClusterConfig] = None,
+                 keepalive: float = 900.0,
+                 seed: int = 0,
+                 drain: float = 5.0,
+                 sched_cost: float = SGS_DECISION_COST) -> SimResult:
+    """Centralized FIFO + reactive sandboxes + fixed keep-alive (§7.1).
+
+    The single scheduler's per-decision cost is serialized: at cluster-scale
+    RPS it becomes the bottleneck (§2.4), exactly as in the testbed."""
+    env = SimEnv()
+    workers = build_flat_workers(cluster)
+    sched = CentralizedFIFO(workers, env, keepalive=keepalive)
+    metrics = Metrics()
+    clock = _ServiceClock()
+    for t, dag in spec.generate(seed):
+        def fire(t=t, dag=dag):
+            req = Request(dag=dag, arrival_time=env.now())
+            metrics.requests.append(req)
+            t_sched = clock.acquire(env.now(), sched_cost * len(dag.functions))
+            env.call_at(t_sched, lambda: sched.submit_request(req))
+        env.call_at(t, fire)
+    env.run_until(spec.duration + drain)
+    metrics.queuing_delays.extend(sched.queuing_delays)
+    return SimResult(metrics=metrics, env=env, scheduler=sched)
+
+
+def run_sparrow(spec: WorkloadSpec,
+                cluster: Optional[ClusterConfig] = None,
+                probes: int = 2,
+                seed: int = 0,
+                drain: float = 5.0) -> SimResult:
+    env = SimEnv()
+    workers = build_flat_workers(cluster)
+    sched = SparrowScheduler(workers, env, probes=probes, seed=seed)
+    metrics = Metrics()
+    for t, dag in spec.generate(seed):
+        def fire(t=t, dag=dag):
+            req = Request(dag=dag, arrival_time=env.now())
+            metrics.requests.append(req)
+            sched.submit_request(req)
+        env.call_at(t, fire)
+    env.run_until(spec.duration + drain)
+    metrics.queuing_delays.extend(sched.queuing_delays)
+    return SimResult(metrics=metrics, env=env, scheduler=sched)

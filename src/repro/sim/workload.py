@@ -1,0 +1,242 @@
+"""Workload generators reproducing §7.1 Table 1.
+
+Four DAG classes:
+  C1  single function, short exec, tight deadline        (user-facing)
+  C2  single function, short exec, looser deadline       (non-critical UI)
+  C3  chained functions, medium exec, relatively strict  (expensive UI)
+  C4  branched DAG, high exec, loose deadline            (background batch)
+
+Workload 1: Poisson arrivals whose mean rate is resampled every second.
+Workload 2: sinusoidal rate  lam(t) = avg + amp * sin(2*pi*t / period).
+"""
+from __future__ import annotations
+
+import math
+import random
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Tuple
+
+from ..core.types import DagSpec, FunctionSpec
+
+# ---------------------------------------------------------------------------
+# Arrival processes (all produce non-homogeneous Poisson arrivals by sampling
+# counts over small sub-intervals, then spreading them uniformly inside)
+# ---------------------------------------------------------------------------
+
+
+class ArrivalProcess:
+    def rate(self, t: float) -> float:
+        raise NotImplementedError
+
+    def generate(self, t_end: float, rng: random.Random,
+                 dt: float = 0.01) -> List[float]:
+        out: List[float] = []
+        t = 0.0
+        while t < t_end:
+            lam = max(0.0, self.rate(t)) * dt
+            n = _poisson_sample(lam, rng)
+            for _ in range(n):
+                out.append(t + rng.random() * dt)
+            t += dt
+        out.sort()
+        return out
+
+
+def _poisson_sample(lam: float, rng: random.Random) -> int:
+    if lam <= 0:
+        return 0
+    if lam > 30:
+        # normal approximation for large means
+        return max(0, int(rng.gauss(lam, math.sqrt(lam)) + 0.5))
+    L = math.exp(-lam)
+    k, p = 0, 1.0
+    while True:
+        p *= rng.random()
+        if p <= L:
+            return k
+        k += 1
+
+
+@dataclass
+class ConstantRate(ArrivalProcess):
+    rps: float
+
+    def rate(self, t: float) -> float:
+        return self.rps
+
+
+@dataclass
+class Sinusoidal(ArrivalProcess):
+    avg: float
+    amplitude: float
+    period: float
+    phase: float = 0.0
+
+    def rate(self, t: float) -> float:
+        if not math.isfinite(self.period) or self.period <= 0:
+            return self.avg
+        return self.avg + self.amplitude * math.sin(
+            2 * math.pi * t / self.period + self.phase)
+
+
+@dataclass
+class OnOffRate(ArrivalProcess):
+    rps: float
+    on_duration: float
+    off_duration: float
+
+    def rate(self, t: float) -> float:
+        phase = t % (self.on_duration + self.off_duration)
+        return self.rps if phase < self.on_duration else 0.0
+
+
+@dataclass
+class PoissonResampled(ArrivalProcess):
+    """Workload 1: mean rate resampled every ``resample_every`` seconds."""
+
+    rps_range: Tuple[float, float]
+    resample_every: float = 1.0
+    seed: int = 0
+    _cache: Dict[int, float] = field(default_factory=dict)
+
+    def rate(self, t: float) -> float:
+        k = int(t / self.resample_every)
+        if k not in self._cache:
+            r = random.Random((self.seed << 20) ^ k)
+            lo, hi = self.rps_range
+            self._cache[k] = lo + r.random() * (hi - lo)
+        return self._cache[k]
+
+
+# ---------------------------------------------------------------------------
+# Paper DAG classes
+# ---------------------------------------------------------------------------
+
+
+def make_paper_dag(cls: str, dag_id: str, rng: random.Random,
+                   setup_range: Tuple[float, float] = (0.125, 0.400),
+                   ) -> DagSpec:
+    """Sample a DAG from class C1..C4 per Table 1.
+
+    Exec-time/slack ranges (seconds):
+      C1: exec [0.050,0.100], slack [0.100,0.150], single fn
+      C2: exec [0.100,0.200], slack [0.300,0.500], single fn
+      C3: exec [0.250,0.400] total over a 2-chain, slack [0.200,0.300]
+      C4: exec [0.300,0.600] per fn over a branched 4-fn DAG,
+          slack [0.500,1.000]
+    Sandbox setup overheads sampled from [125,400] ms (§7.1).
+    """
+    u = lambda lo, hi: lo + rng.random() * (hi - lo)
+    setup = u(*setup_range)
+    if cls == "C1":
+        e = u(0.050, 0.100)
+        fns = (FunctionSpec(f"{dag_id}/f0", e, mem_mb=128, setup_time=setup),)
+        edges: Tuple[Tuple[str, str], ...] = ()
+        cp = e
+        slack = u(0.100, 0.150)
+    elif cls == "C2":
+        e = u(0.100, 0.200)
+        fns = (FunctionSpec(f"{dag_id}/f0", e, mem_mb=128, setup_time=setup),)
+        edges = ()
+        cp = e
+        slack = u(0.300, 0.500)
+    elif cls == "C3":
+        total = u(0.250, 0.400)
+        e0, e1 = total * 0.5, total * 0.5
+        fns = (FunctionSpec(f"{dag_id}/f0", e0, mem_mb=128, setup_time=setup),
+               FunctionSpec(f"{dag_id}/f1", e1, mem_mb=128, setup_time=setup))
+        edges = ((f"{dag_id}/f0", f"{dag_id}/f1"),)
+        cp = total
+        slack = u(0.200, 0.300)
+    elif cls == "C4":
+        total = u(0.300, 0.600)     # Table 1 exec time is per-DAG total
+        e = [total / 4.0] * 4
+        names = [f"{dag_id}/f{i}" for i in range(4)]
+        fns = tuple(FunctionSpec(n, t, mem_mb=256, setup_time=setup)
+                    for n, t in zip(names, e))
+        # diamond: f0 -> (f1, f2) -> f3
+        edges = ((names[0], names[1]), (names[0], names[2]),
+                 (names[1], names[3]), (names[2], names[3]))
+        cp = e[0] + max(e[1], e[2]) + e[3]
+        slack = u(0.500, 1.000)
+    else:
+        raise ValueError(f"unknown class {cls}")
+    return DagSpec(dag_id=dag_id, functions=fns, edges=edges,
+                   deadline=cp + slack)
+
+
+@dataclass
+class WorkloadSpec:
+    """A set of (DAG, arrival process) tenants plus a duration."""
+
+    tenants: List[Tuple[DagSpec, ArrivalProcess]]
+    duration: float
+
+    def generate(self, seed: int = 0) -> List[Tuple[float, DagSpec]]:
+        """All (arrival_time, dag) pairs across tenants, time-sorted."""
+        rng = random.Random(seed)
+        out: List[Tuple[float, DagSpec]] = []
+        for i, (dag, proc) in enumerate(self.tenants):
+            sub = random.Random((seed << 16) ^ (i * 2654435761 & 0xFFFFFFFF))
+            for t in proc.generate(self.duration, sub):
+                out.append((t, dag))
+        out.sort(key=lambda p: p[0])
+        return out
+
+    def offered_core_load(self) -> float:
+        """Mean core-seconds demanded per second (for utilization checks)."""
+        total = 0.0
+        for dag, proc in self.tenants:
+            # average rate over the duration (coarse numeric mean)
+            n = 200
+            mean_rate = sum(max(0.0, proc.rate(self.duration * k / n))
+                            for k in range(n)) / n
+            work = sum(f.exec_time for f in dag.functions)
+            total += mean_rate * work
+        return total
+
+
+# -- the two macro workloads (§7.1), scalable for small machines ------------
+
+
+def paper_workload_1(duration: float = 30.0, scale: float = 1.0,
+                     dags_per_class: int = 2, seed: int = 7) -> WorkloadSpec:
+    """Poisson arrivals; mean resampled each second from per-class ranges."""
+    rng = random.Random(seed)
+    ranges = {"C1": (800, 1200), "C2": (600, 900),
+              "C3": (600, 800), "C4": (50, 150)}
+    tenants = []
+    for cls, (lo, hi) in ranges.items():
+        for k in range(dags_per_class):
+            dag = make_paper_dag(cls, f"{cls}-{k}", rng)
+            proc = PoissonResampled(
+                (lo * scale / dags_per_class, hi * scale / dags_per_class),
+                seed=seed ^ hash((cls, k)) & 0xFFFF)
+            tenants.append((dag, proc))
+    return WorkloadSpec(tenants, duration)
+
+
+def paper_workload_2(duration: float = 30.0, scale: float = 1.0,
+                     dags_per_class: int = 2, seed: int = 11) -> WorkloadSpec:
+    """Sinusoidal arrivals with Table 1 parameters."""
+    rng = random.Random(seed)
+    params = {  # avg-range, amplitude-range, period-range
+        "C1": ((600, 1200), (100, 800), (10, 20)),
+        "C2": ((400, 800), (200, 400), (30, 40)),
+        "C3": ((500, 1000), (200, 600), (10, 20)),
+        "C4": ((200, 200), (0, 0), (math.inf, math.inf)),
+    }
+    u = lambda lo, hi: lo if lo == hi else lo + rng.random() * (hi - lo)
+    tenants = []
+    for cls, (avg_r, amp_r, per_r) in params.items():
+        for k in range(dags_per_class):
+            dag = make_paper_dag(cls, f"{cls}-{k}", rng)
+            avg = u(*avg_r) * scale / dags_per_class
+            amp = u(*amp_r) * scale / dags_per_class
+            per = u(*per_r) if math.isfinite(per_r[0]) else math.inf
+            # keep instantaneous rate non-negative; random phase decorrelates
+            # tenant peaks (utilization oscillates rather than spiking as one)
+            amp = min(amp, avg)
+            tenants.append((dag, Sinusoidal(avg, amp, per,
+                                            phase=rng.random() * 2 * math.pi)))
+    return WorkloadSpec(tenants, duration)

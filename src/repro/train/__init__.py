@@ -1,0 +1,11 @@
+"""Training substrate: optimizer, schedules, data pipeline, checkpointing,
+and the canonical train_step used by the launcher and the dry-run."""
+from .optim import (AdamWState, adamw_init, adamw_update, cosine_schedule,
+                    make_schedule, wsd_schedule)
+from .data import DataConfig, Prefetcher, SyntheticLM
+from . import checkpoint
+from .steps import make_train_step
+
+__all__ = ["AdamWState", "adamw_init", "adamw_update", "cosine_schedule",
+           "make_schedule", "wsd_schedule", "DataConfig", "Prefetcher",
+           "SyntheticLM", "checkpoint", "make_train_step"]

@@ -1,0 +1,65 @@
+"""Checkpointing: pure-numpy .npz of a flattened pytree + JSON manifest.
+
+No orbax/flax dependency; supports save/restore of params + optimizer state
+with dtype/shape validation on restore.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree: Any) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        arr = np.asarray(leaf)
+        if arr.dtype.kind == "V" or str(arr.dtype) == "bfloat16":
+            # npz has no native bf16: stage through float32 (exact superset)
+            arr = np.asarray(leaf, dtype=np.float32)
+        flat[key] = arr
+    return flat
+
+
+def save(path: str, step: int, params: Any, opt_state: Any = None) -> None:
+    os.makedirs(path, exist_ok=True)
+    np.savez(os.path.join(path, f"step_{step:08d}.npz"),
+             **{f"p/{k}": v for k, v in _flatten(params).items()},
+             **({f"o/{k}": v for k, v in _flatten(opt_state).items()}
+                if opt_state is not None else {}))
+    with open(os.path.join(path, "manifest.json"), "w") as f:
+        json.dump({"latest_step": step}, f)
+
+
+def latest_step(path: str) -> int:
+    with open(os.path.join(path, "manifest.json")) as f:
+        return json.load(f)["latest_step"]
+
+
+def restore(path: str, step: int, params_like: Any,
+            opt_like: Any = None) -> Tuple[Any, Any]:
+    data = np.load(os.path.join(path, f"step_{step:08d}.npz"))
+
+    def rebuild(tree, prefix):
+        leaves, treedef = jax.tree_util.tree_flatten_with_path(tree)
+        out = []
+        for path, leaf in leaves:
+            key = prefix + "/".join(str(getattr(p, "key",
+                                                getattr(p, "idx", p)))
+                                    for p in path)
+            arr = data[key]
+            if arr.shape != leaf.shape:
+                raise ValueError(f"{key}: shape {arr.shape} != {leaf.shape}")
+            out.append(jnp.asarray(arr).astype(leaf.dtype))
+        return jax.tree_util.tree_unflatten(
+            jax.tree_util.tree_structure(tree), out)
+
+    p = rebuild(params_like, "p/")
+    o = rebuild(opt_like, "o/") if opt_like is not None else None
+    return p, o

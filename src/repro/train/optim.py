@@ -1,0 +1,101 @@
+"""Optimizers and LR schedules (no external deps).
+
+Includes the WSD (warmup-stable-decay) schedule MiniCPM introduced
+[arXiv:2404.06395] alongside the standard cosine schedule.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Callable, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+f32 = jnp.float32
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    mu: Any
+    nu: Any
+
+
+def adamw_init(params: Any) -> AdamWState:
+    zeros = lambda p: jnp.zeros_like(p, dtype=f32)
+    return AdamWState(step=jnp.zeros((), jnp.int32),
+                      mu=jax.tree.map(zeros, params),
+                      nu=jax.tree.map(zeros, params))
+
+
+def adamw_update(grads: Any, state: AdamWState, params: Any, *,
+                 lr: jnp.ndarray, b1: float = 0.9, b2: float = 0.95,
+                 eps: float = 1e-8, weight_decay: float = 0.1,
+                 grad_clip: float = 1.0) -> Tuple[Any, AdamWState]:
+    """Returns (new_params, new_state).  Global-norm clipping + decoupled WD."""
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(f32)))
+                         for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, grad_clip / jnp.maximum(gnorm, 1e-12))
+    step = state.step + 1
+    t = step.astype(f32)
+
+    def upd(g, m, v, p):
+        g = g.astype(f32) * scale
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        mhat = m / (1 - b1 ** t)
+        vhat = v / (1 - b2 ** t)
+        delta = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(f32)
+        return (p.astype(f32) - lr * delta).astype(p.dtype), m, v
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_m = treedef.flatten_up_to(state.mu)
+    flat_v = treedef.flatten_up_to(state.nu)
+    flat_p = treedef.flatten_up_to(params)
+    out = [upd(g, m, v, p) for g, m, v, p in
+           zip(flat_g, flat_m, flat_v, flat_p)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, AdamWState(step=step, mu=new_m, nu=new_v)
+
+
+# ---------------------------------------------------------------------------
+# LR schedules
+# ---------------------------------------------------------------------------
+
+
+def wsd_schedule(peak_lr: float, warmup: int, stable: int, decay: int,
+                 floor_frac: float = 0.1) -> Callable[[jnp.ndarray], jnp.ndarray]:
+    """Warmup-Stable-Decay (MiniCPM): linear warmup, flat plateau, then
+    exponential-style decay to floor_frac * peak."""
+
+    def sched(step):
+        s = step.astype(f32)
+        wu = peak_lr * jnp.minimum(s / max(1, warmup), 1.0)
+        in_decay = jnp.clip((s - warmup - stable) / max(1, decay), 0.0, 1.0)
+        decay_mult = (1.0 - in_decay) + floor_frac * in_decay
+        return jnp.where(s <= warmup + stable, wu, peak_lr * decay_mult)
+
+    return sched
+
+
+def cosine_schedule(peak_lr: float, warmup: int, total: int,
+                    floor_frac: float = 0.1) -> Callable[[jnp.ndarray], jnp.ndarray]:
+    def sched(step):
+        s = step.astype(f32)
+        wu = peak_lr * jnp.minimum(s / max(1, warmup), 1.0)
+        prog = jnp.clip((s - warmup) / max(1, total - warmup), 0.0, 1.0)
+        cos = floor_frac + (1 - floor_frac) * 0.5 * (1 + jnp.cos(math.pi * prog))
+        return jnp.where(s <= warmup, wu, peak_lr * cos)
+
+    return sched
+
+
+def make_schedule(kind: str, peak_lr: float, total_steps: int
+                  ) -> Callable[[jnp.ndarray], jnp.ndarray]:
+    warmup = max(1, total_steps // 20)
+    if kind == "wsd":
+        decay = max(1, total_steps // 10)
+        return wsd_schedule(peak_lr, warmup, total_steps - warmup - decay,
+                            decay)
+    return cosine_schedule(peak_lr, warmup, total_steps)

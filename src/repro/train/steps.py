@@ -1,0 +1,32 @@
+"""Canonical jitted steps: train_step (loss + AdamW) and serve steps.
+
+These are the functions the dry-run lowers for every (arch x shape x mesh).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models import lm_loss
+from ..models.config import ModelConfig
+from .optim import adamw_init, adamw_update, make_schedule
+
+
+def make_train_step(cfg: ModelConfig, total_steps: int = 10_000,
+                    peak_lr: float = 3e-4,
+                    ) -> Callable[..., Tuple[Any, Any, jnp.ndarray]]:
+    """Returns train_step(params, opt_state, tokens[, frontend]) ->
+    (params, opt_state, loss)."""
+    sched = make_schedule(cfg.lr_schedule, peak_lr, total_steps)
+
+    def train_step(params, opt_state, tokens, frontend=None):
+        loss, grads = jax.value_and_grad(
+            lambda p: lm_loss(cfg, p, tokens, frontend))(params)
+        lr = sched(opt_state.step + 1)
+        params, opt_state = adamw_update(grads, opt_state, params, lr=lr)
+        return params, opt_state, loss
+
+    return train_step

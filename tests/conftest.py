@@ -1,0 +1,5 @@
+import os
+
+# Smoke tests and benches must see the host's real (single) CPU device —
+# only launch/dryrun.py forces 512 placeholder devices.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")

@@ -1,0 +1,112 @@
+"""Fault-tolerance tests (§6.1): worker fail-stop, SGS/LB state recovery."""
+import pytest
+
+from repro.core import (ClusterConfig, Request, SGSConfig,
+                        SemiGlobalScheduler, Worker)
+from repro.core.cluster import build_cluster
+from repro.core.fault import (StateStore, checkpoint_lbs, checkpoint_sgs,
+                              fail_worker, restore_lbs, restore_sgs)
+from repro.core.types import DagSpec, FunctionSpec
+from repro.sim import ConstantRate, WorkloadSpec
+from repro.sim.engine import SimEnv
+
+
+def _dag(dag_id="d", exec_time=0.1, slack=0.3):
+    return DagSpec(dag_id,
+                   (FunctionSpec(f"{dag_id}/f", exec_time, setup_time=0.2),),
+                   (), deadline=exec_time + slack)
+
+
+def test_worker_failure_retries_inflight():
+    env = SimEnv()
+    workers = [Worker(worker_id=i, cores=2, pool_mem_mb=4096)
+               for i in range(3)]
+    sgs = SemiGlobalScheduler(0, workers, env)
+    dag = _dag()
+    reqs = [Request(dag=dag, arrival_time=0.0) for _ in range(4)]
+    for r in reqs:
+        sgs.submit_request(r)
+    env.run_until(0.05)                 # executions in flight (exec 0.1s)
+    victim = next(w for w in sgs.workers if w.busy_cores > 0)
+    n_retry = fail_worker(sgs, victim.worker_id)
+    assert n_retry > 0
+    assert victim not in sgs.workers
+    env.run_until(5.0)
+    # every request still completes exactly once
+    assert all(r.completion_time is not None for r in reqs)
+    assert len(sgs.completed_requests) == len(reqs)
+
+
+def test_worker_failure_under_load_recovers_deadlines():
+    """Lost capacity shows up as queuing delay; the LBS scales the DAG out
+    (the paper's §6.1 argument); steady state recovers."""
+    env = SimEnv()
+    cc = ClusterConfig(n_sgs=3, workers_per_sgs=3, cores_per_worker=4)
+    lbs = build_cluster(env, cc)
+    dag = _dag(exec_time=0.08, slack=0.25)
+    from repro.sim.metrics import Metrics
+    metrics = Metrics()
+    spec = WorkloadSpec([(dag, ConstantRate(80.0))], 12.0)
+    for t, d in spec.generate(0):
+        def fire(t=t, d=d):
+            req = Request(dag=d, arrival_time=env.now())
+            metrics.requests.append(req)
+            lbs.route(req, env.now())
+        env.call_at(t, fire)
+    env.every(0.05, lambda: lbs.check_scaling(env.now()), until=12.0)
+
+    # at t=4s, kill 2 of the home SGS's 3 workers
+    home = lbs.sgss[lbs.ring.lookup("d")]
+
+    def inject():
+        ids = [w.worker_id for w in home.workers[:2]]
+        for wid in ids:
+            fail_worker(home, wid)
+
+    env.call_at(4.0, inject)
+    env.run_until(14.0)
+    m = metrics.after_warmup(6.0)       # post-failure steady state
+    assert m.deadline_met_frac() > 0.9
+    assert len(m.completed) == len(m.requests)
+    # capacity loss forced a scale-out
+    assert lbs.n_active("d") >= 2
+
+
+def test_sgs_state_recovery_from_store():
+    env = SimEnv()
+    workers = [Worker(worker_id=i, cores=2, pool_mem_mb=4096)
+               for i in range(2)]
+    sgs = SemiGlobalScheduler(0, workers, env)
+    dag = _dag()
+    for _ in range(5):
+        sgs.submit_request(Request(dag=dag, arrival_time=env.now()))
+    env.run_until(1.0)                  # estimator ticks, demand set
+    store = StateStore()
+    checkpoint_sgs(sgs, store)
+    assert store.n_writes >= 3
+
+    # fresh instance (same id, fresh pool) restores and re-allocates
+    w2 = [Worker(worker_id=10 + i, cores=2, pool_mem_mb=4096)
+          for i in range(2)]
+    sgs2 = SemiGlobalScheduler(0, w2, env)
+    restore_sgs(sgs2, store, env.now())
+    assert dag.dag_id in sgs2._dags
+    old_demand = sgs.sandboxes.demand_map.get("d/f", 0)
+    if old_demand > 0:
+        assert sgs2.sandboxes.total_sandboxes("d/f") == old_demand
+
+
+def test_lbs_mapping_recovery_from_store():
+    env = SimEnv()
+    cc = ClusterConfig(n_sgs=4, workers_per_sgs=2, cores_per_worker=4)
+    lbs = build_cluster(env, cc)
+    dag = _dag()
+    st = lbs._state(dag, 0.0)
+    lbs._scale_out(st, 0.0)
+    store = StateStore()
+    checkpoint_lbs(lbs, store)
+
+    lbs2 = build_cluster(env, cc)
+    st2 = lbs2._state(dag, 0.0)         # re-register the DAG
+    restore_lbs(lbs2, store, 0.0)
+    assert lbs2._dag_state["d"].active == st.active

@@ -1,0 +1,112 @@
+"""LBS unit tests: lottery, scaling metric, gradual scale-out/in, hotspot
+damping."""
+import pytest
+
+from repro.core import ClusterConfig, LBSConfig, Request, SGSConfig
+from repro.core.cluster import build_cluster
+from repro.core.types import DagSpec, FunctionSpec
+from repro.sim.engine import SimEnv
+
+
+def _stack(n_sgs=4, lbs_cfg=None):
+    env = SimEnv()
+    lbs = build_cluster(env, ClusterConfig(n_sgs=n_sgs, workers_per_sgs=2,
+                                           cores_per_worker=4),
+                        lbs_cfg=lbs_cfg)
+    dag = DagSpec("d", (FunctionSpec("d/f", 0.1, setup_time=0.2),), (),
+                  deadline=0.3)
+    return env, lbs, dag
+
+
+def test_initial_sgs_via_consistent_hashing():
+    env, lbs, dag = _stack()
+    req = Request(dag=dag, arrival_time=0.0)
+    sgs = lbs.select(req, 0.0)
+    assert sgs.sgs_id == lbs.ring.lookup("d")
+    # all requests for the DAG go to the single active SGS initially
+    for _ in range(10):
+        assert lbs.select(Request(dag=dag, arrival_time=0.0),
+                          0.0).sgs_id == sgs.sgs_id
+
+
+def test_scaling_metric_normalized_by_slack():
+    env, lbs, dag = _stack()
+    st = lbs._state(dag, 0.0)
+    sid = st.active[0]
+    st.sandbox_count[sid] = 10
+    st.qdelay_ewma[sid] = 0.06                 # 60ms queuing delay
+    metric = lbs.scaling_metric(st)
+    assert metric == pytest.approx(0.06 / dag.slack)
+    assert metric > 0.29                       # would trigger SOT=0.3 ~ now
+
+
+def test_scale_out_adds_ring_successor_and_preallocates():
+    env, lbs, dag = _stack()
+    st = lbs._state(dag, 0.0)
+    first = st.active[0]
+    assert lbs._scale_out(st, 0.0)
+    assert len(st.active) == 2
+    succ = lbs.ring.successors("d")
+    assert st.active[1] == next(s for s in succ if s != first)
+    # gradual ramp: the new SGS received a preallocation demand
+    new_sgs = lbs.sgss[st.active[1]]
+    assert any(new_sgs.sandboxes.demand_map.values())
+
+
+def test_scale_in_moves_last_added_to_removed():
+    env, lbs, dag = _stack()
+    st = lbs._state(dag, 0.0)
+    lbs._scale_out(st, 0.0)
+    last = st.active[-1]
+    lbs._scale_in(st, 1.0)
+    assert last in st.removed and last not in st.active
+
+
+def test_hotspot_damping_shifts_lottery():
+    env, lbs, dag = _stack()
+    st = lbs._state(dag, 0.0)
+    lbs._scale_out(st, 0.0)
+    a, b = st.active
+    st.sandbox_count[a] = 50
+    st.sandbox_count[b] = 50
+    st.qdelay_ewma[a] = 10 * dag.slack       # a is a severe hotspot
+    st.qdelay_ewma[b] = 0.0
+    picks = [lbs._lottery(st) for _ in range(400)]
+    assert picks.count(b) > picks.count(a) * 3
+
+
+def test_instant_mode_round_robins():
+    env, lbs, dag = _stack(lbs_cfg=LBSConfig(gradual=False))
+    st = lbs._state(dag, 0.0)
+    lbs._scale_out(st, 0.0)
+    picks = {lbs._lottery(st) for _ in range(100)}
+    assert picks == set(st.active)
+
+
+def test_scale_in_patience_prevents_oscillation():
+    env, lbs, dag = _stack(lbs_cfg=LBSConfig(scale_in_patience=3,
+                                             decision_interval=0.1))
+    st = lbs._state(dag, 0.0)
+    lbs._scale_out(st, 0.0)
+    st.qdelay_samples = {s: 99 for s in st.active}
+    # metric ~ 0 (no queuing): needs 3 consecutive decisions to scale in
+    lbs.check_scaling(1.0)
+    assert len(st.active) == 2
+    st.qdelay_samples = {s: 99 for s in st.active}
+    lbs.check_scaling(2.0)
+    assert len(st.active) == 2
+    st.qdelay_samples = {s: 99 for s in st.active}
+    lbs.check_scaling(3.0)
+    assert len(st.active) == 1
+
+
+def test_sim_engine_ordering_and_every():
+    env = SimEnv()
+    seen = []
+    env.call_at(2.0, lambda: seen.append("b"))
+    env.call_at(1.0, lambda: seen.append("a"))
+    env.call_at(1.0, lambda: seen.append("a2"))     # FIFO on ties
+    env.every(1.0, lambda: seen.append("t"), until=3.5)
+    env.run_until(4.0)
+    assert seen == ["a", "a2", "t", "b", "t", "t"]
+    assert env.now() == 4.0

@@ -1,0 +1,135 @@
+"""Hypothesis property tests on system invariants."""
+import math
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (ConsistentHashRing, DagSpec, FunctionSpec,
+                        SandboxManager, Worker, poisson_ppf)
+from repro.core.estimator import _poisson_cdf
+
+
+# -- Poisson inverse CDF -----------------------------------------------------
+
+
+@given(p=st.floats(0.5, 0.9999), lam=st.floats(0.0, 300.0))
+@settings(max_examples=200, deadline=None)
+def test_ppf_is_inverse_cdf(p, lam):
+    n = poisson_ppf(p, lam)
+    assert _poisson_cdf(lam, n) >= p - 1e-12
+    if n > 0:
+        assert _poisson_cdf(lam, n - 1) < p + 1e-12
+
+
+@given(lam=st.floats(0.0, 100.0), p1=st.floats(0.5, 0.99),
+       dp=st.floats(0.0, 0.009))
+@settings(max_examples=100, deadline=None)
+def test_ppf_monotone_in_p(lam, p1, dp):
+    assert poisson_ppf(p1 + dp, lam) >= poisson_ppf(p1, lam)
+
+
+@given(p=st.floats(0.5, 0.999), lam=st.floats(0.0, 100.0),
+       dl=st.floats(0.0, 10.0))
+@settings(max_examples=100, deadline=None)
+def test_ppf_monotone_in_lambda(p, lam, dl):
+    assert poisson_ppf(p, lam + dl) >= poisson_ppf(p, lam)
+
+
+# -- even placement invariant (§4.3.2) ---------------------------------------
+
+
+@given(n_workers=st.integers(1, 12), demand=st.integers(0, 40))
+@settings(max_examples=80, deadline=None)
+def test_even_placement_max_min_gap(n_workers, demand):
+    ws = [Worker(worker_id=i, cores=4, pool_mem_mb=1e6)
+          for i in range(n_workers)]
+    mgr = SandboxManager(workers=ws)
+    f = FunctionSpec("f", 0.1, mem_mb=128)
+    mgr.set_demand(f, demand, now=0.0)
+    counts = mgr.counts_per_worker("f")
+    assert sum(counts) == demand
+    assert max(counts) - min(counts) <= 1
+
+
+@given(n_workers=st.integers(1, 8),
+       seq=st.lists(st.integers(0, 30), min_size=1, max_size=12))
+@settings(max_examples=60, deadline=None)
+def test_placement_balance_under_demand_sequence(n_workers, seq):
+    """After any sequence of demand changes, schedulable sandboxes stay
+    balanced and never exceed demand."""
+    ws = [Worker(worker_id=i, cores=4, pool_mem_mb=1e6)
+          for i in range(n_workers)]
+    mgr = SandboxManager(workers=ws)
+    f = FunctionSpec("f", 0.1, mem_mb=128)
+    t = 0.0
+    for d in seq:
+        mgr.set_demand(f, d, now=t)
+        t += 0.1
+        counts = mgr.counts_per_worker("f")
+        assert sum(counts) == d
+        assert max(counts) - min(counts) <= 1
+
+
+# -- memory safety ------------------------------------------------------------
+
+
+@given(demands=st.lists(st.tuples(st.integers(0, 20),
+                                  st.sampled_from([64.0, 128.0, 256.0])),
+                        min_size=1, max_size=6))
+@settings(max_examples=60, deadline=None)
+def test_pool_memory_never_exceeded(demands):
+    ws = [Worker(worker_id=i, cores=4, pool_mem_mb=1024.0) for i in range(3)]
+    mgr = SandboxManager(workers=ws)
+    for i, (d, mem) in enumerate(demands):
+        f = FunctionSpec(f"f{i}", 0.1, mem_mb=mem)
+        mgr.set_demand(f, d, now=0.1 * i)
+    for w in ws:
+        assert w.used_pool_mem <= w.pool_mem_mb + 1e-9
+
+
+# -- consistent hashing -------------------------------------------------------
+
+
+@given(ids=st.lists(st.integers(0, 1000), min_size=2, max_size=20,
+                    unique=True),
+       key=st.text(min_size=1, max_size=30))
+@settings(max_examples=80, deadline=None)
+def test_ring_lookup_stable_and_member(ids, key):
+    ring = ConsistentHashRing(ids)
+    owner = ring.lookup(key)
+    assert owner in ids
+    assert ring.lookup(key) == owner
+    succ = ring.successors(key)
+    assert sorted(succ) == sorted(ids)
+
+
+@given(ids=st.lists(st.integers(0, 100), min_size=3, max_size=12,
+                    unique=True))
+@settings(max_examples=40, deadline=None)
+def test_ring_removal_only_moves_affected_keys(ids):
+    """Consistent hashing property: removing one node only remaps keys that
+    belonged to it."""
+    ring_a = ConsistentHashRing(ids)
+    removed = ids[0]
+    ring_b = ConsistentHashRing(ids[1:])
+    for i in range(50):
+        key = f"dag-{i}"
+        a = ring_a.lookup(key)
+        if a != removed:
+            assert ring_b.lookup(key) == a
+
+
+# -- DAG / slack --------------------------------------------------------------
+
+
+@given(times=st.lists(st.floats(0.01, 2.0), min_size=1, max_size=6),
+       slack=st.floats(0.0, 5.0))
+@settings(max_examples=60, deadline=None)
+def test_chain_critical_path_is_sum(times, slack):
+    fns = tuple(FunctionSpec(f"f{i}", t) for i, t in enumerate(times))
+    edges = tuple((f"f{i}", f"f{i+1}") for i in range(len(times) - 1))
+    dag = DagSpec("chain", fns, edges, deadline=sum(times) + slack)
+    assert abs(dag.critical_path_time() - sum(times)) < 1e-9
+    assert abs(dag.slack - slack) < 1e-6
+    # remaining critical path decreases along the chain
+    rcps = [dag.remaining_critical_path(f"f{i}") for i in range(len(times))]
+    assert all(a >= b - 1e-12 for a, b in zip(rcps, rcps[1:]))
