@@ -83,25 +83,25 @@ class CentralizedFIFO:
             sbx = Sandbox(fn=inv.fn, worker_id=w.worker_id,
                           state=SandboxState.BUSY,
                           ready_at=now + setup, last_used=now)
-            w.sandboxes.append(sbx)
+            w.add_sandbox(sbx)
         else:
             self.n_warm_hits += 1
             sbx.state = SandboxState.BUSY
             sbx.last_used = now
         self.env.call_after(setup + inv.fn.exec_time,
-                            lambda: self._complete(inv, w, sbx))
+                            self._complete, inv, w, sbx)
 
     def _make_room(self, w: Worker, mem_mb: float, now: float) -> None:
         """Keep-alive expiry first, then oldest-idle eviction if still full."""
-        for s in list(w.sandboxes):
+        for s in w.sandboxes:
             if (s.state == SandboxState.WARM
                     and now - s.last_used > self.keepalive):
-                w.sandboxes.remove(s)
+                w.remove_sandbox(s)
         while w.free_pool_mem < mem_mb:
             idle = [s for s in w.sandboxes if s.state == SandboxState.WARM]
             if not idle:
                 return
-            w.sandboxes.remove(min(idle, key=lambda s: s.last_used))
+            w.remove_sandbox(min(idle, key=lambda s: s.last_used))
 
     def _complete(self, inv: Invocation, w: Worker, sbx: Sandbox) -> None:
         now = self.env.now()
@@ -184,13 +184,12 @@ class SparrowScheduler:
                 sbx = Sandbox(fn=inv.fn, worker_id=w.worker_id,
                               state=SandboxState.BUSY,
                               ready_at=now + setup, last_used=now)
-                w.sandboxes.append(sbx)
+                w.add_sandbox(sbx)
             else:
                 self.n_warm_hits += 1
                 sbx.state = SandboxState.BUSY
-            self.env.call_after(
-                setup + inv.fn.exec_time,
-                lambda inv=inv, w=w, sbx=sbx: self._complete(inv, w, sbx))
+            self.env.call_after(setup + inv.fn.exec_time,
+                                self._complete, inv, w, sbx)
 
     def _complete(self, inv: Invocation, w: Worker, sbx: Sandbox) -> None:
         now = self.env.now()

@@ -69,7 +69,7 @@ def _refine_ppf(p: float, lam: float, n0: int, max_n: int) -> int:
     return n
 
 
-@dataclass
+@dataclass(slots=True)
 class RateEstimator:
     """EWMA arrival-rate estimator over fixed measurement intervals."""
 

@@ -104,10 +104,12 @@ def fail_worker(sgs: SemiGlobalScheduler, worker_id: int) -> int:
     w = next((w for w in sgs.workers if w.worker_id == worker_id), None)
     if w is None:
         return 0
-    sgs.workers.remove(w)
-    # also remove from the sandbox manager's pool view
-    if w in sgs.sandboxes.workers:
-        sgs.sandboxes.workers.remove(w)
+    # keep the SGS's free-core accounting consistent before the view changes
+    sgs._free_cores -= max(0, w.free_cores)
+    if sgs.workers is not sgs.sandboxes.workers:
+        sgs.workers.remove(w)
+    # removes from the manager's pool view and every per-function index
+    sgs.sandboxes.remove_worker(w)
     # retry in-flight invocations: the completion callbacks for this worker
     # become no-ops because the request is re-driven from the queue
     now = sgs.env.now()

@@ -128,6 +128,15 @@ class LoadBalancer:
         allocates more sandboxes, and earns even more tickets while its
         queue grows.
         """
+        if not self.cfg.gradual:
+            # instant-scaling ablation: plain round-robin over active SGSs
+            return st.active[self._rng.randrange(len(st.active))]
+        if len(st.active) == 1 and not st.removed:
+            # single-SGS fast path (the common case): the draw is a foregone
+            # conclusion, but still consume one uniform so the RNG stream —
+            # and therefore every later multi-SGS lottery — is unchanged
+            self._rng.random()
+            return st.active[0]
         slack = max(st.dag.slack, 1e-6)
 
         def damp(sid: int) -> float:
@@ -144,10 +153,6 @@ class LoadBalancer:
             tickets.append(self.cfg.discount_factor
                            * max(1.0, float(st.sandbox_count.get(sid, 0)))
                            / damp(sid))
-        if not self.cfg.gradual:
-            # instant-scaling ablation: plain round-robin over active SGSs
-            sid = st.active[self._rng.randrange(len(st.active))]
-            return sid
         total = sum(tickets)
         pick = self._rng.random() * total
         acc = 0.0

@@ -5,68 +5,288 @@ instance slots for the TPU adaptation) and a *proactive memory pool* — the
 admin-configured amount of memory usable for proactively allocated sandboxes.
 Sandboxes are soft state: they can always be evicted without correctness
 impact.
+
+Hot-path data structures
+------------------------
+The paper's own argument (§2.4, §7.4) is that per-decision scheduling cost
+bounds platform scale, so the simulator's decision loop must not be
+asymptotically worse than the system it models.  Every query the scheduler
+makes on the hot path is served from incrementally maintained indices:
+
+* ``Worker`` keeps per-``(fn, state)`` buckets (sorted by ``sbx_id``, i.e.
+  creation order, matching the legacy list-scan semantics exactly), an
+  incremental ``used_pool_mem`` and per-state counts — ``find``, ``count``,
+  ``warm_available`` and the memory properties are O(1) in the number of
+  resident sandboxes.
+* ``SandboxManager`` keeps per-function schedulable totals, per-function
+  sets of workers holding idle (WARM/ALLOCATING) and soft-evicted sandboxes,
+  and lazy min-heaps over ``(count, worker)`` keys so even/packed placement
+  and soft-eviction victim selection are O(log W) amortized per decision
+  instead of a full re-sort of the pool per allocated sandbox.
+
+All index maintenance is driven by ``Sandbox.state`` assignment (a property
+that notifies the owning worker) plus ``Worker.add_sandbox`` /
+``Worker.remove_sandbox``, so scheduler code and tests keep their original
+mutation style.  Decision order is bit-identical to the legacy scan code
+(certified by ``tests/test_equivalence.py`` against goldens from the
+scan-based reference; see ``benchmarks/equivalence_fingerprint.py``).
 """
 from __future__ import annotations
 
+import heapq
+from bisect import insort
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Set, Tuple
 
 from .types import FunctionSpec, Sandbox, SandboxState
 
+_ALLOC = SandboxState.ALLOCATING
+_WARM = SandboxState.WARM
+_BUSY = SandboxState.BUSY
+_SOFT = SandboxState.SOFT_EVICTED
 
-@dataclass
+
+def _sbx_sort_key(s: "Sandbox") -> int:
+    return s.sbx_id
+
+
+class _FnBucket:
+    """Per-(worker, function) sandbox lists by state, each sorted by sbx_id
+    (creation order).  Plain attributes instead of an enum-keyed dict: state
+    bucketing is the single hottest lookup in the simulator and enum hashing
+    dominates it.  BUSY sandboxes are only ever *counted* on hot paths (the
+    scheduler never picks one), so they are tracked as a bare counter and
+    transitions in/out of BUSY skip all list maintenance."""
+
+    __slots__ = ("alloc", "warm", "soft", "busy_n")
+
+    def __init__(self):
+        self.alloc: List[Sandbox] = []
+        self.warm: List[Sandbox] = []
+        self.soft: List[Sandbox] = []
+        self.busy_n = 0
+
+    def list_for(self, state: SandboxState) -> Optional[List[Sandbox]]:
+        """The sorted list for a state; None for BUSY (counter-only)."""
+        if state is _WARM:
+            return self.warm
+        if state is _ALLOC:
+            return self.alloc
+        if state is _SOFT:
+            return self.soft
+        return None
+
+
 class Worker:
-    worker_id: int
-    cores: int = 4
-    pool_mem_mb: float = 4096.0     # proactive memory pool capacity
-    busy_cores: int = 0
-    sandboxes: List[Sandbox] = field(default_factory=list)
+    """One machine of an SGS's worker pool, with O(1) sandbox queries."""
+
+    __slots__ = ("worker_id", "cores", "pool_mem_mb", "busy_cores",
+                 "_sandboxes", "_buckets", "_used_pool_mem", "_n_busy",
+                 "owner", "pool_index")
+
+    def __init__(self, worker_id: int, cores: int = 4,
+                 pool_mem_mb: float = 4096.0, busy_cores: int = 0):
+        self.worker_id = worker_id
+        self.cores = cores
+        self.pool_mem_mb = pool_mem_mb          # proactive pool capacity
+        self.busy_cores = busy_cores
+        # sbx_id -> Sandbox; insertion order == sbx_id order (creation order)
+        self._sandboxes: Dict[int, Sandbox] = {}
+        # fn name -> per-state sandbox lists
+        self._buckets: Dict[str, _FnBucket] = {}
+        self._used_pool_mem = 0.0
+        self._n_busy = 0                        # BUSY *sandboxes* (not cores)
+        self.owner = None                       # set by SandboxManager
+        self.pool_index = worker_id             # position in the owner's pool
+
+    def __repr__(self) -> str:
+        return (f"Worker(worker_id={self.worker_id}, cores={self.cores}, "
+                f"pool_mem_mb={self.pool_mem_mb}, "
+                f"busy_cores={self.busy_cores}, "
+                f"n_sandboxes={len(self._sandboxes)})")
+
+    # -- membership -----------------------------------------------------------
+    @property
+    def sandboxes(self) -> List[Sandbox]:
+        """Resident sandboxes in creation order (a fresh list; mutate the
+        worker via ``add_sandbox``/``remove_sandbox``, never this list)."""
+        return list(self._sandboxes.values())
+
+    def add_sandbox(self, sbx: Sandbox) -> None:
+        self._sandboxes[sbx.sbx_id] = sbx
+        sbx._worker = self
+        name = sbx.fn.name
+        state = sbx.state
+        bucket = self._buckets.get(name)
+        if bucket is None:
+            bucket = self._buckets[name] = _FnBucket()
+        if state is _BUSY:
+            bucket.busy_n += 1
+            self._n_busy += 1
+        else:
+            # a brand-new sandbox always has the largest sbx_id: append keeps
+            # the bucket sorted
+            bucket.list_for(state).append(sbx)
+        self._used_pool_mem += sbx.fn.mem_mb
+        if self.owner is not None:
+            self.owner._note(self, name, 0 if state is _SOFT else 1, False,
+                             state is not _BUSY, state is _SOFT)
+
+    def remove_sandbox(self, sbx: Sandbox) -> None:
+        del self._sandboxes[sbx.sbx_id]
+        name = sbx.fn.name
+        state = sbx.state
+        bucket = self._buckets[name]
+        if state is _BUSY:
+            bucket.busy_n -= 1
+            self._n_busy -= 1
+        else:
+            bucket.list_for(state).remove(sbx)
+        self._used_pool_mem -= sbx.fn.mem_mb
+        sbx._worker = None
+        if self.owner is not None:
+            self.owner._note(self, name, 0 if state is _SOFT else -1, False,
+                             state is not _BUSY, state is _SOFT)
+
+    def _reindex(self, sbx: Sandbox, old: SandboxState,
+                 new: SandboxState) -> None:
+        """Called by the ``Sandbox.state`` setter: move between buckets."""
+        bucket = self._buckets[sbx.fn.name]
+        lst = bucket.list_for(old)
+        if lst is None:
+            bucket.busy_n -= 1
+            self._n_busy -= 1
+        else:
+            lst.remove(sbx)
+        lst = bucket.list_for(new)
+        if lst is None:
+            bucket.busy_n += 1
+            self._n_busy += 1
+        else:
+            insort(lst, sbx, key=_sbx_sort_key)
+        if self.owner is not None:
+            delta = ((0 if new is _SOFT else 1)
+                     - (0 if old is _SOFT else 1))
+            soft_touched = old is _SOFT or new is _SOFT
+            self.owner._note(
+                self, sbx.fn.name, delta, old is _BUSY,
+                old is _BUSY or new is _BUSY or soft_touched, soft_touched)
 
     # -- memory ---------------------------------------------------------------
     @property
     def used_pool_mem(self) -> float:
-        return sum(s.fn.mem_mb for s in self.sandboxes)
+        return self._used_pool_mem
 
     @property
     def free_pool_mem(self) -> float:
-        return self.pool_mem_mb - self.used_pool_mem
+        return self.pool_mem_mb - self._used_pool_mem
 
     @property
     def free_cores(self) -> int:
         return self.cores - self.busy_cores
 
     # -- sandbox queries ------------------------------------------------------
+    def bucket_len(self, fn_name: str, state: SandboxState) -> int:
+        b = self._buckets.get(fn_name)
+        if b is None:
+            return 0
+        lst = b.list_for(state)
+        return b.busy_n if lst is None else len(lst)
+
     def count(self, fn_name: str, *states: SandboxState) -> int:
         states = states or tuple(SandboxState)
-        return sum(1 for s in self.sandboxes
-                   if s.fn.name == fn_name and s.state in states)
+        return sum(self.bucket_len(fn_name, st) for st in states)
 
     def schedulable_count(self, fn_name: str) -> int:
         """Sandboxes counted for placement decisions: everything except
         soft-evicted (those are invisible to the scheduler, §4.3.3)."""
-        return self.count(fn_name, SandboxState.ALLOCATING,
-                          SandboxState.WARM, SandboxState.BUSY)
+        b = self._buckets.get(fn_name)
+        if b is None:
+            return 0
+        return len(b.alloc) + len(b.warm) + b.busy_n
+
+    def idle_count(self, fn_name: str) -> int:
+        """WARM + ALLOCATING (schedulable and not executing)."""
+        b = self._buckets.get(fn_name)
+        if b is None:
+            return 0
+        return len(b.alloc) + len(b.warm)
+
+    def has_non_busy_sandbox(self) -> bool:
+        return len(self._sandboxes) > self._n_busy
 
     def find(self, fn_name: str, state: SandboxState) -> Optional[Sandbox]:
-        for s in self.sandboxes:
-            if s.fn.name == fn_name and s.state == state:
-                return s
-        return None
+        """Earliest-created resident sandbox of ``fn_name`` in ``state``.
+        (BUSY sandboxes are tracked as a counter; finding one falls back to
+        the ordered residency map — a cold path the scheduler never takes.)"""
+        b = self._buckets.get(fn_name)
+        if b is None:
+            return None
+        lst = b.list_for(state)
+        if lst is None:
+            for s in self._sandboxes.values():
+                if s.fn.name == fn_name and s.state is _BUSY:
+                    return s
+            return None
+        return lst[0] if lst else None
+
+    def has_ready_soft(self, fn_name: str, now: float) -> bool:
+        b = self._buckets.get(fn_name)
+        if b is None:
+            return False
+        for s in b.soft:
+            if s.ready_at <= now:
+                return True
+        return False
 
     def warm_available(self, fn_name: str, now: float) -> Optional[Sandbox]:
-        """A sandbox ready for immediate reuse.  ALLOCATING sandboxes whose
-        setup has finished transition to WARM lazily here."""
-        for s in self.sandboxes:
-            if s.fn.name != fn_name:
-                continue
-            if s.state == SandboxState.ALLOCATING and s.ready_at <= now + 1e-12:
-                s.state = SandboxState.WARM
-            if s.state == SandboxState.WARM and s.ready_at <= now + 1e-12:
-                return s
-        return None
+        """A sandbox ready for immediate reuse: the earliest-created WARM or
+        ALLOCATING sandbox whose setup has finished.  An ALLOCATING sandbox
+        transitions to WARM lazily here (legacy scan semantics: only the
+        returned sandbox is promoted)."""
+        b = self._buckets.get(fn_name)
+        if b is None:
+            return None
+        cutoff = now + 1e-12
+        best: Optional[Sandbox] = None
+        for s in b.alloc:
+            if s.ready_at <= cutoff:
+                best = s
+                break
+        for s in b.warm:
+            if s.ready_at <= cutoff:
+                if best is None or s.sbx_id < best.sbx_id:
+                    best = s
+                break
+        if best is not None and best.state is _ALLOC:
+            best.state = _WARM
+        return best
 
 
 AllocHook = Callable[[Sandbox, Worker], None]
+
+
+def _pool_key(w: Worker) -> int:
+    return w.pool_index
+
+
+_EMPTY: List[Worker] = []
+
+
+class _FnIndex:
+    """Per-function manager-level indices: schedulable total, worker sets by
+    residency kind, and the lazy placement/eviction heaps."""
+
+    __slots__ = ("total", "idle", "soft", "place_heap", "evict_heap",
+                 "idle_sorted")
+
+    def __init__(self):
+        self.total = 0                      # schedulable sandboxes, all workers
+        self.idle: Set[Worker] = set()      # workers with WARM/ALLOCATING
+        self.soft: Set[Worker] = set()      # workers with SOFT_EVICTED
+        self.place_heap: List[Tuple[int, int]] = []
+        self.evict_heap: List[Tuple[int, int]] = []
+        self.idle_sorted: Optional[List[Worker]] = None   # cache, pool order
 
 
 @dataclass
@@ -78,6 +298,11 @@ class SandboxManager:
     estimator's target each tick (rather than diffing successive estimates):
     this self-heals after hard evictions and reactive cold-start allocations
     change the real count behind the estimator's back.
+
+    Placement and soft-eviction consult lazily invalidated heaps of
+    ``(schedulable_count, worker_id)`` keys: every count change pushes a
+    fresh entry; stale entries are discarded at pop.  The pop order equals
+    the legacy per-sandbox full re-sort of the pool, at O(log W) amortized.
     """
 
     workers: List[Worker]
@@ -99,6 +324,169 @@ class SandboxManager:
     n_allocations: int = 0
     n_revivals: int = 0
 
+    # -- indices (all incremental; see class docstring) ----------------------
+    _by_id: Dict[int, Worker] = field(
+        default_factory=dict, init=False, repr=False)
+    _fns: Dict[str, "_FnIndex"] = field(
+        default_factory=dict, init=False, repr=False)
+
+    def __post_init__(self) -> None:
+        for i, w in enumerate(self.workers):
+            w.owner = self
+            w.pool_index = i
+            self._by_id[w.worker_id] = w
+
+    # ---------------------------------------------------------- heap keying
+    def _place_key(self, count: int, wid: int) -> Tuple[int, int]:
+        # even: min count first; packed: max count first — ties by worker_id,
+        # exactly the legacy ``sorted`` keys
+        return (-count, wid) if self.placement == "packed" else (count, wid)
+
+    def _evict_key(self, count: int, wid: int) -> Tuple[int, int]:
+        # mirror image of placement (Pseudocode 1 lines 11-15)
+        return (count, wid) if self.placement == "packed" else (-count, wid)
+
+    def _ensure_fn(self, fn_name: str) -> "_FnIndex":
+        fi = self._fns.get(fn_name)
+        if fi is not None:
+            return fi
+        fi = _FnIndex()
+        for w in self.workers:
+            c = w.schedulable_count(fn_name)
+            fi.total += c
+            fi.place_heap.append(self._place_key(c, w.worker_id))
+            fi.evict_heap.append(self._evict_key(c, w.worker_id))
+            if w.idle_count(fn_name):
+                fi.idle.add(w)
+            if w.bucket_len(fn_name, _SOFT):
+                fi.soft.add(w)
+        heapq.heapify(fi.place_heap)
+        heapq.heapify(fi.evict_heap)
+        self._fns[fn_name] = fi
+        return fi
+
+    def _note(self, w: Worker, fn_name: str, sched_delta: int,
+              gained_idle: bool = False, touched_idle: bool = True,
+              touched_soft: bool = True) -> None:
+        """Worker-event hook: a sandbox of ``fn_name`` on ``w`` was added,
+        removed, or changed state.  Keeps totals, sets and heaps in sync.
+        ``touched_idle``/``touched_soft`` let callers skip set maintenance
+        for transitions that provably cannot change membership."""
+        fi = self._fns.get(fn_name)
+        if fi is None:
+            # first event for this function: build everything from current
+            # state (which already includes this event)
+            self._ensure_fn(fn_name)
+            return
+        fi.total += sched_delta
+        b = w._buckets[fn_name]         # exists: this event touched it
+        if touched_idle:
+            if b.alloc or b.warm:
+                if w not in fi.idle:
+                    fi.idle.add(w)
+                    fi.idle_sorted = None
+            elif w in fi.idle:
+                fi.idle.remove(w)
+                fi.idle_sorted = None
+        if touched_soft:
+            if b.soft:
+                fi.soft.add(w)
+            else:
+                fi.soft.discard(w)
+        if sched_delta or gained_idle:
+            c = len(b.alloc) + len(b.warm) + b.busy_n
+            wid = w.worker_id
+            cap = 64 + 8 * len(self.workers)
+            if sched_delta:
+                # placement validity depends only on the count, so the place
+                # heap needs no entry for pure BUSY->WARM candidacy changes
+                heap = fi.place_heap
+                heapq.heappush(heap, self._place_key(c, wid))
+                if len(heap) > cap:     # bound lazy-entry growth
+                    self._compact(fn_name, heap, self._place_key)
+            heap = fi.evict_heap
+            heapq.heappush(heap, self._evict_key(c, wid))
+            if len(heap) > cap:
+                self._compact(fn_name, heap, self._evict_key)
+
+    def _compact(self, fn_name: str, heap: List[Tuple[int, int]],
+                 keyer: Callable[[int, int], Tuple[int, int]]) -> None:
+        """Rebuild a lazy heap from current counts (drops stale entries)."""
+        heap[:] = [keyer(w.schedulable_count(fn_name), w.worker_id)
+                   for w in self.workers]
+        heapq.heapify(heap)
+
+    # ------------------------------------------------- fused hot transitions
+    def mark_busy(self, w: Worker, sbx: Sandbox) -> None:
+        """WARM -> BUSY (warm dispatch hit), fused: equivalent to
+        ``sbx.state = BUSY`` but with the generic reindex/note cascade
+        hand-inlined — this transition changes no schedulable count and can
+        only *shrink* idle membership, so no heap entries are needed."""
+        b = w._buckets[sbx.fn.name]
+        b.warm.remove(sbx)
+        b.busy_n += 1
+        w._n_busy += 1
+        sbx._state = _BUSY
+        if not (b.warm or b.alloc):
+            fi = self._fns[sbx.fn.name]
+            fi.idle.discard(w)
+            fi.idle_sorted = None
+
+    def mark_warm(self, w: Worker, sbx: Sandbox) -> None:
+        """BUSY -> WARM (completion), fused mirror of ``mark_busy``; pushes
+        the one eviction-heap entry the worker gains candidacy with."""
+        name = sbx.fn.name
+        b = w._buckets[name]
+        insort(b.warm, sbx, key=_sbx_sort_key)
+        b.busy_n -= 1
+        w._n_busy -= 1
+        sbx._state = _WARM
+        fi = self._fns[name]
+        if w not in fi.idle:
+            fi.idle.add(w)
+            fi.idle_sorted = None
+        heap = fi.evict_heap
+        heapq.heappush(heap, self._evict_key(
+            len(b.alloc) + len(b.warm) + b.busy_n, w.worker_id))
+        if len(heap) > 64 + 8 * len(self.workers):
+            self._compact(name, heap, self._evict_key)
+
+    # -------------------------------------------------------- SGS-side views
+    def idle_workers(self, fn_name: str) -> List[Worker]:
+        """Workers holding a WARM/ALLOCATING sandbox of ``fn_name``, in pool
+        order (the dispatcher's warm-candidate index).  The sorted view is
+        cached and invalidated only when membership changes."""
+        fi = self._fns.get(fn_name)
+        if fi is None or not fi.idle:
+            return _EMPTY
+        lst = fi.idle_sorted
+        if lst is None:
+            lst = fi.idle_sorted = sorted(fi.idle, key=_pool_key)
+        return lst
+
+    def has_soft_workers(self, fn_name: str) -> bool:
+        fi = self._fns.get(fn_name)
+        return fi is not None and bool(fi.soft)
+
+    def remove_worker(self, w: Worker) -> None:
+        """Fail-stop removal (§6.1): drop the worker and its sandboxes from
+        every index."""
+        if w.worker_id not in self._by_id:
+            return
+        del self._by_id[w.worker_id]
+        if w in self.workers:
+            self.workers.remove(w)
+        for fn_name in w._buckets:
+            fi = self._fns.get(fn_name)
+            if fi is None:
+                continue
+            fi.total -= w.schedulable_count(fn_name)
+            if w in fi.idle:
+                fi.idle.remove(w)
+                fi.idle_sorted = None
+            fi.soft.discard(w)
+        w.owner = None
+
     # ------------------------------------------------------------------ API
     def set_demand(self, fn: FunctionSpec, new_demand: int, now: float) -> None:
         """SANDBOXMANAGEMENT(D): allocate when demand rises above the actual
@@ -118,40 +506,44 @@ class SandboxManager:
         the maximum (packed ablation); prefer reviving a soft-evicted sandbox
         there (free), else allocate from the pool, hard-evicting *surplus*
         sandboxes if the pool is saturated."""
+        heap = self._ensure_fn(fn.name).place_heap
+        packed = self.placement == "packed"
         for _ in range(n):
             placed = False
-            for w in self._placement_order(fn.name):
-                revived = w.find(fn.name, SandboxState.SOFT_EVICTED)
+            stash: List[Tuple[int, int]] = []
+            while heap:
+                entry = heapq.heappop(heap)
+                cnt, wid = entry
+                if packed:
+                    cnt = -cnt
+                w = self._by_id.get(wid)
+                if w is None or w.schedulable_count(fn.name) != cnt:
+                    continue            # dead worker or stale count
+                revived = w.find(fn.name, _SOFT)
                 if revived is not None:
                     # Preferentially unmark a soft-evicted sandbox: free.
-                    revived.state = (SandboxState.WARM
-                                     if revived.ready_at <= now
-                                     else SandboxState.ALLOCATING)
+                    revived.state = (_WARM if revived.ready_at <= now
+                                     else _ALLOC)
                     self.n_revivals += 1
                     placed = True
-                    break
-                if w.free_pool_mem < fn.mem_mb and not self._hard_evict(w, fn):
-                    continue        # this worker cannot host one; try next
-                sbx = Sandbox(fn=fn, worker_id=w.worker_id,
-                              state=SandboxState.ALLOCATING,
-                              ready_at=now + fn.setup_time, last_used=now)
-                w.sandboxes.append(sbx)
-                self.n_allocations += 1
-                if self.on_allocate is not None:
-                    self.on_allocate(sbx, w)
-                placed = True
+                elif (w.free_pool_mem >= fn.mem_mb
+                      or self._hard_evict(w, fn)):
+                    sbx = Sandbox(fn=fn, worker_id=w.worker_id,
+                                  state=_ALLOC,
+                                  ready_at=now + fn.setup_time, last_used=now)
+                    w.add_sandbox(sbx)
+                    self.n_allocations += 1
+                    if self.on_allocate is not None:
+                        self.on_allocate(sbx, w)
+                    placed = True
+                else:
+                    stash.append(entry)  # this worker cannot host; try next
+                    continue
                 break
+            for entry in stash:
+                heapq.heappush(heap, entry)
             if not placed:
                 return              # pool saturated with protected sandboxes
-
-    def _placement_order(self, fn_name: str) -> List[Worker]:
-        if self.placement == "packed":
-            return sorted(self.workers,
-                          key=lambda w: (-w.schedulable_count(fn_name),
-                                         w.worker_id))
-        return sorted(self.workers,
-                      key=lambda w: (w.schedulable_count(fn_name),
-                                     w.worker_id))
 
     # ----------------------------------------------------------- soft evict
     def soft_evict_sandboxes(self, fn: FunctionSpec, n: int) -> None:
@@ -159,23 +551,44 @@ class SandboxManager:
         holding the *max* sandboxes of this function and soft-evict one there,
         keeping the residue balanced for statistical multiplexing.  (In the
         packed ablation the mirror image is the *min* non-empty worker, so
-        packing is preserved.)"""
+        packing is preserved.)  Victim selection is O(log W) amortized via the
+        eviction heap + the per-worker state buckets."""
+        heap = self._ensure_fn(fn.name).evict_heap
+        packed = self.placement == "packed"
         for _ in range(n):
-            cands = [w for w in self.workers
-                     if w.find(fn.name, SandboxState.WARM) is not None
-                     or w.find(fn.name, SandboxState.ALLOCATING) is not None]
-            if not cands:
+            victim_worker: Optional[Worker] = None
+            while heap:
+                cnt, wid = heapq.heappop(heap)
+                if not packed:
+                    cnt = -cnt
+                w = self._by_id.get(wid)
+                if (w is None or w.schedulable_count(fn.name) != cnt
+                        or not w.idle_count(fn.name)):
+                    continue            # dead, stale, or no evictable sandbox
+                victim_worker = w
+                break
+            if victim_worker is None:
                 return
-            if self.placement == "packed":
-                w = min(cands, key=lambda w: (w.schedulable_count(fn.name),
-                                              w.worker_id))
-            else:
-                w = max(cands, key=lambda w: (w.schedulable_count(fn.name),
-                                              -w.worker_id))
-            sbx = (w.find(fn.name, SandboxState.WARM)
-                   or w.find(fn.name, SandboxState.ALLOCATING))
-            sbx.state = SandboxState.SOFT_EVICTED
+            sbx = (victim_worker.find(fn.name, _WARM)
+                   or victim_worker.find(fn.name, _ALLOC))
+            sbx.state = _SOFT           # hooks push refreshed heap entries
             self.n_soft_evictions += 1
+
+    # ------------------------------------------------------ reactive allocation
+    def reactive_allocate(self, w: Worker, fn: FunctionSpec,
+                          now: float) -> Optional[Sandbox]:
+        """Cold-start allocation on the dispatch critical path: make room via
+        hard eviction if the pool is full.  Returns ``None`` when the worker
+        cannot host the sandbox without harming a protected function — the
+        caller must fall back (another worker / requeue), never overcommit
+        the worker's proactive memory pool."""
+        if w.free_pool_mem < fn.mem_mb and not self._hard_evict(w, fn):
+            return None
+        sbx = Sandbox(fn=fn, worker_id=w.worker_id,
+                      state=_BUSY,
+                      ready_at=now + fn.setup_time, last_used=now)
+        w.add_sandbox(sbx)
+        return sbx
 
     # ----------------------------------------------------------- hard evict
     def _hard_evict(self, w: Worker, incoming: FunctionSpec) -> bool:
@@ -189,18 +602,14 @@ class SandboxManager:
         without harming a protected function.
         """
         while w.free_pool_mem < incoming.mem_mb:
-            cands = [s for s in w.sandboxes
-                     if s.state in (SandboxState.SOFT_EVICTED,
-                                    SandboxState.WARM,
-                                    SandboxState.ALLOCATING)
-                     and s.fn.name != incoming.name]
+            cands = [s for s in w._sandboxes.values()
+                     if s.state is not _BUSY and s.fn.name != incoming.name]
             if not cands:
                 return False
             if self.eviction == "lru":
                 victim = min(cands, key=lambda s: s.last_used)
             else:
-                soft = [s for s in cands
-                        if s.state == SandboxState.SOFT_EVICTED]
+                soft = [s for s in cands if s.state is _SOFT]
                 if soft:
                     victim = min(soft, key=self._fairness_key)
                 else:
@@ -209,13 +618,12 @@ class SandboxManager:
                     if not surplus:
                         return False   # all under-provisioned: back off
                     victim = min(surplus, key=self._fairness_key)
-            w.sandboxes.remove(victim)
+            w.remove_sandbox(victim)
             self.n_hard_evictions += 1
         return True
 
     def _surplus(self, fn_name: str) -> int:
-        alloc = self.total_sandboxes(fn_name)
-        return alloc - self.demand_map.get(fn_name, 0)
+        return self.total_sandboxes(fn_name) - self.demand_map.get(fn_name, 0)
 
     def _fairness_key(self, s: Sandbox) -> float:
         """abs(total allocation - estimated demand) for the sandbox's
@@ -224,7 +632,11 @@ class SandboxManager:
 
     # -------------------------------------------------------------- queries
     def total_sandboxes(self, fn_name: str) -> int:
-        return sum(w.schedulable_count(fn_name) for w in self.workers)
+        fi = self._fns.get(fn_name)
+        if fi is None:
+            # function never indexed: count once and start tracking
+            fi = self._ensure_fn(fn_name)
+        return fi.total
 
     def counts_per_worker(self, fn_name: str) -> List[int]:
         return [w.schedulable_count(fn_name) for w in self.workers]

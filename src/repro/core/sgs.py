@@ -19,10 +19,12 @@ from .types import (DagSpec, ExecuteFn, FunctionSpec, Invocation, Request,
 
 class Env(Protocol):
     """Minimal clock + timer interface implemented by repro.sim and
-    repro.serving."""
+    repro.serving.  Extra ``*args`` are passed to ``fn`` at fire time, which
+    lets hot paths avoid allocating a closure per deferred call."""
 
     def now(self) -> float: ...
-    def call_after(self, delay: float, fn: Callable[[], None]) -> None: ...
+    def call_after(self, delay: float, fn: Callable[..., None],
+                   *args) -> None: ...
 
 
 @dataclass
@@ -84,6 +86,9 @@ class SemiGlobalScheduler:
         # fault tolerance (§6.1): in-flight tracking + failed-worker view
         self._inflight: Dict[int, List[Invocation]] = {}
         self._dead_workers: Set[int] = set()
+        # incremental pool-wide free-core count: _dispatch's work-conserving
+        # loop gate is O(1) instead of an O(W) any() per queue pop
+        self._free_cores = sum(w.cores - w.busy_cores for w in workers)
 
         # metrics
         self.n_cold_starts = 0
@@ -100,12 +105,19 @@ class SemiGlobalScheduler:
         self._dags[dag.dag_id] = dag
         self._completed_fns[req.req_id] = set()
         # arrival statistics feed the estimator for every constituent function
+        record = self.estimator.record_arrival
         for f in dag.functions:
-            self.estimator.record_arrival(f.name, now)
+            record(f.name, now)
         self._ensure_ticking()
-        for root in dag.roots():
-            inv = Invocation(request=req, fn=dag.fn(root), ready_time=now)
-            heapq.heappush(self._queue, (inv.priority_key(), inv))
+        queue = self._queue
+        abs_deadline = req.arrival_time + dag.deadline
+        rcp_map = dag._rcp
+        fn_map = dag._fn_map
+        for root in dag._roots:
+            inv = Invocation(request=req, fn=fn_map[root], ready_time=now)
+            rcp = rcp_map[root]
+            heapq.heappush(queue,
+                           ((abs_deadline - rcp, rcp, inv.inv_id), inv))
         self._dispatch()
 
     def preallocate(self, dag: DagSpec, n_per_fn: int) -> None:
@@ -124,60 +136,94 @@ class SemiGlobalScheduler:
         """Work-conserving SRSF dispatch: repeatedly pick the queued
         invocation with the least remaining slack whose resource requirements
         can currently be met, and run it (§4.2)."""
+        queue = self._queue
+        if not queue or self._free_cores <= 0:
+            return
         now = self.env.now()
+        pop = heapq.heappop
+        choose = self._choose_worker
+        start = self._start
         skipped: List[Tuple[Tuple[float, float, int], Invocation]] = []
-        while self._queue and any(w.free_cores > 0 for w in self.workers):
-            key, inv = heapq.heappop(self._queue)
-            worker, sbx = self._choose_worker(inv, now)
-            if worker is None:
-                skipped.append((key, inv))
-                continue
-            self._start(inv, worker, sbx, now)
+        while queue and self._free_cores > 0:
+            item = pop(queue)
+            inv = item[1]
+            worker, sbx = choose(inv, now)
+            if worker is None or not start(inv, worker, sbx, now):
+                skipped.append(item)
         for item in skipped:
-            heapq.heappush(self._queue, item)
+            heapq.heappush(queue, item)
 
     def _choose_worker(self, inv: Invocation, now: float
                        ) -> Tuple[Optional[Worker], Optional[Sandbox]]:
         """Prefer a free-core worker holding a WARM sandbox for this function
         (the whole point of even placement); otherwise any free-core worker
-        that can fit a reactive sandbox."""
+        that can fit a reactive sandbox.
+
+        Phase 1 consults the manager's per-function index of workers holding
+        idle (WARM/ALLOCATING) sandboxes instead of scanning the whole pool;
+        within it, ``warm_available`` performs the same lazy ALLOCATING->WARM
+        promotion on every probed candidate as the legacy full scan, and ties
+        on warm-copy count break toward the earliest worker in pool order —
+        decision order is identical to the legacy code.  Phase 2 (no warm
+        candidate anywhere, so phase 1 had no side effects) resolves the
+        soft-revival / reactive-cold fallbacks with O(1) per-worker checks.
+        """
+        fn_name = inv.fn.name
+        mgr = self.sandboxes
         warm_best: Optional[Worker] = None
-        soft_best: Optional[Worker] = None
+        warm_best_count = -1
+        warm_sbx: Optional[Sandbox] = None
+        for w in mgr.idle_workers(fn_name):
+            if w.busy_cores >= w.cores:
+                continue
+            # deliberate private-index access: this is the hottest loop in
+            # the simulator and an accessor call per probe is measurable
+            b = w._buckets[fn_name]
+            if b.alloc:
+                # lazy ALLOCATING->WARM promotion can fire: full legacy probe
+                s = w.warm_available(fn_name, now)
+                if s is None:
+                    continue
+            else:
+                # no ALLOCATING sandbox -> no promotion possible, and a WARM
+                # sandbox is always past its ready_at (time is monotone), so
+                # the probe reduces to the bucket head
+                warm = b.warm
+                if not warm:
+                    continue
+                s = warm[0]
+            # among warm candidates prefer the one with most warm copies
+            c = len(b.warm)
+            if c > warm_best_count:
+                warm_best, warm_best_count, warm_sbx = w, c, s
+        if warm_best is not None:
+            return warm_best, warm_sbx
+        revive = self.cfg.revive_on_dispatch and mgr.has_soft_workers(fn_name)
+        mem_mb = inv.fn.mem_mb
         cold_best: Optional[Worker] = None
         for w in self.workers:
             if w.free_cores <= 0:
                 continue
-            if w.warm_available(inv.fn.name, now) is not None:
-                # among warm candidates prefer the one with most warm copies
-                if (warm_best is None or
-                        w.count(inv.fn.name, SandboxState.WARM)
-                        > warm_best.count(inv.fn.name, SandboxState.WARM)):
-                    warm_best = w
-            elif self.cfg.revive_on_dispatch and soft_best is None and any(
-                    s.fn.name == inv.fn.name
-                    and s.state == SandboxState.SOFT_EVICTED
-                    and s.ready_at <= now for s in w.sandboxes):
-                # resident soft-evicted sandbox: revivable at zero cost
-                soft_best = w
-            elif cold_best is None and (
-                    w.free_pool_mem >= inv.fn.mem_mb
-                    or any(s.state != SandboxState.BUSY for s in w.sandboxes)):
+            if revive and w.has_ready_soft(fn_name, now):
+                return w, None      # _start revives it instantly
+            if cold_best is None and (w.free_pool_mem >= mem_mb
+                                      or w.has_non_busy_sandbox()):
+                if not revive:
+                    return w, None  # nothing revivable anywhere: first fit
                 cold_best = w
-        if warm_best is not None:
-            return warm_best, warm_best.warm_available(inv.fn.name, now)
-        if soft_best is not None:
-            return soft_best, None      # _start revives it instantly
-        if cold_best is not None:
-            return cold_best, None
-        return None, None
+        return cold_best, None
 
     def _start(self, inv: Invocation, w: Worker, sbx: Optional[Sandbox],
-               now: float) -> None:
-        inv.start_time = now
-        qdelay = now - inv.ready_time
-        self.queuing_delays.append(qdelay)
-        inv.request.total_queuing_delay += qdelay
-        w.busy_cores += 1
+               now: float) -> bool:
+        """Run ``inv`` on ``w`` (or, on a cold start the chosen worker cannot
+        host, fall back to another free-core worker).  Returns False when no
+        worker can host a reactive sandbox — the caller requeues the
+        invocation instead of overcommitting a proactive memory pool.  On
+        failure no scheduling bookkeeping is touched, but attempted hard
+        evictions may already have removed unprotected sandboxes on probed
+        workers (HARDEVICT evicts one victim at a time and only then
+        discovers the remainder is protected — same partial-progress
+        semantics as the paper's Pseudocode 1 / the legacy scan code)."""
         setup = 0.0
         if sbx is None:
             # reactive allocation: per Pseudocode 1, preferentially revive a
@@ -188,24 +234,43 @@ class SemiGlobalScheduler:
                 self.sandboxes.n_revivals += 1
                 self.n_warm_hits += 1
                 sbx = revived
-                sbx.state = SandboxState.BUSY
-                sbx.last_used = now
             else:
                 # true cold start: set up a new sandbox on the critical path
+                setup = inv.fn.setup_time
+                sbx = self.sandboxes.reactive_allocate(w, inv.fn, now)
+                if sbx is None:
+                    # the chosen worker can't host without harming a
+                    # protected function: fall back to any other free-core
+                    # worker that can, else requeue — never overcommit, but
+                    # never starve while the pool has capacity either
+                    mem_mb = inv.fn.mem_mb
+                    for cand in self.workers:
+                        if cand is w or cand.free_cores <= 0:
+                            continue
+                        if (cand.free_pool_mem >= mem_mb
+                                or cand.has_non_busy_sandbox()):
+                            sbx = self.sandboxes.reactive_allocate(
+                                cand, inv.fn, now)
+                            if sbx is not None:
+                                w = cand
+                                break
+                    if sbx is None:
+                        return False    # nowhere to host: requeue
                 inv.cold_start = True
                 inv.request.n_cold_starts += 1
                 self.n_cold_starts += 1
-                setup = inv.fn.setup_time
-                if w.free_pool_mem < inv.fn.mem_mb:
-                    self.sandboxes._hard_evict(w, inv.fn)
-                sbx = Sandbox(fn=inv.fn, worker_id=w.worker_id,
-                              state=SandboxState.BUSY,
-                              ready_at=now + setup, last_used=now)
-                w.sandboxes.append(sbx)
+            sbx.state = SandboxState.BUSY
         else:
             self.n_warm_hits += 1
-            sbx.state = SandboxState.BUSY
-            sbx.last_used = now
+            # warm hit: fused WARM->BUSY transition (the dominant case)
+            self.sandboxes.mark_busy(w, sbx)
+        sbx.last_used = now
+        inv.start_time = now
+        qdelay = now - inv.ready_time
+        self.queuing_delays.append(qdelay)
+        inv.request.total_queuing_delay += qdelay
+        w.busy_cores += 1
+        self._free_cores -= 1
 
         # piggyback queuing delay + per-DAG sandbox count to the LBS (§5.2.1)
         if self.report is not None:
@@ -216,10 +281,11 @@ class SemiGlobalScheduler:
         if self.execute is not None:
             # real execution: measured wall time (serving engine)
             runtime = setup + self.execute(inv)
-            self.env.call_after(runtime, lambda: self._complete(inv, w, sbx))
+            self.env.call_after(runtime, self._complete, inv, w, sbx)
         else:
             self.env.call_after(setup + inv.fn.exec_time,
-                                lambda: self._complete(inv, w, sbx))
+                                self._complete, inv, w, sbx)
+        return True
 
     def _complete(self, inv: Invocation, w: Worker, sbx: Sandbox) -> None:
         now = self.env.now()
@@ -229,8 +295,11 @@ class SemiGlobalScheduler:
         if inflight is not None and inv in inflight:
             inflight.remove(inv)
         w.busy_cores -= 1
-        sbx.state = SandboxState.WARM
-        sbx.ready_at = min(sbx.ready_at, now)
+        self._free_cores += 1
+        # fused BUSY->WARM transition (every completion takes it)
+        self.sandboxes.mark_warm(w, sbx)
+        if sbx.ready_at > now:
+            sbx.ready_at = now
         sbx.last_used = now
         req = inv.request
         done = self._completed_fns.get(req.req_id)
@@ -245,11 +314,15 @@ class SemiGlobalScheduler:
             del self._completed_fns[req.req_id]
         else:
             # DAG awareness: release children whose parents all completed
-            for child in dag.children(inv.fn.name):
-                if all(p in done for p in dag.parents(child)):
-                    cinv = Invocation(request=req, fn=dag.fn(child),
+            abs_deadline = req.arrival_time + dag.deadline
+            for child in dag._children[inv.fn.name]:
+                if all(p in done for p in dag._parents[child]):
+                    cinv = Invocation(request=req, fn=dag._fn_map[child],
                                       ready_time=now)
-                    heapq.heappush(self._queue, (cinv.priority_key(), cinv))
+                    rcp = dag._rcp[child]
+                    heapq.heappush(self._queue,
+                                   ((abs_deadline - rcp, rcp, cinv.inv_id),
+                                    cinv))
         self._dispatch()
 
     # ----------------------------------------------------------- estimation
@@ -283,5 +356,8 @@ class SemiGlobalScheduler:
         dag = self._dags.get(dag_id)
         if dag is None:
             return 0
-        return sum(self.sandboxes.total_sandboxes(f.name)
-                   for f in dag.functions)
+        mgr = self.sandboxes
+        total = 0
+        for f in dag.functions:    # total_sandboxes is O(1) post-refactor
+            total += mgr.total_sandboxes(f.name)
+        return total

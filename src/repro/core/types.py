@@ -56,66 +56,76 @@ class DagSpec:
         for u, v in self.edges:
             if u not in known or v not in known:
                 raise ValueError(f"edge ({u},{v}) references unknown function")
-        # reject cycles eagerly: topo_order raises on cycles
-        self.topo_order()
-
-    # -- graph helpers ------------------------------------------------------
-    def fn(self, name: str) -> FunctionSpec:
-        for f in self.functions:
-            if f.name == name:
-                return f
-        raise KeyError(name)
-
-    def parents(self, name: str) -> List[str]:
-        return [u for (u, v) in self.edges if v == name]
-
-    def children(self, name: str) -> List[str]:
-        return [v for (u, v) in self.edges if u == name]
-
-    def roots(self) -> List[str]:
-        has_parent = {v for (_, v) in self.edges}
-        return [f.name for f in self.functions if f.name not in has_parent]
-
-    def topo_order(self) -> List[str]:
-        indeg = {f.name: 0 for f in self.functions}
-        for _, v in self.edges:
-            indeg[v] += 1
+        # Precompute the adjacency/critical-path views once: fn/parents/
+        # children/remaining_critical_path sit on the per-invocation hot path
+        # (SRSF priority keys, DAG-progress release), and a frozen spec never
+        # changes.  ``object.__setattr__`` because the dataclass is frozen.
+        fn_map = {f.name: f for f in self.functions}
+        parents: Dict[str, List[str]] = {n: [] for n in fn_map}
+        children: Dict[str, List[str]] = {n: [] for n in fn_map}
+        for u, v in self.edges:
+            parents[v].append(u)
+            children[u].append(v)
+        object.__setattr__(self, "_fn_map", fn_map)
+        object.__setattr__(self, "_parents", parents)
+        object.__setattr__(self, "_children", children)
+        object.__setattr__(self, "_roots",
+                           [n for n in fn_map if not parents[n]])
+        # topological order; raises on cycles
+        indeg = {n: len(parents[n]) for n in fn_map}
         frontier = [n for n, d in indeg.items() if d == 0]
         order: List[str] = []
         while frontier:
             n = frontier.pop()
             order.append(n)
-            for c in self.children(n):
+            for c in children[n]:
                 indeg[c] -= 1
                 if indeg[c] == 0:
                     frontier.append(c)
         if len(order) != len(self.functions):
             raise ValueError("DAG contains a cycle")
-        return order
+        object.__setattr__(self, "_topo", order)
+        # remaining critical path per node (Kelley [32,33]), leaves-first
+        rcp: Dict[str, float] = {}
+        for n in reversed(order):
+            tail = max((rcp[k] for k in children[n]), default=0.0)
+            rcp[n] = fn_map[n].exec_time + tail
+        object.__setattr__(self, "_rcp", rcp)
+        object.__setattr__(self, "_cp_time",
+                           max((rcp[r] for r in self._roots), default=0.0))
+
+    # -- graph helpers (all O(1) dict lookups on the cached views) ----------
+    def fn(self, name: str) -> FunctionSpec:
+        try:
+            return self._fn_map[name]
+        except KeyError:
+            raise KeyError(name) from None
+
+    def parents(self, name: str) -> List[str]:
+        return self._parents[name]
+
+    def children(self, name: str) -> List[str]:
+        return self._children[name]
+
+    def roots(self) -> List[str]:
+        return self._roots
+
+    def topo_order(self) -> List[str]:
+        return list(self._topo)
 
     def critical_path_time(self) -> float:
         """Critical-path execution time of the whole DAG (Kelley [32,33])."""
-        return max(self.remaining_critical_path(r) for r in self.roots())
+        return self._cp_time
 
     def remaining_critical_path(self, name: str) -> float:
         """Critical-path exec time of the DAG suffix rooted at ``name``
         (inclusive).  Used for remaining-slack computation (§4.2)."""
-        memo: Dict[str, float] = {}
-
-        def rec(n: str) -> float:
-            if n in memo:
-                return memo[n]
-            kids = self.children(n)
-            tail = max((rec(k) for k in kids), default=0.0)
-            memo[n] = self.fn(n).exec_time + tail
-            return memo[n]
-
-        return rec(name)
+        return self._rcp[name]
 
     @property
     def slack(self) -> float:
         """Total slack the user granted on top of the critical path."""
-        return self.deadline - self.critical_path_time()
+        return self.deadline - self._cp_time
 
 
 # ---------------------------------------------------------------------------
@@ -126,9 +136,11 @@ _req_counter = itertools.count()
 _inv_counter = itertools.count()
 
 
-@dataclass
+@dataclass(slots=True, eq=False)
 class Request:
-    """One trigger event for a DAG."""
+    """One trigger event for a DAG.  Identity-compared (``eq=False``):
+    requests are unique runtime objects, and membership tests sit on the
+    completion hot path."""
 
     dag: DagSpec
     arrival_time: float
@@ -156,9 +168,10 @@ class Request:
         return self.completion_time <= self.abs_deadline + 1e-9
 
 
-@dataclass
+@dataclass(slots=True, eq=False)
 class Invocation:
-    """One function execution belonging to a request (a DAG node instance)."""
+    """One function execution belonging to a request (a DAG node instance).
+    Identity-compared, like ``Request``."""
 
     request: Request
     fn: FunctionSpec
@@ -194,14 +207,45 @@ class SandboxState(enum.Enum):
 _sbx_counter = itertools.count()
 
 
-@dataclass
 class Sandbox:
-    fn: FunctionSpec
-    worker_id: int
-    state: SandboxState
-    ready_at: float = 0.0           # when ALLOCATING finishes
-    last_used: float = 0.0
-    sbx_id: int = field(default_factory=lambda: next(_sbx_counter))
+    """A (possibly idle) execution environment resident on one worker.
+
+    ``state`` is a property: assigning it keeps the owning worker's
+    per-``(fn, state)`` indices in sync (see ``sandbox.Worker``), so all
+    existing call sites — and tests — can keep mutating ``sbx.state``
+    directly while queries stay O(1).
+    """
+
+    __slots__ = ("fn", "worker_id", "_state", "ready_at", "last_used",
+                 "sbx_id", "_worker")
+
+    def __init__(self, fn: FunctionSpec, worker_id: int, state: SandboxState,
+                 ready_at: float = 0.0, last_used: float = 0.0):
+        self.fn = fn
+        self.worker_id = worker_id
+        self._state = state
+        self.ready_at = ready_at                # when ALLOCATING finishes
+        self.last_used = last_used
+        self.sbx_id = next(_sbx_counter)
+        self._worker = None                     # set by Worker.add_sandbox
+
+    @property
+    def state(self) -> SandboxState:
+        return self._state
+
+    @state.setter
+    def state(self, new: SandboxState) -> None:
+        old = self._state
+        if new is old:
+            return
+        self._state = new
+        if self._worker is not None:
+            self._worker._reindex(self, old, new)
+
+    def __repr__(self) -> str:
+        return (f"Sandbox(fn={self.fn.name!r}, worker_id={self.worker_id}, "
+                f"state={self._state}, ready_at={self.ready_at}, "
+                f"last_used={self.last_used}, sbx_id={self.sbx_id})")
 
 
 # Callback the scheduler uses to run a function.  Returns actual runtime (s).

@@ -19,29 +19,35 @@ class SimEnv:
     def now(self) -> float:
         return self._now
 
-    def call_after(self, delay: float, fn: Callable[[], None]) -> None:
-        self.call_at(self._now + max(0.0, delay), fn)
+    def call_after(self, delay: float, fn: Callable[..., None],
+                   *args) -> None:
+        """Defer ``fn(*args)``; passing args directly (rather than closing
+        over them) avoids a closure allocation per scheduled event on the
+        simulation hot path."""
+        self.call_at(self._now + max(0.0, delay), fn, *args)
 
-    def call_at(self, t: float, fn: Callable[[], None]) -> None:
+    def call_at(self, t: float, fn: Callable[..., None], *args) -> None:
         if t < self._now - 1e-12:
             raise ValueError(f"cannot schedule in the past: {t} < {self._now}")
-        heapq.heappush(self._events, (t, next(self._seq), fn))
+        heapq.heappush(self._events, (t, next(self._seq), fn, args))
 
     # -- driving -----------------------------------------------------------------
     def run_until(self, t_end: float) -> None:
-        while self._events and self._events[0][0] <= t_end:
-            t, _, fn = heapq.heappop(self._events)
+        events = self._events
+        while events and events[0][0] <= t_end:
+            t, _, fn, args = heapq.heappop(events)
             self._now = t
             self.n_events += 1
-            fn()
+            fn(*args)
         self._now = max(self._now, t_end)
 
     def run(self) -> None:
-        while self._events:
-            t, _, fn = heapq.heappop(self._events)
+        events = self._events
+        while events:
+            t, _, fn, args = heapq.heappop(events)
             self._now = t
             self.n_events += 1
-            fn()
+            fn(*args)
 
     def every(self, interval: float, fn: Callable[[], None],
               until: float = float("inf")) -> None:

@@ -2,13 +2,13 @@
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import List, Optional
+from typing import List, Optional, Tuple
 
 from ..core.baselines import CentralizedFIFO, SparrowScheduler
 from ..core.cluster import ClusterConfig, build_cluster, build_flat_workers
 from ..core.lbs import LBSConfig, LoadBalancer
 from ..core.sgs import SGSConfig
-from ..core.types import Request
+from ..core.types import DagSpec, Request
 from .engine import SimEnv
 from .metrics import Metrics
 from .workload import WorkloadSpec
@@ -22,7 +22,7 @@ class SimResult:
     scheduler: object = None
 
 
-@dataclass
+@dataclass(slots=True)
 class _ServiceClock:
     """Serializes work through one control-plane component (M/D/1 server).
 
@@ -36,7 +36,9 @@ class _ServiceClock:
     busy_until: float = 0.0
 
     def acquire(self, now: float, service: float) -> float:
-        start = max(now, self.busy_until)
+        start = self.busy_until
+        if now > start:
+            start = now
         self.busy_until = start + service
         return self.busy_until
 
@@ -44,6 +46,22 @@ class _ServiceClock:
 # §7.4 measured control-plane decision costs
 LB_DECISION_COST = 190e-6
 SGS_DECISION_COST = 241e-6
+
+
+def _arrival_stream(spec: WorkloadSpec, seed: int, method: str
+                    ) -> Tuple[List[float], List[DagSpec]]:
+    """Time-sorted arrival times + per-arrival DAGs.
+
+    The vectorized path never materializes per-arrival tuples; numpy floats
+    are converted once (``tolist`` round-trips float64 exactly)."""
+    if method == "legacy":
+        pairs = spec.generate(seed, method="legacy")
+        return [t for t, _ in pairs], [d for _, d in pairs]
+    if method != "numpy":
+        raise ValueError(f"unknown generation method {method!r}")
+    ts, idx, tenant_dags = spec.generate_arrays(seed)
+    dags = list(map(tenant_dags.__getitem__, idx.tolist()))
+    return ts.tolist(), dags
 
 
 def run_archipelago(spec: WorkloadSpec,
@@ -54,26 +72,39 @@ def run_archipelago(spec: WorkloadSpec,
                     drain: float = 5.0,
                     lb_cost: float = LB_DECISION_COST,
                     sgs_cost: float = SGS_DECISION_COST,
-                    n_lbs: int = 4) -> SimResult:
+                    n_lbs: int = 4,
+                    workload_method: str = "numpy") -> SimResult:
     env = SimEnv()
     lbs = build_cluster(env, cluster, sgs_cfg, lbs_cfg)
     metrics = Metrics()
-    lb_clocks = [_ServiceClock() for _ in range(max(1, n_lbs))]
+    n_lb = max(1, n_lbs)
+    lb_clocks = [_ServiceClock() for _ in range(n_lb)]
     sgs_clocks = {sid: _ServiceClock() for sid in lbs.sgss}
 
-    arrivals = spec.generate(seed)
-    for i, (t, dag) in enumerate(arrivals):
-        def fire(t=t, dag=dag, i=i):
-            req = Request(dag=dag, arrival_time=env.now())
-            metrics.requests.append(req)
-            # hop 1: LBS routing decision (LBS is a scalable service: many LBs)
-            t_routed = lb_clocks[i % len(lb_clocks)].acquire(env.now(), lb_cost)
-            sgs = lbs.select(req, env.now())
-            # hop 2: SGS scheduling decision, serialized per SGS
-            t_sched = sgs_clocks[sgs.sgs_id].acquire(
-                t_routed, sgs_cost * len(dag.functions))
-            env.call_at(t_sched, lambda: sgs.submit_request(req))
-        env.call_at(t, fire)
+    times, dags = _arrival_stream(spec, seed, workload_method)
+    n = len(times)
+    requests = metrics.requests
+
+    def pump(i: int) -> None:
+        # fire arrival i, then lazily schedule arrival i+1: the event heap
+        # holds at most one pending arrival instead of the whole trace
+        now = env.now()
+        dag = dags[i]
+        req = Request(dag=dag, arrival_time=now)
+        requests.append(req)
+        # hop 1: LBS routing decision (LBS is a scalable service: many LBs)
+        t_routed = lb_clocks[i % n_lb].acquire(now, lb_cost)
+        sgs = lbs.select(req, now)
+        # hop 2: SGS scheduling decision, serialized per SGS
+        t_sched = sgs_clocks[sgs.sgs_id].acquire(
+            t_routed, sgs_cost * len(dag.functions))
+        env.call_at(t_sched, sgs.submit_request, req)
+        i += 1
+        if i < n:
+            env.call_at(times[i], pump, i)
+
+    if n:
+        env.call_at(times[0], pump, 0)
 
     # periodic scaling pass (the LBS's background loop, §5.2)
     lcfg = lbs.cfg
@@ -92,7 +123,8 @@ def run_baseline(spec: WorkloadSpec,
                  keepalive: float = 900.0,
                  seed: int = 0,
                  drain: float = 5.0,
-                 sched_cost: float = SGS_DECISION_COST) -> SimResult:
+                 sched_cost: float = SGS_DECISION_COST,
+                 workload_method: str = "numpy") -> SimResult:
     """Centralized FIFO + reactive sandboxes + fixed keep-alive (§7.1).
 
     The single scheduler's per-decision cost is serialized: at cluster-scale
@@ -102,13 +134,22 @@ def run_baseline(spec: WorkloadSpec,
     sched = CentralizedFIFO(workers, env, keepalive=keepalive)
     metrics = Metrics()
     clock = _ServiceClock()
-    for t, dag in spec.generate(seed):
-        def fire(t=t, dag=dag):
-            req = Request(dag=dag, arrival_time=env.now())
-            metrics.requests.append(req)
-            t_sched = clock.acquire(env.now(), sched_cost * len(dag.functions))
-            env.call_at(t_sched, lambda: sched.submit_request(req))
-        env.call_at(t, fire)
+    times, dags = _arrival_stream(spec, seed, workload_method)
+    n = len(times)
+
+    def pump(i: int) -> None:
+        now = env.now()
+        dag = dags[i]
+        req = Request(dag=dag, arrival_time=now)
+        metrics.requests.append(req)
+        t_sched = clock.acquire(now, sched_cost * len(dag.functions))
+        env.call_at(t_sched, sched.submit_request, req)
+        i += 1
+        if i < n:
+            env.call_at(times[i], pump, i)
+
+    if n:
+        env.call_at(times[0], pump, 0)
     env.run_until(spec.duration + drain)
     metrics.queuing_delays.extend(sched.queuing_delays)
     return SimResult(metrics=metrics, env=env, scheduler=sched)
@@ -118,17 +159,25 @@ def run_sparrow(spec: WorkloadSpec,
                 cluster: Optional[ClusterConfig] = None,
                 probes: int = 2,
                 seed: int = 0,
-                drain: float = 5.0) -> SimResult:
+                drain: float = 5.0,
+                workload_method: str = "numpy") -> SimResult:
     env = SimEnv()
     workers = build_flat_workers(cluster)
     sched = SparrowScheduler(workers, env, probes=probes, seed=seed)
     metrics = Metrics()
-    for t, dag in spec.generate(seed):
-        def fire(t=t, dag=dag):
-            req = Request(dag=dag, arrival_time=env.now())
-            metrics.requests.append(req)
-            sched.submit_request(req)
-        env.call_at(t, fire)
+    times, dags = _arrival_stream(spec, seed, workload_method)
+    n = len(times)
+
+    def pump(i: int) -> None:
+        req = Request(dag=dags[i], arrival_time=env.now())
+        metrics.requests.append(req)
+        sched.submit_request(req)
+        i += 1
+        if i < n:
+            env.call_at(times[i], pump, i)
+
+    if n:
+        env.call_at(times[0], pump, 0)
     env.run_until(spec.duration + drain)
     metrics.queuing_delays.extend(sched.queuing_delays)
     return SimResult(metrics=metrics, env=env, scheduler=sched)

@@ -1,0 +1,48 @@
+"""The O(1)-index scheduler must be decision-identical to the legacy scans.
+
+``tests/data/golden_equivalence.json`` holds fingerprints (per-request
+timeline SHA-256 + scheduler counters) captured from the pre-refactor
+scan-based scheduler — carrying this PR's two sanctioned behavior changes
+(stable workload seeding + the reactive-allocation overcommit bugfix; see
+``benchmarks/equivalence_fingerprint.py`` for the exact provenance and
+capture procedure) — on fixed-seed workloads covering every ablation:
+even/packed placement, fair/LRU eviction, revive-on-dispatch on/off, and
+proactive allocation off.  Any drift in placement order, eviction victims,
+lazy WARM promotion, or queue tie-breaking shows up as a hash mismatch.
+
+Regenerate only for *intentional* behavior changes, from a reference tree
+carrying the same change:
+    PYTHONPATH=src python benchmarks/equivalence_fingerprint.py \
+        --write tests/data/golden_equivalence.json
+"""
+import json
+import pathlib
+import sys
+
+import pytest
+
+BENCH_DIR = pathlib.Path(__file__).resolve().parent.parent
+GOLDEN = pathlib.Path(__file__).resolve().parent / "data" / \
+    "golden_equivalence.json"
+
+sys.path.insert(0, str(BENCH_DIR))
+
+from benchmarks.equivalence_fingerprint import CONFIGS, fingerprint_one  # noqa: E402
+
+
+@pytest.fixture(scope="module")
+def golden():
+    return json.loads(GOLDEN.read_text())
+
+
+@pytest.mark.parametrize("name", sorted(CONFIGS))
+def test_scheduler_matches_pre_refactor_golden(name, golden):
+    got = fingerprint_one(name)
+    want = golden[name]
+    # compare counters first for a readable diff, then the exact timeline
+    for key in ("n_requests", "n_completed", "cold_starts", "warm_hits",
+                "allocations", "soft_evictions", "hard_evictions",
+                "revivals", "n_events"):
+        assert got[key] == want[key], f"{name}: {key} diverged"
+    assert got["timeline_sha256"] == want["timeline_sha256"], (
+        f"{name}: counters match but the per-request timeline diverged")
