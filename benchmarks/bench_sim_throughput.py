@@ -1,10 +1,10 @@
 """Simulator-throughput benchmark: the perf trajectory every PR is judged by.
 
-Runs ``paper_workload_1``/``paper_workload_2`` through ``run_archipelago`` at
-several scales on a 200-worker cluster (8 SGSs x 25 workers — one rack per
-SGS, §4.1) and reports events/sec, requests/sec, wall time and peak RSS.
-Writes ``BENCH_sim_throughput.json`` at the repo root so successive PRs can
-track the trajectory.
+Runs ``paper_workload_1``/``paper_workload_2`` through the experiment API's
+``simulate`` (stack="archipelago") at several scales on a 200-worker cluster
+(8 SGSs x 25 workers — one rack per SGS, §4.1) and reports events/sec,
+requests/sec, wall time and peak RSS.  Writes ``BENCH_sim_throughput.json``
+at the repo root so successive PRs can track the trajectory.
 
 The ``baseline_before`` numbers are the pre-index-refactor scheduler (PR 1
 seed: linear worker/sandbox scans, per-sandbox placement re-sorts) measured
@@ -12,20 +12,25 @@ on this same harness's scenarios; they are the denominator for the reported
 speedups.
 
 Run:
-    PYTHONPATH=src python benchmarks/bench_sim_throughput.py [--quick]
+    python benchmarks/bench_sim_throughput.py [--quick]
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import resource
 import sys
 import time
 from pathlib import Path
 
+try:
+    import repro  # noqa: F401
+except ImportError:                                     # pragma: no cover
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
 from repro.core.cluster import ClusterConfig
-from repro.sim.runner import run_archipelago
-from repro.sim.workload import paper_workload_1, paper_workload_2
+from repro.sim.experiment import Experiment, simulate
 
 # 200 workers: 8 rack-sized SGS pools of 25 machines (§4.1, §7.1 scaled up)
 CLUSTER = dict(n_sgs=8, workers_per_sgs=25, cores_per_worker=20,
@@ -44,27 +49,28 @@ BASELINE_BEFORE = {
 }
 
 SCENARIOS = [
-    ("wl1_scale0.25", paper_workload_1, dict(duration=30.0, scale=0.25)),
-    ("wl1_scale1.0", paper_workload_1, dict(duration=30.0, scale=1.0)),
-    ("wl2_scale1.0", paper_workload_2, dict(duration=30.0, scale=1.0)),
+    ("wl1_scale0.25", "paper_workload_1", dict(duration=30.0, scale=0.25)),
+    ("wl1_scale1.0", "paper_workload_1", dict(duration=30.0, scale=1.0)),
+    ("wl2_scale1.0", "paper_workload_2", dict(duration=30.0, scale=1.0)),
 ]
 
 QUICK_SCENARIOS = [
-    ("wl1_quick", paper_workload_1, dict(duration=5.0, scale=0.1)),
-    ("wl2_quick", paper_workload_2, dict(duration=5.0, scale=0.1)),
+    ("wl1_quick", "paper_workload_1", dict(duration=5.0, scale=0.1)),
+    ("wl2_quick", "paper_workload_2", dict(duration=5.0, scale=0.1)),
 ]
 
 
-def run_one(name: str, make, kw: dict) -> dict:
-    spec = make(**kw)
+def run_one(name: str, factory: str, kw: dict) -> dict:
     t0 = time.perf_counter()
-    res = run_archipelago(spec, cluster=ClusterConfig(**CLUSTER), seed=0)
+    res = simulate(Experiment(stack="archipelago", workload_factory=factory,
+                              workload_kwargs=kw, name=name,
+                              cluster=ClusterConfig(**CLUSTER), seed=0))
     wall = time.perf_counter() - t0
-    m = res.metrics
+    m = res.sim.metrics
     row = {
         "wall_s": round(wall, 3),
-        "n_events": res.env.n_events,
-        "events_per_s": round(res.env.n_events / wall, 1),
+        "n_events": res.n_events,
+        "events_per_s": round(res.n_events / wall, 1),
         "n_requests": len(m.requests),
         "n_completed": len(m.completed),
         "requests_per_s": round(len(m.requests) / wall, 1),

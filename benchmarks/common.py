@@ -1,16 +1,44 @@
 """Shared helpers for paper-figure benchmarks."""
 from __future__ import annotations
 
+import os
+import sys
 import time
 from typing import Dict, List
 
-ROWS: List[str] = []
+# Allow `python -m benchmarks.run` to work from a checkout without
+# PYTHONPATH=src or `pip install -e .` (both of which also work).
+try:
+    import repro  # noqa: F401
+except ImportError:                                     # pragma: no cover
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+ROWS: List[str] = []                    # legacy CSV lines (for eyeballs)
+RECORDS: List[Dict[str, object]] = []   # structured row per emitted metric
+EXPERIMENTS: List[Dict[str, object]] = []  # full ExperimentResult rows
 
 
 def emit(name: str, us_per_call: float, derived: str = "") -> None:
     line = f"{name},{us_per_call:.1f},{derived}"
     ROWS.append(line)
+    RECORDS.append({"name": name, "us_per_call": round(float(us_per_call), 1),
+                    "derived": derived})
     print(line, flush=True)
+
+
+def record_experiment(bench: str, result) -> None:
+    """Attach a full ``ExperimentResult`` to the ``BENCH_figs.json``
+    artifact (``result`` may also be a pre-built dict)."""
+    d = result if isinstance(result, dict) else result.to_dict()
+    d = dict(d)
+    d["bench"] = bench
+    EXPERIMENTS.append(d)
+
+
+def reset() -> None:
+    ROWS.clear()
+    RECORDS.clear()
+    EXPERIMENTS.clear()
 
 
 class timer:

@@ -4,9 +4,9 @@ from __future__ import annotations
 
 from repro.core import ClusterConfig
 from repro.core.types import DagSpec, FunctionSpec
-from repro.sim import Sinusoidal, WorkloadSpec, run_archipelago
+from repro.sim import Experiment, Sinusoidal, WorkloadSpec, simulate
 
-from .common import emit
+from .common import emit, record_experiment
 
 
 def run(duration: float = 20.0) -> None:
@@ -16,13 +16,15 @@ def run(duration: float = 20.0) -> None:
     tight, loose = mk("tight", 0.05), mk("loose", 0.20)
     proc = lambda: Sinusoidal(110.0, 60.0, 10.0)
     spec = WorkloadSpec([(tight, proc()), (loose, proc())], duration)
-    cc = ClusterConfig(n_sgs=8, workers_per_sgs=3, cores_per_worker=6)
-    res = run_archipelago(spec, cluster=cc)
-    n_t = res.lbs.n_active("tight")
-    n_l = res.lbs.n_active("loose")
-    peak_t = max((n for _, d, n in res.lbs.scale_events if d == "tight"),
+    res = simulate(Experiment(
+        workload=spec, name="fig10",
+        cluster=ClusterConfig(n_sgs=8, workers_per_sgs=3,
+                              cores_per_worker=6)))
+    record_experiment("fig10", res)
+    lbs = res.sim.lbs
+    peak_t = max((n for _, d, n in lbs.scale_events if d == "tight"),
                  default=1)
-    peak_l = max((n for _, d, n in res.lbs.scale_events if d == "loose"),
+    peak_l = max((n for _, d, n in lbs.scale_events if d == "loose"),
                  default=1)
     emit("fig10_tight_slack_peak_sgs", 0.0, str(peak_t))
     emit("fig10_loose_slack_peak_sgs", 0.0, str(peak_l))

@@ -5,9 +5,10 @@ from __future__ import annotations
 
 from repro.core import ClusterConfig
 from repro.core.types import DagSpec, FunctionSpec
-from repro.sim import ConstantRate, Sinusoidal, WorkloadSpec, run_archipelago
+from repro.sim import (ConstantRate, Experiment, Sinusoidal, WorkloadSpec,
+                       simulate)
 
-from .common import emit
+from .common import emit, record_experiment
 
 
 def run(duration: float = 24.0) -> None:
@@ -18,16 +19,19 @@ def run(duration: float = 24.0) -> None:
                      (), deadline=0.22)
     spec = WorkloadSpec([(calm, ConstantRate(60.0)),
                          (bursty, Sinusoidal(300.0, 250.0, 12.0))], duration)
-    cc = ClusterConfig(n_sgs=5, workers_per_sgs=4, cores_per_worker=4)
-    res = run_archipelago(spec, cluster=cc)
-    ev = [(t, n) for t, d, n in res.lbs.scale_events if d == "calm"]
+    res = simulate(Experiment(
+        workload=spec, name="fig11", warmup=4.0,
+        cluster=ClusterConfig(n_sgs=5, workers_per_sgs=4,
+                              cores_per_worker=4)))
+    record_experiment("fig11", res)
+    lbs = res.sim.lbs
+    ev = [(t, n) for t, d, n in lbs.scale_events if d == "calm"]
     peak = max((n for _, n in ev), default=1)
-    final = res.lbs.n_active("calm")
+    final = lbs.n_active("calm")
     emit("fig11_calm_peak_sgs", 0.0, str(peak))
     emit("fig11_calm_final_sgs", 0.0, str(final))
     emit("fig11_scaled_out_under_contention", 0.0, str(peak >= 2))
     emit("fig11_scaled_back_in", 0.0, str(final <= peak))
-    m = res.metrics.after_warmup(4.0)
-    for cls, mm in sorted(m.by_class().items()):
+    for cls, st in sorted(res.per_class.items()):
         emit(f"fig11_{cls}_deadlines_met", 0.0,
-             f"{mm.deadline_met_frac()*100:.2f}%")
+             f"{(st.deadline_met_frac or 0)*100:.2f}%")

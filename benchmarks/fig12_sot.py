@@ -1,23 +1,32 @@
 """Fig. 12: scale-out threshold (SOT) sensitivity — cold starts rise as SOT
-falls; queuing delay (and tail latency) rises as SOT grows."""
+falls; queuing delay (and tail latency) rises as SOT grows.  Implemented as
+one ``run_sweep`` over the SOT axis."""
 from __future__ import annotations
 
 from repro.core import ClusterConfig, LBSConfig
-from repro.sim import paper_workload_2, run_archipelago
+from repro.sim import Experiment, ExperimentResult, run_sweep
 
-from .common import emit
+from .common import emit, record_experiment
+
+SOTS = (0.05, 0.1, 0.3, 0.6, 1.2)
 
 
 def run(duration: float = 16.0) -> None:
-    spec = paper_workload_2(duration=duration, scale=0.25, dags_per_class=2)
-    cc = ClusterConfig(n_sgs=8, workers_per_sgs=8, cores_per_worker=5)
-    for sot in (0.05, 0.1, 0.3, 0.6, 1.2):
-        res = run_archipelago(
-            spec, cluster=cc,
-            lbs_cfg=LBSConfig(scale_out_threshold=sot,
-                              scale_in_threshold=sot / 6.0))
-        m = res.metrics.after_warmup(4.0)
-        emit(f"fig12_sot{sot}_cold_starts", 0.0, str(m.cold_start_count()))
-        emit(f"fig12_sot{sot}_p999", m.latency_pct(99.9) * 1e6)
+    base = Experiment(
+        workload_factory="paper_workload_2",
+        workload_kwargs=dict(duration=duration, scale=0.25,
+                             dags_per_class=2),
+        cluster=ClusterConfig(n_sgs=8, workers_per_sgs=8,
+                              cores_per_worker=5),
+        warmup=4.0, name="fig12")
+    sweep = run_sweep(base, {
+        "lbs": [LBSConfig(scale_out_threshold=sot,
+                          scale_in_threshold=sot / 6.0) for sot in SOTS]})
+    for sot, row in zip(SOTS, sweep):
+        r = ExperimentResult.from_dict(row["result"])
+        record_experiment("fig12", row["result"])
+        emit(f"fig12_sot{sot}_cold_starts", 0.0, str(r.cold_start_count))
+        emit(f"fig12_sot{sot}_p999",
+             (r.latency_percentiles["p99.9"] or 0) * 1e6)
         emit(f"fig12_sot{sot}_deadlines_met", 0.0,
-             f"{m.deadline_met_frac()*100:.2f}%")
+             f"{(r.deadline_met_frac or 0)*100:.2f}%")

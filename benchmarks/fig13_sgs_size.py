@@ -1,26 +1,33 @@
 """Fig. 13: SGS worker-pool size — 20 workers partitioned as 20x1, 10x2,
 5x4, 1x20; too-fine partitioning forces constant scale-out and cold
-starts."""
+starts.  Implemented as one ``run_sweep`` over the cluster axis."""
 from __future__ import annotations
 
 from repro.core import ClusterConfig
 from repro.core.types import DagSpec, FunctionSpec
-from repro.sim import Sinusoidal, WorkloadSpec, run_archipelago
+from repro.sim import (Experiment, ExperimentResult, Sinusoidal,
+                       WorkloadSpec, run_sweep)
 
-from .common import emit
+from .common import emit, record_experiment
+
+PARTITIONS = ((20, 1), (10, 2), (5, 4), (1, 20))
 
 
 def run(duration: float = 20.0) -> None:
     dag = DagSpec("d", (FunctionSpec("d/f", 0.1, setup_time=0.3),), (),
                   deadline=0.3)
     spec = WorkloadSpec([(dag, Sinusoidal(150.0, 100.0, 8.0))], duration)
-    for n_sgs, wps in [(20, 1), (10, 2), (5, 4), (1, 20)]:
-        cc = ClusterConfig(n_sgs=n_sgs, workers_per_sgs=wps,
-                           cores_per_worker=4)
-        res = run_archipelago(spec, cluster=cc)
-        m = res.metrics.after_warmup(4.0)
-        emit(f"fig13_{n_sgs}sgs_x_{wps}w_p999", m.latency_pct(99.9) * 1e6)
+    base = Experiment(workload=spec, warmup=4.0, name="fig13")
+    sweep = run_sweep(base, {
+        "cluster": [ClusterConfig(n_sgs=n, workers_per_sgs=w,
+                                  cores_per_worker=4)
+                    for n, w in PARTITIONS]})
+    for (n_sgs, wps), row in zip(PARTITIONS, sweep):
+        r = ExperimentResult.from_dict(row["result"])
+        record_experiment("fig13", row["result"])
+        emit(f"fig13_{n_sgs}sgs_x_{wps}w_p999",
+             (r.latency_percentiles["p99.9"] or 0) * 1e6)
         emit(f"fig13_{n_sgs}sgs_x_{wps}w_cold_starts", 0.0,
-             str(m.cold_start_count()))
+             str(r.cold_start_count))
         emit(f"fig13_{n_sgs}sgs_x_{wps}w_deadlines_met", 0.0,
-             f"{m.deadline_met_frac()*100:.2f}%")
+             f"{(r.deadline_met_frac or 0)*100:.2f}%")

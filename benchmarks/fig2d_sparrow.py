@@ -1,21 +1,30 @@
 """Fig. 2d: centralized FIFO vs Sparrow-style power-of-two probing at ~70%
-cluster CPU utilization — random probing misses warm sandboxes."""
+cluster CPU utilization — random probing misses warm sandboxes.  Also runs
+the registry-only ``pull`` stack (worker-initiated, warm-affinity pulls) as
+a beyond-paper comparison point."""
 from __future__ import annotations
 
-from repro.core import ClusterConfig
-from repro.sim import paper_workload_2, run_baseline, run_sparrow
+from dataclasses import replace
 
-from .common import emit
+from repro.core import ClusterConfig
+from repro.sim import Experiment, simulate
+
+from .common import emit, record_experiment
 
 
 def run(duration: float = 16.0) -> None:
-    spec = paper_workload_2(duration=duration, scale=0.22, dags_per_class=2)
-    cc = ClusterConfig(n_sgs=8, workers_per_sgs=8, cores_per_worker=5)
-    rb = run_baseline(spec, cluster=cc)
-    rs = run_sparrow(spec, cluster=cc)
-    mb = rb.metrics.after_warmup(4.0)
-    ms = rs.metrics.after_warmup(4.0)
-    for tag, m in [("fifo", mb), ("sparrow", ms)]:
-        emit(f"fig2d_{tag}_p50", m.latency_pct(50) * 1e6)
-        emit(f"fig2d_{tag}_p999", m.latency_pct(99.9) * 1e6)
-        emit(f"fig2d_{tag}_cold_starts", 0.0, str(m.cold_start_count()))
+    base = Experiment(
+        workload_factory="paper_workload_2",
+        workload_kwargs=dict(duration=duration, scale=0.22,
+                             dags_per_class=2),
+        cluster=ClusterConfig(n_sgs=8, workers_per_sgs=8,
+                              cores_per_worker=5),
+        warmup=4.0)
+    for tag, stack in [("fifo", "fifo"), ("sparrow", "sparrow"),
+                       ("pull", "pull")]:
+        r = simulate(replace(base, stack=stack, name=f"fig2d_{tag}"))
+        record_experiment("fig2d", r)
+        emit(f"fig2d_{tag}_p50", (r.latency_percentiles["p50"] or 0) * 1e6)
+        emit(f"fig2d_{tag}_p999",
+             (r.latency_percentiles["p99.9"] or 0) * 1e6)
+        emit(f"fig2d_{tag}_cold_starts", 0.0, str(r.cold_start_count))

@@ -2,45 +2,47 @@
 Workloads 1 and 2, Archipelago vs the centralized-FIFO-reactive baseline."""
 from __future__ import annotations
 
-from repro.core import ClusterConfig
-from repro.sim import (paper_workload_1, paper_workload_2, run_archipelago,
-                       run_baseline)
-from repro.sim.metrics import percentile
+from dataclasses import replace
 
-from .common import emit
+from repro.core import ClusterConfig
+from repro.sim import Experiment, simulate
+
+from .common import emit, record_experiment
 
 WARMUP = 5.0
 
 
 def run(duration: float = 25.0) -> None:
     cc = ClusterConfig()        # 8 SGS x 8 workers x 20 cores (paper §7.1)
-    for wname, spec in [
-            ("w1", paper_workload_1(duration=duration, scale=1.3,
-                                    dags_per_class=2)),
-            ("w2", paper_workload_2(duration=duration, scale=1.0,
-                                    dags_per_class=2))]:
-        ra = run_archipelago(spec, cluster=cc)
-        rb = run_baseline(spec, cluster=cc)
-        ma = ra.metrics.after_warmup(WARMUP)
-        mb = rb.metrics.after_warmup(WARMUP)
-        for tag, m in [("arch", ma), ("base", mb)]:
-            emit(f"fig7_{wname}_{tag}_p50", m.latency_pct(50) * 1e6)
-            emit(f"fig7_{wname}_{tag}_p99", m.latency_pct(99) * 1e6)
-            emit(f"fig7_{wname}_{tag}_p999", m.latency_pct(99.9) * 1e6)
+    for wname, factory, kw in [
+            ("w1", "paper_workload_1",
+             dict(duration=duration, scale=1.3, dags_per_class=2)),
+            ("w2", "paper_workload_2",
+             dict(duration=duration, scale=1.0, dags_per_class=2))]:
+        base = Experiment(workload_factory=factory, workload_kwargs=kw,
+                          cluster=cc, warmup=WARMUP)
+        ra = simulate(replace(base, stack="archipelago",
+                              name=f"fig7_{wname}_arch"))
+        rb = simulate(replace(base, stack="fifo", name=f"fig7_{wname}_base"))
+        for tag, r in [("arch", ra), ("base", rb)]:
+            record_experiment("fig7", r)
+            lp = r.latency_percentiles
+            emit(f"fig7_{wname}_{tag}_p50", (lp["p50"] or 0) * 1e6)
+            emit(f"fig7_{wname}_{tag}_p99", (lp["p99"] or 0) * 1e6)
+            emit(f"fig7_{wname}_{tag}_p999", (lp["p99.9"] or 0) * 1e6)
             emit(f"fig7_{wname}_{tag}_deadlines_met", 0.0,
-                 f"{m.deadline_met_frac()*100:.2f}%")
+                 f"{(r.deadline_met_frac or 0)*100:.2f}%")
             emit(f"fig7_{wname}_{tag}_cold_starts", 0.0,
-                 str(m.cold_start_count()))
-        ratio = mb.latency_pct(99.9) / max(ma.latency_pct(99.9), 1e-9)
+                 str(r.cold_start_count))
+        ratio = ((rb.latency_percentiles["p99.9"] or 0)
+                 / max(ra.latency_percentiles["p99.9"] or 0, 1e-9))
         emit(f"fig7_{wname}_tail_reduction", 0.0, f"{ratio:.2f}x")
-        # Fig. 8a: queuing delay distribution
-        qa = ra.metrics.queuing_delays
-        qb = rb.metrics.queuing_delays
+        # Fig. 8a: queuing delay distribution (steady-state samples)
         emit(f"fig8a_{wname}_qdelay_p999_arch",
-             percentile(qa, 99.9) * 1e6)
+             (ra.queuing_percentiles["p99.9"] or 0) * 1e6)
         emit(f"fig8a_{wname}_qdelay_p999_base",
-             percentile(qb, 99.9) * 1e6)
+             (rb.queuing_percentiles["p99.9"] or 0) * 1e6)
         # per-class deadline breakdown (Fig. 7b/7d)
-        for cls, m in sorted(ma.by_class().items()):
+        for cls, st in sorted(ra.per_class.items()):
             emit(f"fig7_{wname}_arch_{cls}_deadlines_met", 0.0,
-                 f"{m.deadline_met_frac()*100:.2f}%")
+                 f"{(st.deadline_met_frac or 0)*100:.2f}%")

@@ -1,15 +1,13 @@
 """Fig. 8b: proactive allocation vs the ideal sandbox count for a sinusoidal
-C2-like DAG — how closely the estimator tracks true demand."""
+C2-like DAG — how closely the estimator tracks true demand.  Uses
+``simulate``'s periodic-hook support instead of a hand-rolled pump loop."""
 from __future__ import annotations
 
-from repro.core import ClusterConfig, Request
-from repro.core.cluster import build_cluster
+from repro.core import ClusterConfig
 from repro.core.types import DagSpec, FunctionSpec
-from repro.sim import Sinusoidal, WorkloadSpec
-from repro.sim.engine import SimEnv
-from repro.sim.runner import run_archipelago
+from repro.sim import Experiment, Sinusoidal, WorkloadSpec, simulate
 
-from .common import emit
+from .common import emit, record_experiment
 
 
 def run(duration: float = 20.0) -> None:
@@ -17,41 +15,24 @@ def run(duration: float = 20.0) -> None:
     dag = DagSpec("c2", (fn,), (), deadline=0.55)
     proc = Sinusoidal(400.0, 200.0, 10.0)
     spec = WorkloadSpec([(dag, proc)], duration)
-    cc = ClusterConfig(n_sgs=2, workers_per_sgs=8, cores_per_worker=20)
-    res = run_archipelago(spec, cluster=cc)
+    exp = Experiment(stack="archipelago", workload=spec,
+                     cluster=ClusterConfig(n_sgs=2, workers_per_sgs=8,
+                                           cores_per_worker=20),
+                     name="fig8b")
 
-    # sample allocated vs ideal at 1s boundaries (post-hoc from final state
-    # we re-run with sampling)
-    env = SimEnv()
-    from repro.sim.runner import _ServiceClock, LB_DECISION_COST, \
-        SGS_DECISION_COST
-    lbs = build_cluster(env, cc)
-    lb_c, sgs_c = _ServiceClock(), {s: _ServiceClock() for s in lbs.sgss}
-    from repro.sim.metrics import Metrics
-    metrics = Metrics()
-    for t, d in spec.generate(0):
-        def fire(t=t, d=d):
-            req = Request(dag=d, arrival_time=env.now())
-            metrics.requests.append(req)
-            tr = lb_c.acquire(env.now(), LB_DECISION_COST)
-            sgs = lbs.select(req, env.now())
-            ts = sgs_c[sgs.sgs_id].acquire(tr, SGS_DECISION_COST)
-            env.call_at(ts, lambda: sgs.submit_request(req))
-        env.call_at(t, fire)
-    env.every(0.05, lambda: lbs.check_scaling(env.now()), until=duration)
-
+    # sample allocated vs ideal at 1 s boundaries, in-loop
     samples = []
 
-    def sample():
+    def sample(env, stack):
         alloc = sum(s.proactive_sandbox_count("c2")
-                    for s in lbs.sgss.values())
+                    for s in stack.lbs.sgss.values())
         ideal = proc.rate(env.now()) * fn.exec_time      # Little's law
         samples.append((env.now(), alloc, ideal))
 
-    env.every(1.0, sample, until=duration)
-    env.run_until(duration + 2.0)
+    res = simulate(exp, hooks=[(1.0, sample)])
+    record_experiment("fig8b", res)
 
-    steady = [s for s in samples if s[0] >= 5.0]
+    steady = [s for s in samples if 5.0 <= s[0] <= duration]
     over = [(a - i) / max(i, 1.0) for _, a, i in steady]
     emit("fig8b_worst_overalloc", 0.0,
          f"{max(over)*100:.1f}% (paper: 37.4% worst case)")

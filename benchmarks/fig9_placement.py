@@ -2,11 +2,13 @@
 workload (avg 1200 RPS, amplitude 600, 20 s period, scaled)."""
 from __future__ import annotations
 
+from dataclasses import replace
+
 from repro.core import ClusterConfig, SGSConfig
 from repro.core.types import DagSpec, FunctionSpec
-from repro.sim import Sinusoidal, WorkloadSpec, run_archipelago
+from repro.sim import Experiment, Sinusoidal, WorkloadSpec, simulate
 
-from .common import emit
+from .common import emit, record_experiment
 
 
 def run(duration: float = 24.0) -> None:
@@ -15,24 +17,27 @@ def run(duration: float = 24.0) -> None:
     # peaks push concurrency near capacity: packed placement then schedules
     # on workers without a warm sandbox (paper: ~70% misses at peaks)
     spec = WorkloadSpec([(dag, Sinusoidal(550.0, 280.0, 8.0))], duration)
-    cc = ClusterConfig(n_sgs=1, workers_per_sgs=10, cores_per_worker=8)
+    base = Experiment(
+        workload=spec,
+        cluster=ClusterConfig(n_sgs=1, workers_per_sgs=10,
+                              cores_per_worker=8),
+        warmup=4.0)
     # paper-faithful pair: revival only via the background allocator
     for tag, even in [("even", True), ("packed", False)]:
-        res = run_archipelago(
-            spec, cluster=cc,
-            sgs_cfg=SGSConfig(even_placement=even,
-                              revive_on_dispatch=False))
-        m = res.metrics.after_warmup(4.0)
+        r = simulate(replace(base, name=f"fig9_{tag}",
+                             sgs=SGSConfig(even_placement=even,
+                                           revive_on_dispatch=False)))
+        record_experiment("fig9", r)
         emit(f"fig9_{tag}_deadlines_met", 0.0,
-             f"{m.deadline_met_frac()*100:.2f}%")
-        emit(f"fig9_{tag}_cold_starts", 0.0, str(m.cold_start_count()))
-        emit(f"fig9_{tag}_p999", m.latency_pct(99.9) * 1e6)
+             f"{(r.deadline_met_frac or 0)*100:.2f}%")
+        emit(f"fig9_{tag}_cold_starts", 0.0, str(r.cold_start_count))
+        emit(f"fig9_{tag}_p999", (r.latency_percentiles["p99.9"] or 0) * 1e6)
     # beyond-paper: dispatch-time revival heals the packed pathology
-    res = run_archipelago(
-        spec, cluster=cc,
-        sgs_cfg=SGSConfig(even_placement=False, revive_on_dispatch=True))
-    m = res.metrics.after_warmup(4.0)
+    r = simulate(replace(base, name="fig9_packed_plus_revival",
+                         sgs=SGSConfig(even_placement=False,
+                                       revive_on_dispatch=True)))
+    record_experiment("fig9", r)
     emit("fig9_packed_plus_revival_deadlines_met", 0.0,
-         f"{m.deadline_met_frac()*100:.2f}% (beyond-paper)")
+         f"{(r.deadline_met_frac or 0)*100:.2f}% (beyond-paper)")
     emit("fig9_packed_plus_revival_cold_starts", 0.0,
-         str(m.cold_start_count()))
+         str(r.cold_start_count))

@@ -3,11 +3,14 @@ eviction vs LRU with a constant-rate DAG + an on/off DAG and a small
 proactive memory pool (to force hard evictions)."""
 from __future__ import annotations
 
+from dataclasses import replace
+
 from repro.core import ClusterConfig, SGSConfig
 from repro.core.types import DagSpec, FunctionSpec
-from repro.sim import ConstantRate, OnOffRate, WorkloadSpec, run_archipelago
+from repro.sim import (ConstantRate, Experiment, OnOffRate, WorkloadSpec,
+                       simulate)
 
-from .common import emit
+from .common import emit, record_experiment
 
 
 def run(duration: float = 24.0) -> None:
@@ -19,13 +22,16 @@ def run(duration: float = 24.0) -> None:
                          (d2, OnOffRate(100.0, on_duration=4.0,
                                         off_duration=4.0))], duration)
     # small pool so that hard eviction actually happens (§7.3.1)
-    cc = ClusterConfig(n_sgs=1, workers_per_sgs=8, cores_per_worker=8,
-                       pool_mem_mb=6 * 128.0)
+    base = Experiment(
+        workload=spec, warmup=4.0,
+        cluster=ClusterConfig(n_sgs=1, workers_per_sgs=8,
+                              cores_per_worker=8, pool_mem_mb=6 * 128.0))
     for tag, fair in [("fair", True), ("lru", False)]:
-        res = run_archipelago(spec, cluster=cc,
-                              sgs_cfg=SGSConfig(fair_eviction=fair))
-        m = res.metrics.after_warmup(4.0)
-        emit(f"evict_{tag}_p999", m.latency_pct(99.9) * 1e6)
-        emit(f"evict_{tag}_cold_starts", 0.0, str(m.cold_start_count()))
+        r = simulate(replace(base, name=f"evict_{tag}",
+                             sgs=SGSConfig(fair_eviction=fair)))
+        record_experiment("eviction", r)
+        emit(f"evict_{tag}_p999",
+             (r.latency_percentiles["p99.9"] or 0) * 1e6)
+        emit(f"evict_{tag}_cold_starts", 0.0, str(r.cold_start_count))
         emit(f"evict_{tag}_deadlines_met", 0.0,
-             f"{m.deadline_met_frac()*100:.2f}%")
+             f"{(r.deadline_met_frac or 0)*100:.2f}%")

@@ -1,45 +1,38 @@
 """§6.1 fault tolerance: worker fail-stop mid-run — deadline adherence
 before/after, and whether the queuing-delay signal drives recovery
-scale-out."""
+scale-out.  Fault injection rides ``simulate``'s ``timed_calls`` hook;
+control-plane decision costs are zeroed to match the original direct-route
+driver."""
 from __future__ import annotations
 
-from repro.core import ClusterConfig, Request
-from repro.core.cluster import build_cluster
+from repro.core import ClusterConfig
 from repro.core.fault import fail_worker
 from repro.core.types import DagSpec, FunctionSpec
-from repro.sim import ConstantRate, WorkloadSpec
-from repro.sim.engine import SimEnv
-from repro.sim.metrics import Metrics
+from repro.sim import ConstantRate, Experiment, Metrics, WorkloadSpec, simulate
 
-from .common import emit
+from .common import emit, record_experiment
 
 
 def run(duration: float = 20.0) -> None:
-    env = SimEnv()
-    cc = ClusterConfig(n_sgs=3, workers_per_sgs=3, cores_per_worker=4)
-    lbs = build_cluster(env, cc)
     dag = DagSpec("d", (FunctionSpec("d/f", 0.08, setup_time=0.25),), (),
                   deadline=0.33)
-    metrics = Metrics()
     spec = WorkloadSpec([(dag, ConstantRate(80.0))], duration)
-    for t, d in spec.generate(0):
-        def fire(t=t, d=d):
-            req = Request(dag=d, arrival_time=env.now())
-            metrics.requests.append(req)
-            lbs.route(req, env.now())
-        env.call_at(t, fire)
-    env.every(0.05, lambda: lbs.check_scaling(env.now()), until=duration)
-
-    home = lbs.sgss[lbs.ring.lookup("d")]
     t_fail = duration / 3.0
 
-    def inject():
+    def inject(env, stack):
+        home = stack.lbs.sgss[stack.lbs.ring.lookup("d")]
         for w in list(home.workers[:2]):
             fail_worker(home, w.worker_id)
 
-    env.call_at(t_fail, inject)
-    env.run_until(duration + 3.0)
+    res = simulate(
+        Experiment(workload=spec, name="fault", drain=3.0,
+                   cluster=ClusterConfig(n_sgs=3, workers_per_sgs=3,
+                                         cores_per_worker=4),
+                   lb_cost=0.0, sgs_cost=0.0, params={"n_lbs": 1}),
+        timed_calls=[(t_fail, inject)])
+    record_experiment("fault", res)
 
+    metrics = res.sim.metrics
     pre = Metrics(requests=[r for r in metrics.requests
                             if 2.0 <= r.arrival_time < t_fail])
     post = Metrics(requests=[r for r in metrics.requests
@@ -51,4 +44,4 @@ def run(duration: float = 20.0) -> None:
     emit("fault_all_requests_completed", 0.0,
          str(len(metrics.completed) == len(metrics.requests)))
     emit("fault_recovery_scale_out", 0.0,
-         f"n_active={lbs.n_active('d')} (>=2 expected)")
+         f"n_active={res.sim.lbs.n_active('d')} (>=2 expected)")

@@ -2,23 +2,29 @@
 instant round-robin scale-out (paper: instant is ~1.5x worse at the tail)."""
 from __future__ import annotations
 
+from dataclasses import replace
+
 from repro.core import ClusterConfig, LBSConfig
 from repro.core.types import DagSpec, FunctionSpec
-from repro.sim import Sinusoidal, WorkloadSpec, run_archipelago
+from repro.sim import Experiment, Sinusoidal, WorkloadSpec, simulate
 
-from .common import emit
+from .common import emit, record_experiment
 
 
 def run(duration: float = 30.0) -> None:
     dag = DagSpec("d", (FunctionSpec("d/f", 0.1, setup_time=0.35),), (),
                   deadline=0.3)
     spec = WorkloadSpec([(dag, Sinusoidal(200.0, 150.0, 15.0))], duration)
-    cc = ClusterConfig(n_sgs=5, workers_per_sgs=4, cores_per_worker=6)
+    base = Experiment(
+        workload=spec, warmup=5.0,
+        cluster=ClusterConfig(n_sgs=5, workers_per_sgs=4,
+                              cores_per_worker=6))
     for tag, gradual in [("gradual", True), ("instant", False)]:
-        res = run_archipelago(spec, cluster=cc,
-                              lbs_cfg=LBSConfig(gradual=gradual))
-        m = res.metrics.after_warmup(5.0)
-        emit(f"scaleout_{tag}_p999", m.latency_pct(99.9) * 1e6)
-        emit(f"scaleout_{tag}_cold_starts", 0.0, str(m.cold_start_count()))
+        r = simulate(replace(base, name=f"scaleout_{tag}",
+                             lbs=LBSConfig(gradual=gradual)))
+        record_experiment("scaleout", r)
+        emit(f"scaleout_{tag}_p999",
+             (r.latency_percentiles["p99.9"] or 0) * 1e6)
+        emit(f"scaleout_{tag}_cold_starts", 0.0, str(r.cold_start_count))
         emit(f"scaleout_{tag}_deadlines_met", 0.0,
-             f"{m.deadline_met_frac()*100:.2f}%")
+             f"{(r.deadline_met_frac or 0)*100:.2f}%")

@@ -1,16 +1,21 @@
 """Benchmark harness: one function per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV rows.  Run:
-    PYTHONPATH=src python -m benchmarks.run [--only fig7,...] [--quick]
+Prints ``name,us_per_call,derived`` CSV rows and writes a machine-readable
+``BENCH_figs.json`` (one structured row per emitted metric, plus full
+``ExperimentResult`` rows for every simulated experiment).  Run:
+    python -m benchmarks.run [--only fig7,...] [--quick]
+(``PYTHONPATH=src`` is no longer required but still works.)
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 import traceback
+from pathlib import Path
 
-from .common import ROWS, emit
+from .common import EXPERIMENTS, RECORDS, ROWS, emit, reset
 
 
 def main() -> None:
@@ -18,7 +23,13 @@ def main() -> None:
     ap.add_argument("--only", default="")
     ap.add_argument("--quick", action="store_true",
                     help="shorter durations (CI smoke)")
+    ap.add_argument("--out", default="",
+                    help="JSON artifact path (default: BENCH_figs.json at "
+                         "the repo root, or BENCH_figs.partial.json when "
+                         "--only selects a subset, so partial runs never "
+                         "clobber the full artifact)")
     args = ap.parse_args()
+    reset()     # in-process reruns must not accumulate rows
 
     from . import (fig2d_sparrow, fig7_macro, fig8b_estimation,
                    fig9_placement, fig10_deadline_scaling, fig11_contention,
@@ -56,6 +67,24 @@ def main() -> None:
             traceback.print_exc()
             emit(f"_bench_{name}_wall", (time.time() - t0) * 1e6, "FAILED")
             failures += 1
+
+    repo_root = Path(__file__).resolve().parent.parent
+    default_name = "BENCH_figs.partial.json" if only else "BENCH_figs.json"
+    out_path = Path(args.out) if args.out else repo_root / default_name
+    payload = {
+        "schema": 1,
+        "bench": "figs",
+        "quick": bool(args.quick),
+        "only": only,
+        "python": sys.version.split()[0],
+        "rows": RECORDS,               # one structured row per emit()
+        "experiments": EXPERIMENTS,    # ExperimentResult.to_dict() rows
+    }
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {out_path} ({len(RECORDS)} rows, "
+          f"{len(EXPERIMENTS)} experiments; {len(ROWS)} CSV lines above)")
     if failures:
         sys.exit(1)
 

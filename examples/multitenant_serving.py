@@ -2,12 +2,18 @@
 SSM, MoE, VLM pipeline) share one cluster under Archipelago; a two-stage
 vision DAG exercises DAG-aware scheduling.  Real JAX execution.
 
-    PYTHONPATH=src python examples/multitenant_serving.py
+    python examples/multitenant_serving.py
+(works after `pip install -e .` or with PYTHONPATH=src)
 """
+import os
 import random
 import sys
 
-sys.path.insert(0, "src")
+try:
+    import repro  # noqa: F401
+except ImportError:  # no editable install: fall back to the checkout layout
+    sys.path.insert(0, os.path.join(
+        os.path.dirname(os.path.abspath(__file__)), "..", "src"))
 
 from repro.configs import get_config
 from repro.core import ClusterConfig

@@ -1,40 +1,54 @@
 """Reproduce the paper's headline macrobenchmark (Fig. 7) at full testbed
-scale: 8 SGSs x 8 workers x 20 cores, Workloads 1 & 2, Archipelago vs the
-centralized-FIFO-reactive baseline.
+scale via the declarative experiment API: 8 SGSs x 8 workers x 20 cores,
+Workloads 1 & 2, Archipelago vs the centralized-FIFO-reactive baseline.
 
-    PYTHONPATH=src python examples/paper_workload.py [--duration 25]
+    python examples/paper_workload.py [--duration 25]
+(works after `pip install -e .` or with PYTHONPATH=src)
 """
 import argparse
+import os
 import sys
+from dataclasses import replace
 
-sys.path.insert(0, "src")
+try:
+    import repro  # noqa: F401
+except ImportError:  # no editable install: fall back to the checkout layout
+    sys.path.insert(0, os.path.join(
+        os.path.dirname(os.path.abspath(__file__)), "..", "src"))
 
 from repro.core import ClusterConfig
-from repro.sim import (paper_workload_1, paper_workload_2, run_archipelago,
-                       run_baseline, summarize)
+from repro.sim import Experiment, simulate
+
+WARMUP = 5.0
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--duration", type=float, default=25.0)
     args = ap.parse_args()
-    cc = ClusterConfig()
-    for name, spec in [
-            ("Workload1", paper_workload_1(duration=args.duration, scale=1.3,
-                                           dags_per_class=2)),
-            ("Workload2", paper_workload_2(duration=args.duration, scale=1.0,
-                                           dags_per_class=2))]:
-        ra = run_archipelago(spec, cluster=cc)
-        rb = run_baseline(spec, cluster=cc)
-        ma = ra.metrics.after_warmup(5.0)
-        mb = rb.metrics.after_warmup(5.0)
+    for name, factory, kw in [
+            ("Workload1", "paper_workload_1",
+             dict(duration=args.duration, scale=1.3, dags_per_class=2)),
+            ("Workload2", "paper_workload_2",
+             dict(duration=args.duration, scale=1.0, dags_per_class=2))]:
+        base = Experiment(workload_factory=factory, workload_kwargs=kw,
+                          cluster=ClusterConfig(), warmup=WARMUP)
+        ra = simulate(replace(base, stack="archipelago"))
+        rb = simulate(replace(base, stack="fifo"))
         print(f"== {name} ==")
-        print(" ", summarize("archipelago", ma))
-        print(" ", summarize("baseline   ", mb))
-        ratio = mb.latency_pct(99.9) / max(ma.latency_pct(99.9), 1e-9)
+        for tag, r in [("archipelago", ra), ("baseline   ", rb)]:
+            lp = r.latency_percentiles
+            print(f"  {tag}: n={r.n_requests} done={r.n_completed} "
+                  f"p50={(lp['p50'] or 0)*1e3:.1f}ms "
+                  f"p99={(lp['p99'] or 0)*1e3:.1f}ms "
+                  f"p99.9={(lp['p99.9'] or 0)*1e3:.1f}ms "
+                  f"deadlines_met={(r.deadline_met_frac or 0)*100:.2f}% "
+                  f"cold_starts={r.cold_start_count}")
+        ratio = ((rb.latency_percentiles["p99.9"] or 0)
+                 / max(ra.latency_percentiles["p99.9"] or 0, 1e-9))
         print(f"  tail (99.9%) reduction: {ratio:.1f}x   "
-              f"deadlines: {ma.deadline_met_frac()*100:.2f}% vs "
-              f"{mb.deadline_met_frac()*100:.2f}%")
+              f"deadlines: {(ra.deadline_met_frac or 0)*100:.2f}% vs "
+              f"{(rb.deadline_met_frac or 0)*100:.2f}%")
 
 
 if __name__ == "__main__":

@@ -2,12 +2,18 @@
 Archipelago stack (LBS -> SGS -> workers), with REAL jitted JAX execution
 beneath the sandbox abstraction.
 
-    PYTHONPATH=src python examples/quickstart.py
+    python examples/quickstart.py
+(works after `pip install -e .` or with PYTHONPATH=src)
 """
+import os
 import random
 import sys
 
-sys.path.insert(0, "src")
+try:
+    import repro  # noqa: F401
+except ImportError:  # no editable install: fall back to the checkout layout
+    sys.path.insert(0, os.path.join(
+        os.path.dirname(os.path.abspath(__file__)), "..", "src"))
 
 from repro.configs import get_config
 from repro.core import ClusterConfig

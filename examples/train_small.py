@@ -2,13 +2,19 @@
 trained for a few hundred steps on the synthetic Markov-Zipf pipeline with
 the WSD schedule, gradient clipping, and checkpointing.
 
-    PYTHONPATH=src python examples/train_small.py [--steps 300]
+    python examples/train_small.py [--steps 300]
+(works after `pip install -e .` or with PYTHONPATH=src)
 """
 import argparse
+import os
 import sys
 import time
 
-sys.path.insert(0, "src")
+try:
+    import repro  # noqa: F401
+except ImportError:  # no editable install: fall back to the checkout layout
+    sys.path.insert(0, os.path.join(
+        os.path.dirname(os.path.abspath(__file__)), "..", "src"))
 
 import jax
 import jax.numpy as jnp

@@ -8,6 +8,8 @@ Public API:
     SandboxManager, Worker                -- even placement, soft/hard evict
     CentralizedFIFO, SparrowScheduler     -- paper baselines
     build_cluster, ClusterConfig          -- one-call stack construction
+    register_stack, get_stack, Stack      -- pluggable scheduler-stack
+                                             registry (docs/API.md)
 """
 from .types import (DagSpec, FunctionSpec, Invocation, Request, Sandbox,
                     SandboxState)
@@ -17,6 +19,7 @@ from .sgs import Env, SGSConfig, SemiGlobalScheduler
 from .lbs import ConsistentHashRing, LBSConfig, LoadBalancer
 from .baselines import CentralizedFIFO, SparrowScheduler
 from .cluster import ClusterConfig, build_cluster, build_flat_workers
+from .stacks import (Stack, available_stacks, get_stack, register_stack)
 from .fault import (StateStore, checkpoint_lbs, checkpoint_sgs, fail_worker,
                     restore_lbs, restore_sgs)
 
@@ -26,6 +29,7 @@ __all__ = [
     "SandboxManager", "Worker", "Env", "SGSConfig", "SemiGlobalScheduler",
     "ConsistentHashRing", "LBSConfig", "LoadBalancer", "CentralizedFIFO",
     "SparrowScheduler", "ClusterConfig", "build_cluster", "build_flat_workers",
+    "Stack", "available_stacks", "get_stack", "register_stack",
     "StateStore", "checkpoint_lbs", "checkpoint_sgs", "fail_worker",
     "restore_lbs", "restore_sgs",
 ]

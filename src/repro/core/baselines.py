@@ -31,6 +31,7 @@ class CentralizedFIFO:
         self.n_cold_starts = 0
         self.n_warm_hits = 0
         self.queuing_delays: List[float] = []
+        self.queuing_delay_times: List[float] = []   # dispatch timestamps
         self.completed_requests: List[Request] = []
 
     # -- intake ---------------------------------------------------------------
@@ -71,6 +72,7 @@ class CentralizedFIFO:
         inv.start_time = now
         qd = now - inv.ready_time
         self.queuing_delays.append(qd)
+        self.queuing_delay_times.append(now)
         inv.request.total_queuing_delay += qd
         w.busy_cores += 1
         setup = 0.0
@@ -147,6 +149,7 @@ class SparrowScheduler:
         self.n_cold_starts = 0
         self.n_warm_hits = 0
         self.queuing_delays: List[float] = []
+        self.queuing_delay_times: List[float] = []   # dispatch timestamps
         self.completed_requests: List[Request] = []
 
     def submit_request(self, req: Request) -> None:
@@ -172,6 +175,7 @@ class SparrowScheduler:
             inv.start_time = now
             qd = now - inv.ready_time
             self.queuing_delays.append(qd)
+            self.queuing_delay_times.append(now)
             inv.request.total_queuing_delay += qd
             w.busy_cores += 1
             sbx = w.warm_available(inv.fn.name, now)

@@ -94,6 +94,7 @@ class SemiGlobalScheduler:
         self.n_cold_starts = 0
         self.n_warm_hits = 0
         self.queuing_delays: List[float] = []
+        self.queuing_delay_times: List[float] = []   # dispatch timestamps
         self.completed_requests: List[Request] = []
 
     # ---------------------------------------------------------------- intake
@@ -268,6 +269,7 @@ class SemiGlobalScheduler:
         inv.start_time = now
         qdelay = now - inv.ready_time
         self.queuing_delays.append(qdelay)
+        self.queuing_delay_times.append(now)
         inv.request.total_queuing_delay += qdelay
         w.busy_cores += 1
         self._free_cores -= 1

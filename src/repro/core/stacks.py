@@ -1,0 +1,352 @@
+"""Pluggable scheduler-stack registry for the experiment API.
+
+The paper's evaluation (§7) is a matrix of *scheduler stacks* × workloads ×
+cluster shapes.  A stack bundles everything between "a request arrived" and
+"a scheduler object accepted it": cluster construction, control-plane
+service clocks (the §7.4 per-decision costs), routing, and background loops.
+``repro.sim.experiment.simulate`` drives any registered stack through ONE
+generic arrival-pump loop, so adding a scheduler is a one-class job:
+
+    from repro.core.stacks import register_stack, FlatWorkerStack
+
+    @register_stack("my-scheduler")
+    class MyStack(FlatWorkerStack):
+        def make_scheduler(self, workers, env, exp):
+            return MyScheduler(workers, env, **exp.params)
+
+Built-in stacks: ``archipelago`` (LBS → SGSs, §4-§5), ``fifo`` (centralized
+FIFO + keep-alive, §2.4 baseline, alias ``baseline``), ``sparrow``
+(power-of-two probing, Fig. 2d), and ``pull`` — a worker-initiated
+pull-based scheduler in the spirit of Hiku [Akbari & Hauswirth 2025],
+registered purely through this module as the extensibility proof.
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass
+from typing import (TYPE_CHECKING, Callable, Dict, List, Optional, Protocol,
+                    Type)
+
+from .baselines import CentralizedFIFO, SparrowScheduler
+from .cluster import build_cluster, build_flat_workers
+from .lbs import LoadBalancer
+from .sandbox import Worker
+from .types import Request, Sandbox
+
+if TYPE_CHECKING:       # pragma: no cover - typing only, avoids a core->sim cycle
+    from ..sim.experiment import Experiment
+    from ..sim.metrics import Metrics
+    from ..sim.workload import WorkloadSpec
+
+# §7.4 measured control-plane decision costs (Go prototype medians)
+LB_DECISION_COST = 190e-6
+SGS_DECISION_COST = 241e-6
+
+
+@dataclass(slots=True)
+class _ServiceClock:
+    """Serializes work through one control-plane component (M/D/1 server).
+
+    The paper's measured per-decision costs (§7.4): LBS routing ~190us,
+    SGS scheduling ~241us.  A single centralized scheduler at several
+    thousand RPS approaches rho=1 and its queue explodes — exactly the
+    §2.4 scalability argument; Archipelago spreads this cost over many
+    SGSs.
+    """
+
+    busy_until: float = 0.0
+
+    def acquire(self, now: float, service: float) -> float:
+        start = self.busy_until
+        if now > start:
+            start = now
+        self.busy_until = start + service
+        return self.busy_until
+
+
+class Stack(Protocol):
+    """What ``simulate``'s generic pump loop needs from a scheduler stack.
+
+    Lifecycle: ``build`` once, ``submit`` per arrival (called inside the
+    pump at the request's arrival instant), ``start_background`` once after
+    the first arrival is scheduled (periodic scaling passes etc.), and
+    ``collect`` after the run drains (fold per-scheduler samples into the
+    run's Metrics).
+
+    ``submit`` is the per-arrival hot path: the built-in stacks rebind
+    ``self.submit`` in ``build`` to a closure over locals (clocks, costs,
+    ``env.call_at``) so the pump pays no attribute lookups per arrival —
+    exactly like the pre-registry drivers.  Subclasses that override
+    ``submit`` as a plain method keep working (the rebinding is skipped).
+    """
+
+    name: str
+    lbs: Optional[LoadBalancer]
+    scheduler: object
+
+    def build(self, env, exp: "Experiment", spec: "WorkloadSpec") -> None: ...
+    def submit(self, req: Request, now: float) -> None: ...
+    def start_background(self) -> None: ...
+    def collect(self, metrics: "Metrics") -> None: ...
+    def counters(self) -> Dict[str, int]: ...
+
+
+_STACKS: Dict[str, Type] = {}
+
+
+def register_stack(name: str, *aliases: str) -> Callable[[Type], Type]:
+    """Class decorator: make a stack constructible by name through
+    ``Experiment(stack=name)``.  Raises on duplicate registration."""
+
+    def deco(cls: Type) -> Type:
+        names = (name, *aliases)
+        taken = [n for n in names if n in _STACKS]
+        if taken:       # validate before inserting: no partial registration
+            raise ValueError(f"stack {taken[0]!r} is already registered")
+        for n in names:
+            _STACKS[n] = cls
+        cls.name = name
+        return cls
+
+    return deco
+
+
+def get_stack(name: str) -> Type:
+    try:
+        return _STACKS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown stack {name!r}; registered stacks: "
+            f"{', '.join(sorted(_STACKS))}") from None
+
+
+def available_stacks() -> List[str]:
+    return sorted(_STACKS)
+
+
+# ---------------------------------------------------------------------------
+# Built-in stacks
+# ---------------------------------------------------------------------------
+
+
+@register_stack("archipelago")
+class ArchipelagoStack:
+    """Full paper stack: scalable LBS tier → semi-global schedulers (§4-§5).
+
+    ``params``: ``n_lbs`` (parallel LB replicas, default 4).
+    """
+
+    lbs: Optional[LoadBalancer] = None
+    scheduler: object = None
+
+    def build(self, env, exp: "Experiment", spec: "WorkloadSpec") -> None:
+        self.env = env
+        self.exp = exp
+        self.spec = spec
+        self.lbs = build_cluster(env, exp.cluster, exp.sgs, exp.lbs)
+        n_lb = max(1, int(exp.params.get("n_lbs", 4)))
+        self._n_lb = n_lb
+        self._lb_clocks = [_ServiceClock() for _ in range(n_lb)]
+        self._sgs_clocks = {sid: _ServiceClock() for sid in self.lbs.sgss}
+        self._arrival_no = 0
+        if type(self).submit is ArchipelagoStack.submit:
+            # hot path: close over locals so the pump pays zero attribute
+            # lookups per arrival (same constants as the pre-registry driver)
+            lb_clocks = self._lb_clocks
+            sgs_clocks = self._sgs_clocks
+            select = self.lbs.select
+            call_at = env.call_at
+            lb_cost = exp.lb_cost
+            sgs_cost = exp.sgs_cost
+            nxt = itertools.count().__next__
+
+            def submit(req: Request, now: float) -> None:
+                # hop 1: LBS routing decision (a scalable service: many LBs)
+                t_routed = lb_clocks[nxt() % n_lb].acquire(now, lb_cost)
+                sgs = select(req, now)
+                # hop 2: SGS scheduling decision, serialized per SGS
+                t_sched = sgs_clocks[sgs.sgs_id].acquire(
+                    t_routed, sgs_cost * len(req.dag.functions))
+                call_at(t_sched, sgs.submit_request, req)
+
+            self.submit = submit
+
+    def submit(self, req: Request, now: float) -> None:
+        # hop 1: LBS routing decision (LBS is a scalable service: many LBs)
+        i = self._arrival_no
+        self._arrival_no = i + 1
+        t_routed = self._lb_clocks[i % self._n_lb].acquire(
+            now, self.exp.lb_cost)
+        sgs = self.lbs.select(req, now)
+        # hop 2: SGS scheduling decision, serialized per SGS
+        t_sched = self._sgs_clocks[sgs.sgs_id].acquire(
+            t_routed, self.exp.sgs_cost * len(req.dag.functions))
+        self.env.call_at(t_sched, sgs.submit_request, req)
+
+    def start_background(self) -> None:
+        # periodic scaling pass (the LBS's background loop, §5.2)
+        lbs = self.lbs
+        env = self.env
+        env.every(lbs.cfg.decision_interval / 5.0,
+                  lambda: lbs.check_scaling(env.now()),
+                  until=self.spec.duration + self.exp.drain)
+
+    def collect(self, metrics: "Metrics") -> None:
+        for s in self.lbs.sgss.values():
+            metrics.queuing_delays.extend(s.queuing_delays)
+            metrics.queuing_delay_times.extend(s.queuing_delay_times)
+
+    def counters(self) -> Dict[str, int]:
+        sgss = self.lbs.sgss.values()
+        return {"cold_starts": sum(s.n_cold_starts for s in sgss),
+                "warm_hits": sum(s.n_warm_hits for s in sgss)}
+
+
+class FlatWorkerStack:
+    """Base for centralized/decentralized baselines over one flat worker
+    pool.  Subclasses provide ``make_scheduler``; the default ``submit``
+    serializes every decision through ONE control-plane clock at
+    ``exp.sgs_cost`` per DAG function (§2.4's centralized bottleneck)."""
+
+    lbs: Optional[LoadBalancer] = None
+
+    def build(self, env, exp: "Experiment", spec: "WorkloadSpec") -> None:
+        self.env = env
+        self.exp = exp
+        self.spec = spec
+        self.scheduler = self.make_scheduler(
+            build_flat_workers(exp.cluster), env, exp)
+        self._clock = _ServiceClock()
+        if type(self).submit is FlatWorkerStack.submit:
+            # hot path: same closure-over-locals trick as ArchipelagoStack
+            acquire = self._clock.acquire
+            call_at = env.call_at
+            submit_request = self.scheduler.submit_request
+            sgs_cost = exp.sgs_cost
+
+            def submit(req: Request, now: float) -> None:
+                call_at(acquire(now, sgs_cost * len(req.dag.functions)),
+                        submit_request, req)
+
+            self.submit = submit
+
+    def make_scheduler(self, workers: List[Worker], env,
+                       exp: "Experiment") -> object:
+        raise NotImplementedError
+
+    def submit(self, req: Request, now: float) -> None:
+        t_sched = self._clock.acquire(
+            now, self.exp.sgs_cost * len(req.dag.functions))
+        self.env.call_at(t_sched, self.scheduler.submit_request, req)
+
+    def start_background(self) -> None:
+        pass
+
+    def collect(self, metrics: "Metrics") -> None:
+        metrics.queuing_delays.extend(self.scheduler.queuing_delays)
+        metrics.queuing_delay_times.extend(
+            self.scheduler.queuing_delay_times)
+
+    def counters(self) -> Dict[str, int]:
+        return {"cold_starts": self.scheduler.n_cold_starts,
+                "warm_hits": self.scheduler.n_warm_hits}
+
+
+@register_stack("fifo", "baseline")
+class CentralizedFIFOStack(FlatWorkerStack):
+    """Centralized FIFO + reactive sandboxes + fixed keep-alive (§7.1).
+
+    ``params``: ``keepalive`` (seconds, default 900).
+    """
+
+    def make_scheduler(self, workers, env, exp):
+        return CentralizedFIFO(
+            workers, env, keepalive=float(exp.params.get("keepalive", 900.0)))
+
+
+@register_stack("sparrow")
+class SparrowStack(FlatWorkerStack):
+    """Sparrow-style power-of-two probing [41] (Fig. 2d).  No control-plane
+    clock: probing is parallel, so submission is immediate (as in the
+    original ``run_sparrow`` driver).
+
+    ``params``: ``probes`` (default 2).
+    """
+
+    def make_scheduler(self, workers, env, exp):
+        return SparrowScheduler(workers, env,
+                                probes=int(exp.params.get("probes", 2)),
+                                seed=exp.seed)
+
+    def build(self, env, exp: "Experiment", spec: "WorkloadSpec") -> None:
+        super().build(env, exp, spec)
+        submit_request = self.scheduler.submit_request
+        self.submit = lambda req, now: submit_request(req)
+
+    def submit(self, req: Request, now: float) -> None:
+        self.scheduler.submit_request(req)
+
+
+# ---------------------------------------------------------------------------
+# Extensibility proof: a NEW stack added purely via the registry
+# ---------------------------------------------------------------------------
+
+
+class PullScheduler(CentralizedFIFO):
+    """Worker-initiated (pull-based) scheduling à la Hiku [Akbari &
+    Hauswirth 2025]: instead of the queue head picking a worker, each idle
+    worker pulls work it can serve warm.
+
+    The central dispatcher only holds ready invocations; whenever a worker
+    has a free core it scans the first ``scan_limit`` queued invocations for
+    one it holds a WARM sandbox for (late binding → accidental affinity
+    becomes deliberate affinity) and falls back to the queue head.  This
+    sidesteps CentralizedFIFO's strict head-of-line blocking while keeping
+    its reactive sandbox + keep-alive model.
+    """
+
+    def __init__(self, workers: List[Worker], env, keepalive: float = 900.0,
+                 scan_limit: int = 16):
+        super().__init__(workers, env, keepalive=keepalive)
+        self.scan_limit = scan_limit
+
+    def _dispatch(self) -> None:
+        now = self.env.now()
+        q = self._queue
+        progress = True
+        while q and progress:
+            progress = False
+            for w in self.workers:
+                if not q:
+                    break
+                if w.free_cores <= 0:
+                    continue
+                # the pulling worker prefers queued work it can serve warm
+                pick = 0
+                sbx: Optional[Sandbox] = None
+                for j, inv in enumerate(
+                        itertools.islice(q, self.scan_limit)):
+                    s = w.warm_available(inv.fn.name, now)
+                    if s is not None:
+                        pick, sbx = j, s
+                        break
+                inv = q[pick]
+                del q[pick]
+                if sbx is None:
+                    sbx = w.warm_available(inv.fn.name, now)
+                self._start(inv, w, sbx, now)
+                progress = True
+
+
+@register_stack("pull")
+class PullStack(FlatWorkerStack):
+    """Pull-based worker-initiated scheduler (see ``PullScheduler``).
+
+    ``params``: ``keepalive`` (default 900), ``scan_limit`` (default 16).
+    """
+
+    def make_scheduler(self, workers, env, exp):
+        return PullScheduler(
+            workers, env,
+            keepalive=float(exp.params.get("keepalive", 900.0)),
+            scan_limit=int(exp.params.get("scan_limit", 16)))

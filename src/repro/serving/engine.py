@@ -84,4 +84,5 @@ class ServingStack:
         self.env.run_until(until)
         for s in self.lbs.sgss.values():
             self.metrics.queuing_delays.extend(s.queuing_delays)
+            self.metrics.queuing_delay_times.extend(s.queuing_delay_times)
         return self.metrics

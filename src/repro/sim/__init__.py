@@ -5,11 +5,15 @@ from .workload import (ArrivalProcess, ConstantRate, OnOffRate, PoissonResampled
                        Sinusoidal, WorkloadSpec, make_paper_dag,
                        paper_workload_1, paper_workload_2)
 from .metrics import Metrics, summarize
-from .runner import SimResult, run_archipelago, run_baseline, run_sparrow
+from .experiment import (ClassStats, Experiment, ExperimentResult, SimResult,
+                         SweepResult, run_sweep, simulate)
+from .runner import run_archipelago, run_baseline, run_sparrow
 
 __all__ = [
     "SimEnv", "ArrivalProcess", "ConstantRate", "OnOffRate",
     "PoissonResampled", "Sinusoidal", "WorkloadSpec", "make_paper_dag",
     "paper_workload_1", "paper_workload_2", "Metrics", "summarize",
-    "SimResult", "run_archipelago", "run_baseline", "run_sparrow",
+    "ClassStats", "Experiment", "ExperimentResult", "SimResult",
+    "SweepResult", "run_sweep", "simulate",
+    "run_archipelago", "run_baseline", "run_sparrow",
 ]

@@ -1,0 +1,415 @@
+"""Declarative experiment API: one generic pump loop for every stack.
+
+The paper's evaluation (§7) is a matrix of scheduler stacks × workloads ×
+cluster shapes.  ``Experiment`` names one cell of that matrix declaratively;
+``simulate`` drives any registered stack (``repro.core.stacks``) through a
+single arrival-pump loop; ``ExperimentResult`` is the typed, JSON-round-
+trippable summary; ``run_sweep`` expands seed/scale/cluster grids with a
+stable row schema.
+
+    from repro.sim import Experiment, simulate
+
+    r = simulate(Experiment(stack="archipelago",
+                            workload_factory="paper_workload_2",
+                            workload_kwargs=dict(duration=10.0, scale=0.1),
+                            warmup=3.0))
+    print(r.latency_percentiles["p99.9"], r.deadline_met_frac)
+
+The legacy ``run_archipelago``/``run_baseline``/``run_sparrow`` drivers in
+``repro.sim.runner`` are thin shims over this loop and remain decision-
+identical to their pre-refactor selves (``tests/test_equivalence.py``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import math
+import time
+from dataclasses import dataclass, field
+from typing import (Any, Callable, Dict, List, Mapping, Optional, Sequence,
+                    Tuple, Union)
+
+from ..core.cluster import ClusterConfig
+from ..core.lbs import LBSConfig, LoadBalancer
+from ..core.sgs import SGSConfig
+from ..core.stacks import (LB_DECISION_COST, SGS_DECISION_COST, Stack,
+                           get_stack)
+from ..core.types import DagSpec, Request
+from .engine import SimEnv
+from .metrics import Metrics, percentile
+from .workload import WorkloadSpec, paper_workload_1, paper_workload_2
+
+__all__ = [
+    "Experiment", "ExperimentResult", "ClassStats", "SimResult",
+    "simulate", "run_sweep", "SweepResult", "WORKLOAD_FACTORIES",
+]
+
+# Named workload factories so sweeps can construct per-cell workloads from a
+# string + kwargs (a shared WorkloadSpec would pin scale/duration/seed).
+WORKLOAD_FACTORIES: Dict[str, Callable[..., WorkloadSpec]] = {
+    "paper_workload_1": paper_workload_1,
+    "paper_workload_2": paper_workload_2,
+}
+
+
+@dataclass
+class SimResult:
+    """Raw simulation handles (the legacy ``run_*`` return type)."""
+
+    metrics: Metrics
+    env: SimEnv
+    lbs: Optional[LoadBalancer] = None
+    scheduler: object = None
+
+
+@dataclass
+class Experiment:
+    """One declarative simulation: workload × cluster × stack × knobs.
+
+    Workload is either an explicit ``workload`` spec or a
+    ``workload_factory`` (callable or a ``WORKLOAD_FACTORIES`` name) applied
+    to ``workload_kwargs`` — use the factory form in sweeps so each cell can
+    vary scale/duration.  ``params`` holds stack-specific knobs (``n_lbs``,
+    ``keepalive``, ``probes``, ``scan_limit``, ...); ``sgs``/``lbs`` carry
+    the Archipelago policy configs; ``lb_cost``/``sgs_cost`` are the §7.4
+    control-plane decision costs.
+    """
+
+    stack: str = "archipelago"
+    workload: Optional[WorkloadSpec] = None
+    workload_factory: Union[str, Callable[..., WorkloadSpec], None] = None
+    workload_kwargs: Dict[str, Any] = field(default_factory=dict)
+    cluster: Optional[ClusterConfig] = None
+    sgs: Optional[SGSConfig] = None
+    lbs: Optional[LBSConfig] = None
+    params: Dict[str, Any] = field(default_factory=dict)
+    lb_cost: float = LB_DECISION_COST
+    sgs_cost: float = SGS_DECISION_COST
+    seed: int = 0
+    warmup: float = 0.0            # steady-state window start (metrics only)
+    drain: float = 5.0             # extra simulated time after last arrival
+    workload_method: str = "numpy"
+    name: str = ""
+
+    def resolve_workload(self) -> WorkloadSpec:
+        if self.workload is not None:
+            return self.workload
+        f = self.workload_factory
+        if isinstance(f, str):
+            try:
+                f = WORKLOAD_FACTORIES[f]
+            except KeyError:
+                raise ValueError(
+                    f"unknown workload factory {f!r}; known: "
+                    f"{', '.join(sorted(WORKLOAD_FACTORIES))}") from None
+        if f is None:
+            raise ValueError(
+                "Experiment needs either `workload` or `workload_factory`")
+        return f(**self.workload_kwargs)
+
+    def label(self) -> str:
+        if self.name:
+            return self.name
+        wl = (self.workload_factory
+              if isinstance(self.workload_factory, str) else "custom")
+        return f"{self.stack}/{wl}/seed{self.seed}"
+
+
+# ---------------------------------------------------------------------------
+# Typed results
+# ---------------------------------------------------------------------------
+
+_PCTS: Tuple[Tuple[str, float], ...] = (
+    ("p50", 50.0), ("p90", 90.0), ("p99", 99.0), ("p99.9", 99.9))
+
+
+def _pct_dict(xs: Sequence[float]) -> Dict[str, Optional[float]]:
+    """Nearest-rank percentiles (same rule as ``metrics.percentile``), one
+    sort for all requested ranks — this runs on ~1e5-sample lists per
+    ``simulate`` call."""
+    if not xs:
+        return {k: None for k, _ in _PCTS}
+    s = sorted(xs)
+    n1 = len(s) - 1
+    return {k: s[max(0, min(n1, int(round(p / 100.0 * n1))))]
+            for k, p in _PCTS}
+
+
+def _none_if_nan(x: float) -> Optional[float]:
+    return None if math.isnan(x) else x
+
+
+@dataclass
+class ClassStats:
+    """Per-DAG-class (C1..C4 style) steady-state breakdown."""
+
+    n_requests: int
+    n_completed: int
+    p50: Optional[float]
+    p99: Optional[float]
+    deadline_met_frac: Optional[float]
+    cold_starts: int
+
+    def to_dict(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "ClassStats":
+        return cls(**d)
+
+
+@dataclass
+class ExperimentResult:
+    """Structured summary of one ``simulate`` run.
+
+    All latency/queuing/deadline statistics are computed on the steady-state
+    window (arrivals at ``t >= warmup``; queuing-delay samples are timestamp-
+    filtered the same way).  ``warm_hits`` is a whole-run scheduler counter.
+    ``to_dict``/``from_dict`` round-trip losslessly through JSON (``sim``,
+    the raw simulation handle, is deliberately excluded and ``None`` after
+    ``from_dict``).
+    """
+
+    name: str
+    stack: str
+    seed: int
+    duration: float
+    warmup: float
+    n_requests_total: int          # whole run, including warmup
+    n_requests: int                # steady-state window
+    n_completed: int
+    latency_percentiles: Dict[str, Optional[float]]
+    queuing_percentiles: Dict[str, Optional[float]]
+    deadline_met_frac: Optional[float]
+    cold_start_count: int
+    cold_start_frac: Optional[float]
+    warm_hits: int
+    per_class: Dict[str, ClassStats]
+    n_events: int
+    wall_s: float
+    sim: Optional[SimResult] = field(default=None, repr=False, compare=False)
+
+    def to_dict(self) -> Dict[str, Any]:
+        d = {f.name: getattr(self, f.name)
+             for f in dataclasses.fields(self) if f.name != "sim"}
+        d["latency_percentiles"] = dict(self.latency_percentiles)
+        d["queuing_percentiles"] = dict(self.queuing_percentiles)
+        d["per_class"] = {k: v.to_dict()
+                          for k, v in sorted(self.per_class.items())}
+        return d
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "ExperimentResult":
+        kw = dict(d)
+        kw["per_class"] = {k: ClassStats.from_dict(v)
+                           for k, v in d["per_class"].items()}
+        return cls(**kw)
+
+
+def _build_result(exp: Experiment, spec: WorkloadSpec, sim: SimResult,
+                  warm_hits: int, wall_s: float) -> ExperimentResult:
+    m = sim.metrics.after_warmup(exp.warmup) if exp.warmup > 0 \
+        else sim.metrics
+    per_class = {}
+    for cls_name, cm in m.by_class().items():
+        pcts = _pct_dict(cm.latencies())
+        per_class[cls_name] = ClassStats(
+            n_requests=len(cm.requests),
+            n_completed=len(cm.completed),
+            p50=pcts["p50"],
+            p99=pcts["p99"],
+            deadline_met_frac=_none_if_nan(cm.deadline_met_frac()),
+            cold_starts=cm.cold_start_count())
+    return ExperimentResult(
+        name=exp.label(),
+        stack=exp.stack,
+        seed=exp.seed,
+        duration=spec.duration,
+        warmup=exp.warmup,
+        n_requests_total=len(sim.metrics.requests),
+        n_requests=len(m.requests),
+        n_completed=len(m.completed),
+        latency_percentiles=_pct_dict(m.latencies()),
+        queuing_percentiles=_pct_dict(m.queuing_delays),
+        deadline_met_frac=_none_if_nan(m.deadline_met_frac()),
+        cold_start_count=m.cold_start_count(),
+        cold_start_frac=_none_if_nan(m.cold_start_frac()),
+        warm_hits=warm_hits,
+        per_class=per_class,
+        n_events=sim.env.n_events,
+        wall_s=round(wall_s, 4),
+        sim=sim)
+
+
+# ---------------------------------------------------------------------------
+# The one generic arrival-pump loop
+# ---------------------------------------------------------------------------
+
+
+def _arrival_stream(spec: WorkloadSpec, seed: int, method: str
+                    ) -> Tuple[List[float], List[DagSpec]]:
+    """Time-sorted arrival times + per-arrival DAGs.
+
+    The vectorized path never materializes per-arrival tuples; numpy floats
+    are converted once (``tolist`` round-trips float64 exactly)."""
+    if method == "legacy":
+        pairs = spec.generate(seed, method="legacy")
+        return [t for t, _ in pairs], [d for _, d in pairs]
+    if method != "numpy":
+        raise ValueError(f"unknown generation method {method!r}")
+    ts, idx, tenant_dags = spec.generate_arrays(seed)
+    dags = list(map(tenant_dags.__getitem__, idx.tolist()))
+    return ts.tolist(), dags
+
+
+Hook = Callable[[SimEnv, Stack], None]
+
+
+def simulate(exp: Experiment, *,
+             hooks: Sequence[Tuple[float, Hook]] = (),
+             timed_calls: Sequence[Tuple[float, Hook]] = ()
+             ) -> ExperimentResult:
+    """Run one experiment through the generic pump loop.
+
+    ``hooks`` are periodic observers ``(interval, fn(env, stack))``
+    (demand sampling, custom telemetry); ``timed_calls`` fire once at the
+    given simulated time (fault injection).  Both run inside the event loop
+    and may mutate the stack — they exist so benchmarks never have to
+    re-plumb the pump by hand.
+    """
+    exp_spec, sim, stack, wall = _run_experiment(exp, hooks, timed_calls)
+    warm_hits = stack.counters().get("warm_hits", 0)
+    return _build_result(exp, exp_spec, sim, warm_hits, wall)
+
+
+def _run_experiment(exp: Experiment,
+                    hooks: Sequence[Tuple[float, Hook]] = (),
+                    timed_calls: Sequence[Tuple[float, Hook]] = ()
+                    ) -> Tuple[WorkloadSpec, SimResult, Stack, float]:
+    """The pump loop without result summarization (the legacy ``run_*``
+    shims return the raw ``SimResult`` and skip the summary entirely)."""
+    spec = exp.resolve_workload()
+    env = SimEnv()
+    stack: Stack = get_stack(exp.stack)()
+    stack.build(env, exp, spec)
+    metrics = Metrics()
+
+    t0 = time.perf_counter()
+    times, dags = _arrival_stream(spec, exp.seed, exp.workload_method)
+    n = len(times)
+    requests = metrics.requests
+    submit = stack.submit
+
+    def pump(i: int) -> None:
+        # fire arrival i, then lazily schedule arrival i+1: the event heap
+        # holds at most one pending arrival instead of the whole trace
+        now = env.now()
+        req = Request(dag=dags[i], arrival_time=now)
+        requests.append(req)
+        submit(req, now)
+        i += 1
+        if i < n:
+            env.call_at(times[i], pump, i)
+
+    if n:
+        env.call_at(times[0], pump, 0)
+    stack.start_background()
+    horizon = spec.duration + exp.drain
+    for interval, fn in hooks:
+        env.every(interval, lambda fn=fn: fn(env, stack), until=horizon)
+    for t, fn in timed_calls:
+        env.call_at(t, fn, env, stack)
+
+    env.run_until(horizon)
+    stack.collect(metrics)
+    wall = time.perf_counter() - t0
+
+    sim = SimResult(metrics=metrics, env=env,
+                    lbs=getattr(stack, "lbs", None),
+                    scheduler=getattr(stack, "scheduler", None))
+    return spec, sim, stack, wall
+
+
+# ---------------------------------------------------------------------------
+# Sweeps
+# ---------------------------------------------------------------------------
+
+
+def _override(exp: Experiment, path: str, value: Any) -> Experiment:
+    """Return a copy of ``exp`` with one (possibly dotted) field replaced.
+
+    ``"seed"`` replaces a top-level field; ``"cluster.n_sgs"`` /
+    ``"sgs.proactive"`` / ``"lbs.scale_out_threshold"`` replace a field of a
+    nested config (instantiating the default config when unset);
+    ``"params.probes"`` / ``"workload_kwargs.scale"`` set one dict key.
+    """
+    head, _, rest = path.partition(".")
+    if not rest:
+        if head not in {f.name for f in dataclasses.fields(exp)}:
+            raise ValueError(f"unknown Experiment field {head!r}")
+        return dataclasses.replace(exp, **{head: value})
+    if head in ("params", "workload_kwargs"):
+        d = dict(getattr(exp, head))
+        d[rest] = value
+        return dataclasses.replace(exp, **{head: d})
+    defaults = {"cluster": ClusterConfig, "sgs": SGSConfig, "lbs": LBSConfig}
+    if head not in defaults:
+        raise ValueError(f"cannot sweep over {path!r}")
+    sub = getattr(exp, head) or defaults[head]()
+    return dataclasses.replace(
+        exp, **{head: dataclasses.replace(sub, **{rest: value})})
+
+
+@dataclass
+class SweepResult:
+    """Grid-sweep output with a stable row schema.
+
+    Each row is ``{"cell": {axis: value, ...}, "result": <ExperimentResult
+    dict>}``; rows appear in cartesian-product order of ``axes`` (first axis
+    slowest).  Every cell is an independent fresh simulation, so rows are
+    deterministic per (seed, config) and independent of execution order.
+    """
+
+    axes: Dict[str, List[Any]]
+    rows: List[Dict[str, Any]]
+    # live ExperimentResult objects (with .sim) when run with keep_sim=True
+    experiment_results: Optional[List[ExperimentResult]] = None
+
+    def __iter__(self):
+        return iter(self.rows)
+
+    def __len__(self) -> int:
+        return len(self.rows)
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {"schema": 1, "axes": self.axes, "rows": self.rows}
+
+    def results(self) -> List[ExperimentResult]:
+        if self.experiment_results is not None:
+            return list(self.experiment_results)
+        return [ExperimentResult.from_dict(r["result"]) for r in self.rows]
+
+
+def run_sweep(base: Experiment, axes: Mapping[str, Sequence[Any]],
+              keep_sim: bool = False) -> SweepResult:
+    """Cartesian sweep over ``axes`` (axis name → values; names follow
+    ``_override``'s dotted-path rules) starting from ``base``.  With
+    ``keep_sim`` the live per-cell results (including ``.sim``) are retained
+    on ``SweepResult.experiment_results`` for bespoke analysis."""
+    names = list(axes)
+    rows: List[Dict[str, Any]] = []
+    objs: List[ExperimentResult] = []
+    for combo in itertools.product(*(list(axes[k]) for k in names)):
+        exp = base
+        cell: Dict[str, Any] = {}
+        for k, v in zip(names, combo):
+            exp = _override(exp, k, v)
+            cell[k] = v
+        res = simulate(exp)
+        rows.append({"cell": cell, "result": res.to_dict()})
+        if keep_sim:
+            objs.append(res)
+        else:
+            res.sim = None
+    return SweepResult(axes={k: list(v) for k, v in axes.items()}, rows=rows,
+                       experiment_results=objs if keep_sim else None)

@@ -21,6 +21,9 @@ def percentile(xs: Sequence[float], p: float) -> float:
 class Metrics:
     requests: List[Request] = field(default_factory=list)
     queuing_delays: List[float] = field(default_factory=list)
+    # per-sample dispatch timestamps, parallel to ``queuing_delays`` — lets
+    # steady-state views filter delay samples and requests consistently
+    queuing_delay_times: List[float] = field(default_factory=list)
 
     @property
     def completed(self) -> List[Request]:
@@ -29,10 +32,21 @@ class Metrics:
     def after_warmup(self, warmup: float) -> "Metrics":
         """Steady-state view: only requests arriving after ``warmup`` count
         (excludes the cold-cluster transient, as any fixed-duration testbed
-        run longer than the transient effectively does)."""
-        return Metrics(requests=[r for r in self.requests
-                                 if r.arrival_time >= warmup],
-                       queuing_delays=self.queuing_delays)
+        run longer than the transient effectively does).  Queuing-delay
+        samples are filtered by their dispatch timestamp the same way; a
+        legacy Metrics built without timestamps keeps all samples."""
+        reqs = [r for r in self.requests if r.arrival_time >= warmup]
+        if len(self.queuing_delay_times) == len(self.queuing_delays):
+            kept = [(t, d) for t, d in zip(self.queuing_delay_times,
+                                           self.queuing_delays)
+                    if t >= warmup]
+            times = [t for t, _ in kept]
+            delays = [d for _, d in kept]
+        else:           # timestamps unavailable: keep the old behavior
+            times = []
+            delays = list(self.queuing_delays)
+        return Metrics(requests=reqs, queuing_delays=delays,
+                       queuing_delay_times=times)
 
     def latencies(self) -> List[float]:
         return [r.e2e_latency for r in self.completed]
@@ -53,10 +67,16 @@ class Metrics:
         return sum(r.n_cold_starts for r in self.requests)
 
     def cold_start_frac(self) -> float:
-        if not self.requests:
+        """Cold starts per invocation, numerator and denominator both over
+        COMPLETED requests (an in-flight request's invocation count is not
+        yet knowable, and mixing sets let the fraction exceed 1 under
+        load)."""
+        done = self.completed
+        if not done:
             return float("nan")
-        n_inv = sum(len(r.dag.functions) for r in self.completed)
-        return self.cold_start_count() / max(1, n_inv)
+        n_cold = sum(r.n_cold_starts for r in done)
+        n_inv = sum(len(r.dag.functions) for r in done)
+        return n_cold / max(1, n_inv)
 
     def by_class(self) -> Dict[str, "Metrics"]:
         out: Dict[str, Metrics] = {}

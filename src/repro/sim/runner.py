@@ -1,67 +1,29 @@
-"""End-to-end simulation drivers: Archipelago vs baseline stacks."""
+"""Legacy end-to-end simulation drivers — thin shims over the experiment API.
+
+``run_archipelago`` / ``run_baseline`` / ``run_sparrow`` predate the
+declarative :mod:`repro.sim.experiment` layer.  They are kept so existing
+call sites (and the decision-identity goldens in
+``tests/test_equivalence.py``) keep working unchanged, but new code should
+build an :class:`~repro.sim.experiment.Experiment` and call
+:func:`~repro.sim.experiment.simulate` — same pump loop, richer results,
+and any registered stack (``repro.core.stacks``) instead of these three.
+"""
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import List, Optional, Tuple
+from typing import Optional
 
-from ..core.baselines import CentralizedFIFO, SparrowScheduler
-from ..core.cluster import ClusterConfig, build_cluster, build_flat_workers
-from ..core.lbs import LBSConfig, LoadBalancer
+from ..core.cluster import ClusterConfig
+from ..core.lbs import LBSConfig
 from ..core.sgs import SGSConfig
-from ..core.types import DagSpec, Request
-from .engine import SimEnv
-from .metrics import Metrics
+# Re-exported for backward compatibility (these used to live here).
+from ..core.stacks import (LB_DECISION_COST, SGS_DECISION_COST,  # noqa: F401
+                           _ServiceClock)
+from .experiment import (Experiment, SimResult, _arrival_stream,  # noqa: F401
+                         _run_experiment, simulate)
 from .workload import WorkloadSpec
 
-
-@dataclass
-class SimResult:
-    metrics: Metrics
-    env: SimEnv
-    lbs: Optional[LoadBalancer] = None
-    scheduler: object = None
-
-
-@dataclass(slots=True)
-class _ServiceClock:
-    """Serializes work through one control-plane component (M/D/1 server).
-
-    The paper's measured per-decision costs (§7.4): LBS routing ~190us,
-    SGS scheduling ~241us.  A single centralized scheduler at several
-    thousand RPS approaches rho=1 and its queue explodes — exactly the
-    §2.4 scalability argument; Archipelago spreads this cost over many
-    SGSs.
-    """
-
-    busy_until: float = 0.0
-
-    def acquire(self, now: float, service: float) -> float:
-        start = self.busy_until
-        if now > start:
-            start = now
-        self.busy_until = start + service
-        return self.busy_until
-
-
-# §7.4 measured control-plane decision costs
-LB_DECISION_COST = 190e-6
-SGS_DECISION_COST = 241e-6
-
-
-def _arrival_stream(spec: WorkloadSpec, seed: int, method: str
-                    ) -> Tuple[List[float], List[DagSpec]]:
-    """Time-sorted arrival times + per-arrival DAGs.
-
-    The vectorized path never materializes per-arrival tuples; numpy floats
-    are converted once (``tolist`` round-trips float64 exactly)."""
-    if method == "legacy":
-        pairs = spec.generate(seed, method="legacy")
-        return [t for t, _ in pairs], [d for _, d in pairs]
-    if method != "numpy":
-        raise ValueError(f"unknown generation method {method!r}")
-    ts, idx, tenant_dags = spec.generate_arrays(seed)
-    dags = list(map(tenant_dags.__getitem__, idx.tolist()))
-    return ts.tolist(), dags
+__all__ = ["SimResult", "run_archipelago", "run_baseline", "run_sparrow",
+           "LB_DECISION_COST", "SGS_DECISION_COST"]
 
 
 def run_archipelago(spec: WorkloadSpec,
@@ -74,48 +36,14 @@ def run_archipelago(spec: WorkloadSpec,
                     sgs_cost: float = SGS_DECISION_COST,
                     n_lbs: int = 4,
                     workload_method: str = "numpy") -> SimResult:
-    env = SimEnv()
-    lbs = build_cluster(env, cluster, sgs_cfg, lbs_cfg)
-    metrics = Metrics()
-    n_lb = max(1, n_lbs)
-    lb_clocks = [_ServiceClock() for _ in range(n_lb)]
-    sgs_clocks = {sid: _ServiceClock() for sid in lbs.sgss}
-
-    times, dags = _arrival_stream(spec, seed, workload_method)
-    n = len(times)
-    requests = metrics.requests
-
-    def pump(i: int) -> None:
-        # fire arrival i, then lazily schedule arrival i+1: the event heap
-        # holds at most one pending arrival instead of the whole trace
-        now = env.now()
-        dag = dags[i]
-        req = Request(dag=dag, arrival_time=now)
-        requests.append(req)
-        # hop 1: LBS routing decision (LBS is a scalable service: many LBs)
-        t_routed = lb_clocks[i % n_lb].acquire(now, lb_cost)
-        sgs = lbs.select(req, now)
-        # hop 2: SGS scheduling decision, serialized per SGS
-        t_sched = sgs_clocks[sgs.sgs_id].acquire(
-            t_routed, sgs_cost * len(dag.functions))
-        env.call_at(t_sched, sgs.submit_request, req)
-        i += 1
-        if i < n:
-            env.call_at(times[i], pump, i)
-
-    if n:
-        env.call_at(times[0], pump, 0)
-
-    # periodic scaling pass (the LBS's background loop, §5.2)
-    lcfg = lbs.cfg
-    env.every(lcfg.decision_interval / 5.0,
-              lambda: lbs.check_scaling(env.now()),
-              until=spec.duration + drain)
-
-    env.run_until(spec.duration + drain)
-    for s in lbs.sgss.values():
-        metrics.queuing_delays.extend(s.queuing_delays)
-    return SimResult(metrics=metrics, env=env, lbs=lbs)
+    """Deprecated shim: ``simulate(Experiment(stack="archipelago", ...))``
+    minus the result summary (callers here only want the raw SimResult)."""
+    _, sim, _, _ = _run_experiment(Experiment(
+        stack="archipelago", workload=spec, cluster=cluster, sgs=sgs_cfg,
+        lbs=lbs_cfg, params={"n_lbs": n_lbs}, lb_cost=lb_cost,
+        sgs_cost=sgs_cost, seed=seed, drain=drain,
+        workload_method=workload_method))
+    return sim
 
 
 def run_baseline(spec: WorkloadSpec,
@@ -125,34 +53,16 @@ def run_baseline(spec: WorkloadSpec,
                  drain: float = 5.0,
                  sched_cost: float = SGS_DECISION_COST,
                  workload_method: str = "numpy") -> SimResult:
-    """Centralized FIFO + reactive sandboxes + fixed keep-alive (§7.1).
+    """Deprecated shim: ``simulate(Experiment(stack="fifo", ...))``.
 
-    The single scheduler's per-decision cost is serialized: at cluster-scale
+    Centralized FIFO + reactive sandboxes + fixed keep-alive (§7.1): the
+    single scheduler's per-decision cost is serialized, so at cluster-scale
     RPS it becomes the bottleneck (§2.4), exactly as in the testbed."""
-    env = SimEnv()
-    workers = build_flat_workers(cluster)
-    sched = CentralizedFIFO(workers, env, keepalive=keepalive)
-    metrics = Metrics()
-    clock = _ServiceClock()
-    times, dags = _arrival_stream(spec, seed, workload_method)
-    n = len(times)
-
-    def pump(i: int) -> None:
-        now = env.now()
-        dag = dags[i]
-        req = Request(dag=dag, arrival_time=now)
-        metrics.requests.append(req)
-        t_sched = clock.acquire(now, sched_cost * len(dag.functions))
-        env.call_at(t_sched, sched.submit_request, req)
-        i += 1
-        if i < n:
-            env.call_at(times[i], pump, i)
-
-    if n:
-        env.call_at(times[0], pump, 0)
-    env.run_until(spec.duration + drain)
-    metrics.queuing_delays.extend(sched.queuing_delays)
-    return SimResult(metrics=metrics, env=env, scheduler=sched)
+    _, sim, _, _ = _run_experiment(Experiment(
+        stack="fifo", workload=spec, cluster=cluster,
+        params={"keepalive": keepalive}, sgs_cost=sched_cost, seed=seed,
+        drain=drain, workload_method=workload_method))
+    return sim
 
 
 def run_sparrow(spec: WorkloadSpec,
@@ -161,23 +71,9 @@ def run_sparrow(spec: WorkloadSpec,
                 seed: int = 0,
                 drain: float = 5.0,
                 workload_method: str = "numpy") -> SimResult:
-    env = SimEnv()
-    workers = build_flat_workers(cluster)
-    sched = SparrowScheduler(workers, env, probes=probes, seed=seed)
-    metrics = Metrics()
-    times, dags = _arrival_stream(spec, seed, workload_method)
-    n = len(times)
-
-    def pump(i: int) -> None:
-        req = Request(dag=dags[i], arrival_time=env.now())
-        metrics.requests.append(req)
-        sched.submit_request(req)
-        i += 1
-        if i < n:
-            env.call_at(times[i], pump, i)
-
-    if n:
-        env.call_at(times[0], pump, 0)
-    env.run_until(spec.duration + drain)
-    metrics.queuing_delays.extend(sched.queuing_delays)
-    return SimResult(metrics=metrics, env=env, scheduler=sched)
+    """Deprecated shim: ``simulate(Experiment(stack="sparrow", ...))``."""
+    _, sim, _, _ = _run_experiment(Experiment(
+        stack="sparrow", workload=spec, cluster=cluster,
+        params={"probes": probes}, seed=seed, drain=drain,
+        workload_method=workload_method))
+    return sim

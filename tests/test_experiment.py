@@ -1,0 +1,202 @@
+"""The declarative experiment API: registry errors, JSON round-trips,
+shim/simulate decision identity, sweeps, and registry-only extensibility."""
+import json
+from dataclasses import replace
+
+import pytest
+
+from repro.core import ClusterConfig, available_stacks, register_stack
+from repro.core.stacks import FlatWorkerStack, PullScheduler
+from repro.sim import (ConstantRate, Experiment, ExperimentResult,
+                       WorkloadSpec, run_sweep, simulate)
+from repro.sim.runner import run_baseline, run_sparrow
+from repro.sim.workload import paper_workload_1
+
+SMALL = ClusterConfig(n_sgs=2, workers_per_sgs=2, cores_per_worker=4,
+                      pool_mem_mb=2048.0)
+
+
+def _tiny_exp(**kw):
+    base = dict(workload_factory="paper_workload_1",
+                workload_kwargs=dict(duration=3.0, scale=0.02,
+                                     dags_per_class=1),
+                cluster=SMALL, warmup=1.0, drain=3.0)
+    base.update(kw)
+    return Experiment(**base)
+
+
+def _timeline(sim):
+    return [(r.arrival_time, r.completion_time, r.n_cold_starts)
+            for r in sim.metrics.requests]
+
+
+# -- registry ----------------------------------------------------------------
+
+
+def test_unknown_stack_error_lists_registered():
+    with pytest.raises(ValueError) as ei:
+        simulate(_tiny_exp(stack="no-such-stack"))
+    msg = str(ei.value)
+    for name in ("archipelago", "fifo", "sparrow", "pull"):
+        assert name in msg
+
+
+def test_builtin_stacks_registered():
+    names = available_stacks()
+    for name in ("archipelago", "baseline", "fifo", "sparrow", "pull"):
+        assert name in names
+
+
+def test_register_custom_stack_runs_through_generic_loop():
+    """A scheduler added purely via @register_stack needs no driver edits."""
+
+    @register_stack("test-greedy")
+    class GreedyStack(FlatWorkerStack):
+        def make_scheduler(self, workers, env, exp):
+            return PullScheduler(workers, env, scan_limit=4)
+
+    res = simulate(_tiny_exp(stack="test-greedy"))
+    assert res.stack == "test-greedy"
+    assert res.n_completed > 0
+
+
+def test_duplicate_registration_rejected():
+    with pytest.raises(ValueError, match="already registered"):
+        register_stack("fifo")(object)
+
+
+# -- pull stack (the new registry-only scheduler) ----------------------------
+
+
+def test_pull_stack_completes_and_reuses_sandboxes():
+    res = simulate(_tiny_exp(stack="pull"))
+    assert res.n_completed == res.n_requests
+    assert res.warm_hits > 0
+
+
+def test_pull_stack_warm_affinity_beats_fifo_on_cold_starts():
+    """Many DAG types on few cores: warm-affinity pulls should not reuse
+    fewer sandboxes than strict-FIFO worker choice."""
+    base = _tiny_exp(workload_kwargs=dict(duration=6.0, scale=0.05,
+                                          dags_per_class=2))
+    fifo = simulate(replace(base, stack="fifo"))
+    pull = simulate(replace(base, stack="pull"))
+    assert pull.n_completed > 0
+    assert pull.cold_start_count <= fifo.cold_start_count * 1.5 + 5
+
+
+# -- shims stay decision-identical to the generic loop -----------------------
+
+
+def test_run_baseline_shim_matches_simulate():
+    spec = paper_workload_1(duration=3.0, scale=0.02, dags_per_class=1)
+    old = run_baseline(spec, cluster=SMALL, seed=2)
+    new = simulate(Experiment(stack="fifo", workload=spec, cluster=SMALL,
+                              seed=2)).sim
+    assert _timeline(old) == _timeline(new)
+
+
+def test_run_sparrow_shim_matches_simulate():
+    spec = paper_workload_1(duration=3.0, scale=0.02, dags_per_class=1)
+    old = run_sparrow(spec, cluster=SMALL, seed=2, probes=2)
+    new = simulate(Experiment(stack="sparrow", workload=spec, cluster=SMALL,
+                              seed=2, params={"probes": 2})).sim
+    assert _timeline(old) == _timeline(new)
+
+
+# -- results -----------------------------------------------------------------
+
+
+def test_result_json_round_trip_is_lossless():
+    res = simulate(_tiny_exp())
+    d = res.to_dict()
+    assert "sim" not in d
+    back = ExperimentResult.from_dict(json.loads(json.dumps(d)))
+    assert back.to_dict() == d
+    assert back.sim is None
+    # dataclass equality ignores sim (compare=False)
+    assert back == res
+
+
+def test_result_handles_zero_completions():
+    dag_spec = WorkloadSpec([], duration=1.0)
+    res = simulate(Experiment(workload=dag_spec, cluster=SMALL))
+    assert res.n_requests == 0
+    assert res.deadline_met_frac is None
+    assert res.latency_percentiles["p99"] is None
+    d = res.to_dict()
+    assert ExperimentResult.from_dict(
+        json.loads(json.dumps(d))).to_dict() == d
+
+
+def test_result_reports_steady_state_window():
+    res = simulate(_tiny_exp(warmup=1.5))
+    assert res.warmup == 1.5
+    assert res.n_requests <= res.n_requests_total
+    m = res.sim.metrics
+    assert res.n_requests == sum(1 for r in m.requests
+                                 if r.arrival_time >= 1.5)
+
+
+# -- sweeps ------------------------------------------------------------------
+
+
+def test_run_sweep_grid_shape_and_schema():
+    sweep = run_sweep(_tiny_exp(), {"stack": ["archipelago", "fifo"],
+                                    "seed": [0, 1]})
+    assert len(sweep) == 4
+    cells = [row["cell"] for row in sweep]
+    assert cells == [{"stack": "archipelago", "seed": 0},
+                     {"stack": "archipelago", "seed": 1},
+                     {"stack": "fifo", "seed": 0},
+                     {"stack": "fifo", "seed": 1}]
+    keys = {frozenset(row["result"].keys()) for row in sweep}
+    assert len(keys) == 1        # stable row schema across cells
+
+
+def test_run_sweep_cells_deterministic_and_order_independent():
+    """Each (seed, config) cell is a pure function of its Experiment: the
+    same cell re-simulated standalone, in reverse order, matches the sweep
+    row bit-for-bit (modulo wall time)."""
+    base = _tiny_exp()
+    axes = {"seed": [0, 1], "workload_kwargs.scale": [0.02, 0.03]}
+    sweep = run_sweep(base, axes)
+    for row in reversed(sweep.rows):
+        cell = row["cell"]
+        exp = replace(base, seed=cell["seed"],
+                      workload_kwargs=dict(base.workload_kwargs,
+                                           scale=cell["workload_kwargs.scale"]))
+        again = simulate(exp).to_dict()
+        want = dict(row["result"])
+        again.pop("wall_s")
+        want.pop("wall_s")
+        assert again == want
+
+
+def test_run_sweep_nested_config_axes():
+    sweep = run_sweep(_tiny_exp(cluster=None),
+                      {"cluster.n_sgs": [1, 2], "sgs.proactive": [True]})
+    assert len(sweep) == 2
+    for row, n in zip(sweep, [1, 2]):
+        assert row["cell"]["cluster.n_sgs"] == n
+        assert row["result"]["n_completed"] > 0
+
+
+def test_run_sweep_rejects_unknown_axis():
+    with pytest.raises(ValueError, match="cannot sweep|unknown"):
+        run_sweep(_tiny_exp(), {"nonsense.axis": [1]})
+
+
+def test_workload_factory_by_name_validated():
+    with pytest.raises(ValueError, match="paper_workload_1"):
+        simulate(_tiny_exp(workload_factory="not_a_workload"))
+    with pytest.raises(ValueError, match="workload"):
+        simulate(Experiment(stack="fifo"))
+
+
+def test_experiment_with_constant_rate_workload_object():
+    from repro.core.types import DagSpec, FunctionSpec
+    dag = DagSpec("d", (FunctionSpec("d/f", 0.05),), (), deadline=0.5)
+    spec = WorkloadSpec([(dag, ConstantRate(20.0))], duration=2.0)
+    res = simulate(Experiment(workload=spec, cluster=SMALL))
+    assert res.n_completed == res.n_requests > 0

@@ -1,0 +1,79 @@
+"""Metrics regressions: cold-start fraction consistency and warmup-filtered
+queuing-delay samples."""
+from repro.core.types import DagSpec, FunctionSpec, Request
+from repro.sim import Experiment, Metrics, simulate
+
+
+def _req(dag, arrival, completion=None, n_cold=0):
+    r = Request(dag=dag, arrival_time=arrival)
+    r.completion_time = completion
+    r.n_cold_starts = n_cold
+    return r
+
+
+def _dag(n_fns=1):
+    fns = tuple(FunctionSpec(f"d/f{i}", 0.1) for i in range(n_fns))
+    edges = tuple((f"d/f{i}", f"d/f{i+1}") for i in range(n_fns - 1))
+    return DagSpec("d", fns, edges, deadline=1.0)
+
+
+def test_cold_start_frac_bounded_with_incomplete_requests():
+    """Regression: the numerator used to sum cold starts over ALL requests
+    while the denominator counted only COMPLETED invocations, so the
+    fraction could exceed 1 under load."""
+    dag = _dag(1)
+    m = Metrics(requests=[
+        _req(dag, 0.0, completion=0.2, n_cold=0),       # completed, warm
+        _req(dag, 0.1, completion=None, n_cold=3),      # in flight, 3 colds
+    ])
+    frac = m.cold_start_frac()
+    assert frac <= 1.0
+    assert frac == 0.0          # both sides computed over completed only
+
+
+def test_cold_start_frac_counts_completed_consistently():
+    dag3 = _dag(3)
+    m = Metrics(requests=[
+        _req(dag3, 0.0, completion=1.0, n_cold=2),
+        _req(dag3, 0.5, completion=1.5, n_cold=1),
+        _req(dag3, 0.9, completion=None, n_cold=3),     # excluded entirely
+    ])
+    assert m.cold_start_frac() == (2 + 1) / (3 + 3)
+    # the raw counter still covers every request
+    assert m.cold_start_count() == 6
+
+
+def test_after_warmup_filters_queuing_delays_by_timestamp():
+    """Regression: queuing-delay samples used to be copied unfiltered into
+    the steady-state view while requests were warmup-filtered."""
+    dag = _dag(1)
+    m = Metrics(
+        requests=[_req(dag, 1.0, 1.2), _req(dag, 6.0, 6.2)],
+        queuing_delays=[0.5, 0.01],
+        queuing_delay_times=[1.1, 6.1])
+    w = m.after_warmup(5.0)
+    assert [r.arrival_time for r in w.requests] == [6.0]
+    assert w.queuing_delays == [0.01]
+    assert w.queuing_delay_times == [6.1]
+
+
+def test_after_warmup_legacy_metrics_without_timestamps():
+    dag = _dag(1)
+    m = Metrics(requests=[_req(dag, 1.0, 1.2), _req(dag, 6.0, 6.2)],
+                queuing_delays=[0.5, 0.01])
+    w = m.after_warmup(5.0)
+    assert w.queuing_delays == [0.5, 0.01]      # kept: no timestamps known
+
+
+def test_simulated_runs_carry_queuing_timestamps_for_every_sample():
+    for stack in ("archipelago", "fifo", "sparrow", "pull"):
+        res = simulate(Experiment(
+            stack=stack, workload_factory="paper_workload_1",
+            workload_kwargs=dict(duration=2.0, scale=0.02,
+                                 dags_per_class=1),
+            warmup=0.5, drain=3.0))
+        m = res.sim.metrics
+        assert len(m.queuing_delay_times) == len(m.queuing_delays) > 0
+        w = m.after_warmup(0.5)
+        assert all(t >= 0.5 for t in w.queuing_delay_times)
+        assert len(w.queuing_delays) <= len(m.queuing_delays)

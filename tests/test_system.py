@@ -1,15 +1,12 @@
 """End-to-end behaviour tests for the Archipelago system (scaled-down
 versions of the paper's experiments; the full-scale runs live in
-benchmarks/)."""
-import random
+benchmarks/).  All drivers go through the declarative experiment API."""
+from dataclasses import replace
 
-import pytest
-
-from repro.core import ClusterConfig, LBSConfig, SGSConfig
+from repro.core import ClusterConfig, SGSConfig
 from repro.core.types import DagSpec, FunctionSpec
-from repro.sim import (ConstantRate, OnOffRate, Sinusoidal, WorkloadSpec,
-                       paper_workload_1, paper_workload_2, run_archipelago,
-                       run_baseline, run_sparrow)
+from repro.sim import (ConstantRate, Experiment, Sinusoidal, WorkloadSpec,
+                       simulate)
 
 CC = ClusterConfig(n_sgs=4, workers_per_sgs=4, cores_per_worker=8,
                    pool_mem_mb=65536.0)
@@ -23,86 +20,91 @@ def _single_fn_dag(dag_id, exec_time=0.08, slack=0.15, setup=0.25):
 
 
 def test_archipelago_meets_deadlines_steady_state():
-    spec = paper_workload_2(duration=15.0, scale=0.08, dags_per_class=1)
-    res = run_archipelago(spec, cluster=CC)
-    m = res.metrics.after_warmup(5.0)
-    assert m.deadline_met_frac() > 0.95
-    assert len(m.completed) == len(m.requests)
+    res = simulate(Experiment(
+        stack="archipelago", workload_factory="paper_workload_2",
+        workload_kwargs=dict(duration=15.0, scale=0.08, dags_per_class=1),
+        cluster=CC, warmup=5.0))
+    assert res.deadline_met_frac > 0.95
+    assert res.n_completed == res.n_requests
 
 
 def test_archipelago_beats_baseline_under_load():
     """At cluster-scale RPS the centralized baseline's single scheduler
     saturates (§2.4); Archipelago's partitioned SGSs do not."""
-    spec = paper_workload_1(duration=12.0, scale=1.3, dags_per_class=2)
-    full = ClusterConfig()      # 8 SGSs x 8 workers x 20 cores
-    ra = run_archipelago(spec, cluster=full)
-    rb = run_baseline(spec, cluster=full)
-    ma = ra.metrics.after_warmup(4.0)
-    mb = rb.metrics.after_warmup(4.0)
-    assert ma.deadline_met_frac() > 0.97
-    assert ma.deadline_met_frac() > mb.deadline_met_frac() + 0.2
-    assert mb.latency_pct(99.9) > ma.latency_pct(99.9)
+    base = Experiment(
+        workload_factory="paper_workload_1",
+        workload_kwargs=dict(duration=12.0, scale=1.3, dags_per_class=2),
+        cluster=ClusterConfig(),    # 8 SGSs x 8 workers x 20 cores
+        warmup=4.0)
+    ra = simulate(replace(base, stack="archipelago"))
+    rb = simulate(replace(base, stack="fifo"))
+    assert ra.deadline_met_frac > 0.97
+    assert ra.deadline_met_frac > rb.deadline_met_frac + 0.2
+    assert (rb.latency_percentiles["p99.9"]
+            > ra.latency_percentiles["p99.9"])
 
 
 def test_proactive_allocation_reduces_cold_starts():
     dag = _single_fn_dag("d", exec_time=0.05, setup=0.3)
     spec = WorkloadSpec([(dag, ConstantRate(100.0))], duration=10.0)
-    on = run_archipelago(spec, cluster=CC,
-                         sgs_cfg=SGSConfig(proactive=True))
-    off = run_archipelago(spec, cluster=CC,
-                          sgs_cfg=SGSConfig(proactive=False))
-    m_on = on.metrics.after_warmup(3.0)
-    m_off = off.metrics.after_warmup(3.0)
-    assert m_on.cold_start_count() <= m_off.cold_start_count()
-    assert m_on.deadline_met_frac() >= m_off.deadline_met_frac()
+    base = Experiment(stack="archipelago", workload=spec, cluster=CC,
+                      warmup=3.0)
+    on = simulate(replace(base, sgs=SGSConfig(proactive=True)))
+    off = simulate(replace(base, sgs=SGSConfig(proactive=False)))
+    assert on.cold_start_count <= off.cold_start_count
+    assert on.deadline_met_frac >= off.deadline_met_frac
     # steady state: proactive allocation leaves essentially no cold starts
-    assert m_on.cold_start_frac() < 0.02
+    assert on.cold_start_frac < 0.02
 
 
 def test_even_beats_packed_placement():
     """Fig. 9: packed placement misses deadlines at load peaks."""
     dag = _single_fn_dag("d", exec_time=0.1, slack=0.12, setup=0.3)
     spec = WorkloadSpec([(dag, Sinusoidal(120.0, 60.0, 8.0))], duration=16.0)
-    cc = ClusterConfig(n_sgs=1, workers_per_sgs=10, cores_per_worker=4)
-    even = run_archipelago(spec, cluster=cc,
-                           sgs_cfg=SGSConfig(even_placement=True))
-    packed = run_archipelago(spec, cluster=cc,
-                             sgs_cfg=SGSConfig(even_placement=False))
-    me = even.metrics.after_warmup(4.0)
-    mp = packed.metrics.after_warmup(4.0)
-    assert me.deadline_met_frac() >= mp.deadline_met_frac()
-    assert me.cold_start_count() <= mp.cold_start_count()
+    base = Experiment(
+        workload=spec, warmup=4.0,
+        cluster=ClusterConfig(n_sgs=1, workers_per_sgs=10,
+                              cores_per_worker=4))
+    even = simulate(replace(base, sgs=SGSConfig(even_placement=True)))
+    packed = simulate(replace(base, sgs=SGSConfig(even_placement=False)))
+    assert even.deadline_met_frac >= packed.deadline_met_frac
+    assert even.cold_start_count <= packed.cold_start_count
 
 
 def test_scale_out_under_contention():
     """Fig. 11: a constant-rate DAG scales out when a bursty DAG contends."""
     calm = _single_fn_dag("calm", exec_time=0.1, slack=0.1)
     bursty = _single_fn_dag("bursty", exec_time=0.1, slack=0.1)
-    cc = ClusterConfig(n_sgs=5, workers_per_sgs=4, cores_per_worker=4)
     spec = WorkloadSpec([(calm, ConstantRate(60.0)),
                          (bursty, Sinusoidal(250.0, 200.0, 8.0))],
                         duration=16.0)
-    res = run_archipelago(spec, cluster=cc)
-    assert res.lbs.n_active("bursty") >= 2 or res.lbs.n_active("calm") >= 2
-    m = res.metrics.after_warmup(4.0)
-    assert m.deadline_met_frac() > 0.85
+    res = simulate(Experiment(
+        workload=spec, warmup=4.0,
+        cluster=ClusterConfig(n_sgs=5, workers_per_sgs=4,
+                              cores_per_worker=4)))
+    lbs = res.sim.lbs
+    assert lbs.n_active("bursty") >= 2 or lbs.n_active("calm") >= 2
+    assert res.deadline_met_frac > 0.85
 
 
 def test_sparrow_random_probing_worse_than_archipelago():
     """Fig. 2d flavor: power-of-two probing misses warm sandboxes."""
-    spec = paper_workload_2(duration=12.0, scale=0.08, dags_per_class=1)
-    ra = run_archipelago(spec, cluster=CC)
-    rs = run_sparrow(spec, cluster=CC)
-    ma = ra.metrics.after_warmup(4.0)
-    ms = rs.metrics.after_warmup(4.0)
-    assert ma.cold_start_count() < ms.cold_start_count()
+    base = Experiment(
+        workload_factory="paper_workload_2",
+        workload_kwargs=dict(duration=12.0, scale=0.08, dags_per_class=1),
+        cluster=CC, warmup=4.0)
+    ra = simulate(replace(base, stack="archipelago"))
+    rs = simulate(replace(base, stack="sparrow"))
+    assert ra.cold_start_count < rs.cold_start_count
 
 
 def test_all_requests_complete_and_conserve():
     """No request is lost or double-completed by the scheduling machinery."""
-    spec = paper_workload_1(duration=6.0, scale=0.1, dags_per_class=1)
-    res = run_archipelago(spec, cluster=CC, drain=20.0)
-    m = res.metrics
+    res = simulate(Experiment(
+        stack="archipelago", workload_factory="paper_workload_1",
+        workload_kwargs=dict(duration=6.0, scale=0.1, dags_per_class=1),
+        cluster=CC, drain=20.0))
+    m = res.sim.metrics
     assert len(m.completed) == len(m.requests)
     for r in m.completed:
         assert r.completion_time >= r.arrival_time
@@ -113,9 +115,12 @@ def test_deadline_aware_scaling_favors_tight_slack():
     """Fig. 10: the lower-slack DAG scales out to at least as many SGSs."""
     tight = _single_fn_dag("tight", exec_time=0.1, slack=0.05)
     loose = _single_fn_dag("loose", exec_time=0.1, slack=0.60)
-    cc = ClusterConfig(n_sgs=6, workers_per_sgs=2, cores_per_worker=4)
     spec = WorkloadSpec([(tight, Sinusoidal(150.0, 100.0, 8.0)),
                          (loose, Sinusoidal(150.0, 100.0, 8.0))],
                         duration=14.0)
-    res = run_archipelago(spec, cluster=cc)
-    assert res.lbs.n_active("tight") >= res.lbs.n_active("loose")
+    res = simulate(Experiment(
+        workload=spec,
+        cluster=ClusterConfig(n_sgs=6, workers_per_sgs=2,
+                              cores_per_worker=4)))
+    lbs = res.sim.lbs
+    assert lbs.n_active("tight") >= lbs.n_active("loose")
