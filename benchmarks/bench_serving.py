@@ -1,0 +1,110 @@
+"""Serving benchmark: hardware-in-the-loop ``ExperimentResult`` rows.
+
+Sweeps the multitenant serving app set (dense / SSM / MoE / two-stage VLM
+pipeline) over scheduler stacks through ``run_sweep``, with real JAX
+execution (``backend="jax"``: one shared backend instance, so the models
+calibrate/compile once across all cells) and writes a structured
+``BENCH_serving.json``: full per-cell ``ExperimentResult`` rows plus a
+flattened per-class view.
+
+    python -m benchmarks.bench_serving [--smoke] [--backend jax|stub]
+
+``--smoke`` runs 1 small model for a short duration and writes
+``BENCH_serving.partial.json`` (gitignored) so partial runs never clobber
+the tracked artifact — the PR-2 ``--only`` convention.  ``--backend stub``
+replays the same pipeline with deterministic scripted times (no compiles).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+from .common import timer  # noqa: F401  (also bootstraps sys.path for src/)
+
+from repro.core import ClusterConfig, JaxBackend, StubBackend
+from repro.serving import multitenant_apps, smoke_apps
+from repro.sim import Experiment, run_sweep
+
+STACKS = ["archipelago", "fifo", "pull"]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="1 small model, short duration, partial artifact")
+    ap.add_argument("--backend", default="jax", choices=["jax", "stub"])
+    ap.add_argument("--out", default="",
+                    help="JSON artifact path (default: BENCH_serving.json "
+                         "at the repo root, or BENCH_serving.partial.json "
+                         "with --smoke)")
+    args = ap.parse_args()
+
+    apps = smoke_apps() if args.smoke else multitenant_apps()
+    if args.backend == "jax":
+        # one instance shared across every sweep cell: calibrate once
+        backend = JaxBackend()
+        n_models = len({id(m) for a in apps for m in a.models.values()})
+        print(f"[bench_serving] calibrating {n_models} model(s) "
+              f"(real XLA compiles)...", flush=True)
+    else:
+        backend = StubBackend(exec_time=0.020, setup_time=1.0)
+
+    duration = 3.0 if args.smoke else 12.0
+    base = Experiment(
+        backend=backend,
+        workload_factory="serving_apps",
+        workload_kwargs=dict(apps=apps, duration=duration, rps=6.0,
+                             prewarm_per_fn=3),
+        cluster=ClusterConfig(n_sgs=2 if args.smoke else 3,
+                              workers_per_sgs=2, cores_per_worker=2),
+        warmup=0.0 if args.smoke else 4.0,
+        drain=10.0)
+    stacks = STACKS[:2] if args.smoke else STACKS
+
+    t0 = time.time()
+    sweep = run_sweep(base, {"stack": stacks})
+    per_class_rows = []
+    for row in sweep:
+        res = row["result"]
+        print(f"  {row['cell']['stack']:>12}: n={res['n_requests']} "
+              f"done={res['n_completed']} "
+              f"p99={(res['latency_percentiles']['p99'] or 0)*1e3:.1f}ms "
+              f"deadlines_met={(res['deadline_met_frac'] or 0)*100:.1f}% "
+              f"cold_starts={res['cold_start_count']}", flush=True)
+        for cls, stats in sorted(res["per_class"].items()):
+            per_class_rows.append(dict(stats, **row["cell"],
+                                       dag_class=cls,
+                                       backend=res["backend"]))
+
+    calibration = {
+        name: {"exec_time": spec.exec_time, "setup_time": spec.setup_time}
+        for name, spec in (getattr(backend, "fn_specs", None) or {}).items()}
+    repo_root = Path(__file__).resolve().parent.parent
+    default_name = ("BENCH_serving.partial.json" if args.smoke
+                    else "BENCH_serving.json")
+    out_path = Path(args.out) if args.out else repo_root / default_name
+    payload = {
+        "schema": 1,
+        "bench": "serving",
+        "smoke": bool(args.smoke),
+        "backend": backend.name,
+        "python": sys.version.split()[0],
+        "calibration": calibration,
+        "executions": backend.counters().get("n_executions", 0),
+        "wall_s": round(time.time() - t0, 2),
+        "sweep": sweep.to_dict(),          # full ExperimentResult rows
+        "per_class_rows": per_class_rows,  # flattened per-class view
+    }
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {out_path} ({len(sweep)} cells, "
+          f"{len(per_class_rows)} per-class rows, "
+          f"{payload['executions']} executions)")
+
+
+if __name__ == "__main__":
+    main()

@@ -10,6 +10,9 @@ Public API:
     build_cluster, ClusterConfig          -- one-call stack construction
     register_stack, get_stack, Stack      -- pluggable scheduler-stack
                                              registry (docs/API.md)
+    register_backend, ExecutionBackend    -- pluggable execution backends:
+                                             modeled / stub / jax
+                                             (docs/SERVING.md)
 """
 from .types import (DagSpec, FunctionSpec, Invocation, Request, Sandbox,
                     SandboxState)
@@ -19,6 +22,9 @@ from .sgs import Env, SGSConfig, SemiGlobalScheduler
 from .lbs import ConsistentHashRing, LBSConfig, LoadBalancer
 from .baselines import CentralizedFIFO, SparrowScheduler
 from .cluster import ClusterConfig, build_cluster, build_flat_workers
+from .backends import (ExecutionBackend, JaxBackend, ModeledBackend,
+                       StubBackend, available_backends, get_backend,
+                       register_backend)
 from .stacks import (Stack, available_stacks, get_stack, register_stack)
 from .fault import (StateStore, checkpoint_lbs, checkpoint_sgs, fail_worker,
                     restore_lbs, restore_sgs)
@@ -30,6 +36,8 @@ __all__ = [
     "ConsistentHashRing", "LBSConfig", "LoadBalancer", "CentralizedFIFO",
     "SparrowScheduler", "ClusterConfig", "build_cluster", "build_flat_workers",
     "Stack", "available_stacks", "get_stack", "register_stack",
+    "ExecutionBackend", "ModeledBackend", "StubBackend", "JaxBackend",
+    "available_backends", "get_backend", "register_backend",
     "StateStore", "checkpoint_lbs", "checkpoint_sgs", "fail_worker",
     "restore_lbs", "restore_sgs",
 ]

@@ -1,0 +1,285 @@
+"""Execution backends: *what actually runs an invocation* behind a stack.
+
+The scheduler stacks (``repro.core.stacks``) decide *where and when* an
+invocation runs; an :class:`ExecutionBackend` decides *what executing it
+means*.  The split mirrors Dirigent's control-plane / data-plane seam: the
+same declarative ``Experiment`` — same stacks, sweeps and BENCH artifacts —
+drives a purely modeled simulation, a deterministic scripted stub, or real
+jitted JAX calls whose measured wall times feed back into scheduling.
+
+Backends are registered by name exactly like stacks::
+
+    from repro.core.backends import ExecutionBackend, register_backend
+
+    @register_backend("my-backend")
+    class MyBackend(ExecutionBackend):
+        def build(self, exp, spec):
+            self.execute = my_execute_hook      # Invocation -> seconds
+            return spec                         # optionally re-specced
+
+Built-ins:
+
+* ``modeled`` (default) — analytic execution: an invocation occupies a core
+  for ``fn.exec_time`` seconds.  ``execute`` stays ``None`` so schedulers
+  take the exact pre-backend fast path — decision-identical to the
+  equivalence goldens by construction.
+* ``stub`` — deterministic scripted exec/setup times (CI): the workload's
+  ``FunctionSpec``s are rewritten from ``exec_time``/``setup_time`` kwargs
+  and the execute hook replays them, exercising the real-execution code path
+  without real hardware work.
+* ``jax`` — hardware-in-the-loop: calibrates every served model (real XLA
+  compile = sandbox setup cost), rewrites the workload with *measured*
+  ``FunctionSpec``s, and executes each invocation as a real jitted JAX call
+  (``repro.serving.executor.JaxModelExecutor``).  See ``docs/SERVING.md``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import (TYPE_CHECKING, Any, Callable, Dict, List, Mapping,
+                    Optional, Type, Union)
+
+from .types import DagSpec, ExecuteFn, FunctionSpec
+
+if TYPE_CHECKING:   # pragma: no cover - typing only, avoids a core->sim cycle
+    from ..serving.executor import JaxModelExecutor, ServedModel
+    from ..sim.experiment import Experiment
+    from ..sim.workload import WorkloadSpec
+
+__all__ = [
+    "ExecutionBackend", "ModeledBackend", "StubBackend", "JaxBackend",
+    "register_backend", "get_backend", "available_backends",
+    "resolve_backend", "respec_dag", "respec_workload",
+]
+
+
+class ExecutionBackend:
+    """Base class for execution backends (subclass + ``@register_backend``).
+
+    Lifecycle: ``simulate`` resolves the experiment's backend, calls
+    ``build(exp, spec)`` once before the stack is constructed, and hands the
+    backend to every stack's ``build`` — stacks thread ``self.execute`` into
+    their schedulers uniformly.
+
+    ``execute`` is the data-plane hook (``Invocation -> seconds of
+    execution``).  ``None`` means "modeled": schedulers charge
+    ``fn.exec_time`` directly with zero per-invocation indirection (the
+    simulator hot path, see docs/PERF.md).  ``build`` may also return a
+    re-specced workload (measured or scripted ``FunctionSpec``s) — the stack
+    and metrics layers only ever see the resolved spec.
+    """
+
+    name: str = "base"
+    execute: Optional[ExecuteFn] = None
+
+    def build(self, exp: "Experiment", spec: "WorkloadSpec") -> "WorkloadSpec":
+        return spec
+
+    def counters(self) -> Dict[str, int]:
+        return {}
+
+
+_BACKENDS: Dict[str, Type[ExecutionBackend]] = {}
+
+
+def register_backend(name: str, *aliases: str
+                     ) -> Callable[[Type[ExecutionBackend]],
+                                   Type[ExecutionBackend]]:
+    """Class decorator: make a backend constructible by name through
+    ``Experiment(backend=name)``.  Raises on duplicate registration."""
+
+    def deco(cls: Type[ExecutionBackend]) -> Type[ExecutionBackend]:
+        names = (name, *aliases)
+        taken = [n for n in names if n in _BACKENDS]
+        if taken:       # validate before inserting: no partial registration
+            raise ValueError(f"backend {taken[0]!r} is already registered")
+        for n in names:
+            _BACKENDS[n] = cls
+        cls.name = name
+        return cls
+
+    return deco
+
+
+def get_backend(name: str) -> Type[ExecutionBackend]:
+    try:
+        return _BACKENDS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown backend {name!r}; registered backends: "
+            f"{', '.join(sorted(_BACKENDS))}") from None
+
+
+def available_backends() -> List[str]:
+    return sorted(_BACKENDS)
+
+
+def resolve_backend(backend: Union[str, ExecutionBackend],
+                    kwargs: Optional[Mapping[str, Any]] = None
+                    ) -> ExecutionBackend:
+    """A name constructs a fresh backend from ``kwargs``; a ready instance
+    passes through (reuse one ``JaxBackend`` across sweep cells so models
+    calibrate once)."""
+    if isinstance(backend, str):
+        return get_backend(backend)(**dict(kwargs or {}))
+    if kwargs:
+        raise ValueError(
+            "backend_kwargs only apply when `backend` is a name; "
+            "configure the instance directly instead")
+    return backend
+
+
+# ---------------------------------------------------------------------------
+# Workload re-speccing (shared by stub/jax: swap FunctionSpecs, keep slack)
+# ---------------------------------------------------------------------------
+
+
+def respec_dag(dag: DagSpec, fn_specs: Mapping[str, FunctionSpec],
+               slack: Optional[float] = None) -> DagSpec:
+    """Copy of ``dag`` with its ``FunctionSpec``s substituted from
+    ``fn_specs`` (missing names keep the modeled spec) and the deadline
+    re-derived as new-critical-path + slack (default: the slack the original
+    DAG granted).  Identity when nothing changes, so a no-op backend stays
+    decision-identical to ``modeled``."""
+    fns = tuple(fn_specs.get(f.name, f) for f in dag.functions)
+    if fns == dag.functions:
+        return dag
+    if slack is None:
+        slack = dag.slack
+    return DagSpec(dag_id=dag.dag_id, functions=fns,
+                   edges=dag.edges).with_deadline(slack=slack)
+
+
+def respec_workload(spec: "WorkloadSpec",
+                    fn_specs: Mapping[str, FunctionSpec],
+                    slacks: Optional[Mapping[str, float]] = None
+                    ) -> "WorkloadSpec":
+    """``respec_dag`` over every tenant; extra fields of ``WorkloadSpec``
+    subclasses (served models, prewarm plans) carry over unchanged."""
+    tenants = [(respec_dag(dag, fn_specs,
+                           None if slacks is None
+                           else slacks.get(dag.dag_id, dag.slack)), proc)
+               for dag, proc in spec.tenants]
+    return dataclasses.replace(spec, tenants=tenants)
+
+
+# ---------------------------------------------------------------------------
+# Built-in backends
+# ---------------------------------------------------------------------------
+
+
+@register_backend("modeled")
+class ModeledBackend(ExecutionBackend):
+    """Analytic execution (the default): an invocation holds a core for
+    ``fn.exec_time`` simulated seconds.  ``execute`` is ``None`` so the
+    schedulers' modeled fast path runs unchanged — ``backend="modeled"`` is
+    byte-identical to the pre-backend simulator (equivalence goldens)."""
+
+
+@register_backend("stub")
+class StubBackend(ExecutionBackend):
+    """Deterministic scripted execution for CI and backend-seam tests.
+
+    ``exec_time`` / ``setup_time`` script the respective ``FunctionSpec``
+    fields: a scalar applies to every function, a mapping scripts per
+    function name, unset keeps the workload's modeled value.  The hook runs
+    through the schedulers' *real-execution* code path (the one ``jax``
+    takes) while returning exactly the scripted seconds, so runs are
+    reproducible without hardware work.
+    """
+
+    def __init__(self, exec_time: Union[float, Mapping[str, float], None] = None,
+                 setup_time: Union[float, Mapping[str, float], None] = None):
+        self.exec_time = exec_time
+        self.setup_time = setup_time
+        self.n_executions = 0
+
+    @staticmethod
+    def _scripted(table: Union[float, Mapping[str, float], None],
+                  name: str, default: float) -> float:
+        if table is None:
+            return default
+        if isinstance(table, Mapping):
+            return float(table.get(name, default))
+        return float(table)
+
+    def build(self, exp: "Experiment", spec: "WorkloadSpec") -> "WorkloadSpec":
+        known = {f.name for dag, _ in spec.tenants for f in dag.functions}
+        for label, table in (("exec_time", self.exec_time),
+                             ("setup_time", self.setup_time)):
+            if isinstance(table, Mapping) and set(table) - known:
+                raise ValueError(
+                    f"stub {label} scripts unknown function(s) "
+                    f"{sorted(set(table) - known)}; workload functions: "
+                    f"{', '.join(sorted(known))}")
+        fn_specs: Dict[str, FunctionSpec] = {}
+        for dag, _ in spec.tenants:
+            for f in dag.functions:
+                fn_specs[f.name] = FunctionSpec(
+                    name=f.name,
+                    exec_time=self._scripted(self.exec_time, f.name,
+                                             f.exec_time),
+                    mem_mb=f.mem_mb,
+                    setup_time=self._scripted(self.setup_time, f.name,
+                                              f.setup_time))
+
+        def execute(inv) -> float:
+            # the scripted time was written into the re-specced FunctionSpec,
+            # so the hook replays it: scheduling sees the same number the
+            # metrics will, exactly like a calibrated real backend
+            self.n_executions += 1
+            return inv.fn.exec_time
+
+        self.execute = execute
+        return respec_workload(spec, fn_specs)
+
+    def counters(self) -> Dict[str, int]:
+        return {"n_executions": self.n_executions}
+
+
+@register_backend("jax")
+class JaxBackend(ExecutionBackend):
+    """Hardware-in-the-loop: real jitted JAX execution under the schedulers.
+
+    Needs served models: either the workload is a serving workload
+    (``repro.serving.engine.serving_workload`` attaches ``spec.served``) or
+    ``served={fn_name: ServedModel}`` is passed directly.  ``build``
+    calibrates each model (real XLA compile + timed runs — the measured
+    sandbox setup/exec costs become the ``FunctionSpec``s, so every
+    scheduling decision operates on real numbers) and the execute hook runs
+    the actual model per invocation.  Calibration is cached per served-model
+    set (keyed on the ``ServedModel`` objects themselves, so sweep cells
+    that rebuild the workload from the same apps calibrate once): pass one
+    ``JaxBackend`` instance across sweep cells to compile once.
+    """
+
+    def __init__(self, served: Optional[Mapping[str, "ServedModel"]] = None,
+                 mem_mb: float = 512.0, calib_runs: int = 3):
+        self.served = served
+        self.mem_mb = mem_mb
+        self.calib_runs = calib_runs
+        self.executor: Optional["JaxModelExecutor"] = None
+        self.fn_specs: Optional[Dict[str, FunctionSpec]] = None
+        self._calibrated_key: Optional[tuple] = None
+
+    def build(self, exp: "Experiment", spec: "WorkloadSpec") -> "WorkloadSpec":
+        served = self.served if self.served is not None \
+            else getattr(spec, "served", None)
+        if not served:
+            raise ValueError(
+                'backend="jax" needs served models: use a serving workload '
+                '(repro.serving.engine.serving_workload) or pass '
+                'backend_kwargs=dict(served={fn_name: ServedModel})')
+        key = tuple(sorted((name, id(m)) for name, m in served.items()))
+        if self.executor is None or self._calibrated_key != key:
+            from ..serving.executor import JaxModelExecutor  # lazy: needs jax
+            self.executor = JaxModelExecutor(dict(served))
+            self.fn_specs = self.executor.calibrate(mem_mb=self.mem_mb,
+                                                    runs=self.calib_runs)
+            self._calibrated_key = key
+        self.execute = self.executor.execute
+        return respec_workload(spec, self.fn_specs,
+                               getattr(spec, "slacks", None))
+
+    def counters(self) -> Dict[str, int]:
+        n = self.executor.n_executions if self.executor is not None else 0
+        return {"n_executions": n}

@@ -15,17 +15,20 @@ from typing import Deque, Dict, List, Optional, Tuple
 
 from .sandbox import Worker
 from .sgs import Env
-from .types import (DagSpec, Invocation, Request, Sandbox, SandboxState)
+from .types import (DagSpec, ExecuteFn, Invocation, Request, Sandbox,
+                    SandboxState)
 
 
 class CentralizedFIFO:
     """One cluster-wide FIFO queue; reactive sandboxes with keep-alive."""
 
     def __init__(self, workers: List[Worker], env: Env,
-                 keepalive: float = 900.0):
+                 keepalive: float = 900.0,
+                 execute: Optional[ExecuteFn] = None):
         self.workers = workers
         self.env = env
         self.keepalive = keepalive
+        self.execute = execute      # execution-backend hook (core.backends)
         self._queue: Deque[Invocation] = deque()
         self._completed_fns: Dict[int, set] = {}
         self.n_cold_starts = 0
@@ -90,8 +93,9 @@ class CentralizedFIFO:
             self.n_warm_hits += 1
             sbx.state = SandboxState.BUSY
             sbx.last_used = now
-        self.env.call_after(setup + inv.fn.exec_time,
-                            self._complete, inv, w, sbx)
+        exec_s = inv.fn.exec_time if self.execute is None \
+            else self.execute(inv)
+        self.env.call_after(setup + exec_s, self._complete, inv, w, sbx)
 
     def _make_room(self, w: Worker, mem_mb: float, now: float) -> None:
         """Keep-alive expiry first, then oldest-idle eviction if still full."""
@@ -137,11 +141,13 @@ class SparrowScheduler:
     """
 
     def __init__(self, workers: List[Worker], env: Env, probes: int = 2,
-                 seed: int = 0, keepalive: float = 900.0):
+                 seed: int = 0, keepalive: float = 900.0,
+                 execute: Optional[ExecuteFn] = None):
         self.workers = workers
         self.env = env
         self.probes = probes
         self.keepalive = keepalive
+        self.execute = execute      # execution-backend hook (core.backends)
         self._rng = random.Random(seed)
         self._wqueues: Dict[int, Deque[Invocation]] = {
             w.worker_id: deque() for w in workers}
@@ -192,8 +198,9 @@ class SparrowScheduler:
             else:
                 self.n_warm_hits += 1
                 sbx.state = SandboxState.BUSY
-            self.env.call_after(setup + inv.fn.exec_time,
-                                self._complete, inv, w, sbx)
+            exec_s = inv.fn.exec_time if self.execute is None \
+                else self.execute(inv)
+            self.env.call_after(setup + exec_s, self._complete, inv, w, sbx)
 
     def _complete(self, inv: Invocation, w: Worker, sbx: Sandbox) -> None:
         now = self.env.now()

@@ -26,7 +26,11 @@ def build_cluster(env: Env, cluster: Optional[ClusterConfig] = None,
                   sgs_cfg: Optional[SGSConfig] = None,
                   lbs_cfg: Optional[LBSConfig] = None,
                   execute: Optional[ExecuteFn] = None) -> LoadBalancer:
-    """Construct the full Archipelago stack: workers -> SGSs -> LBS."""
+    """Construct the full Archipelago stack: workers -> SGSs -> LBS.
+
+    ``execute`` is the execution backend's data-plane hook
+    (``core.backends``), threaded uniformly into every SGS; ``None`` keeps
+    the modeled fast path (invocations charge ``fn.exec_time``)."""
     cc = cluster or ClusterConfig()
     sgss: List[SemiGlobalScheduler] = []
     wid = 0

@@ -64,7 +64,8 @@ class SemiGlobalScheduler:
         self.workers = workers
         self.env = env
         self.cfg = config or SGSConfig()
-        self.execute = execute              # real-execution hook (serving/)
+        self.execute = execute      # execution-backend hook (core.backends);
+                                    # None = modeled timing (fn.exec_time)
         self.report = report                # piggyback channel to the LBS
 
         self.estimator = DemandEstimator(sla=self.cfg.sla,
@@ -281,7 +282,8 @@ class SemiGlobalScheduler:
 
         self._inflight.setdefault(w.worker_id, []).append(inv)
         if self.execute is not None:
-            # real execution: measured wall time (serving engine)
+            # backend execution (stub/jax): the hook returns the invocation's
+            # actual runtime — measured wall seconds for real JAX calls
             runtime = setup + self.execute(inv)
             self.env.call_after(runtime, self._complete, inv, w, sbx)
         else:

@@ -27,6 +27,7 @@ from dataclasses import dataclass
 from typing import (TYPE_CHECKING, Callable, Dict, List, Optional, Protocol,
                     Type)
 
+from .backends import ExecutionBackend
 from .baselines import CentralizedFIFO, SparrowScheduler
 from .cluster import build_cluster, build_flat_workers
 from .lbs import LoadBalancer
@@ -67,11 +68,13 @@ class _ServiceClock:
 class Stack(Protocol):
     """What ``simulate``'s generic pump loop needs from a scheduler stack.
 
-    Lifecycle: ``build`` once, ``submit`` per arrival (called inside the
-    pump at the request's arrival instant), ``start_background`` once after
-    the first arrival is scheduled (periodic scaling passes etc.), and
-    ``collect`` after the run drains (fold per-scheduler samples into the
-    run's Metrics).
+    Lifecycle: ``build`` once (against the resolved execution backend —
+    stacks thread ``backend.execute`` into their schedulers so *what runs an
+    invocation* is orthogonal to *where it runs*, see ``core.backends``),
+    ``submit`` per arrival (called inside the pump at the request's arrival
+    instant), ``start_background`` once after the first arrival is scheduled
+    (periodic scaling passes etc.), and ``collect`` after the run drains
+    (fold per-scheduler samples into the run's Metrics).
 
     ``submit`` is the per-arrival hot path: the built-in stacks rebind
     ``self.submit`` in ``build`` to a closure over locals (clocks, costs,
@@ -84,7 +87,8 @@ class Stack(Protocol):
     lbs: Optional[LoadBalancer]
     scheduler: object
 
-    def build(self, env, exp: "Experiment", spec: "WorkloadSpec") -> None: ...
+    def build(self, env, exp: "Experiment", spec: "WorkloadSpec",
+              backend: ExecutionBackend) -> None: ...
     def submit(self, req: Request, now: float) -> None: ...
     def start_background(self) -> None: ...
     def collect(self, metrics: "Metrics") -> None: ...
@@ -139,11 +143,13 @@ class ArchipelagoStack:
     lbs: Optional[LoadBalancer] = None
     scheduler: object = None
 
-    def build(self, env, exp: "Experiment", spec: "WorkloadSpec") -> None:
+    def build(self, env, exp: "Experiment", spec: "WorkloadSpec",
+              backend: ExecutionBackend) -> None:
         self.env = env
         self.exp = exp
         self.spec = spec
-        self.lbs = build_cluster(env, exp.cluster, exp.sgs, exp.lbs)
+        self.lbs = build_cluster(env, exp.cluster, exp.sgs, exp.lbs,
+                                 execute=backend.execute)
         n_lb = max(1, int(exp.params.get("n_lbs", 4)))
         self._n_lb = n_lb
         self._lb_clocks = [_ServiceClock() for _ in range(n_lb)]
@@ -206,16 +212,24 @@ class FlatWorkerStack:
     """Base for centralized/decentralized baselines over one flat worker
     pool.  Subclasses provide ``make_scheduler``; the default ``submit``
     serializes every decision through ONE control-plane clock at
-    ``exp.sgs_cost`` per DAG function (§2.4's centralized bottleneck)."""
+    ``exp.sgs_cost`` per DAG function (§2.4's centralized bottleneck).
+
+    The execution backend's hook is wired onto the scheduler after
+    construction (every built-in scheduler exposes an ``execute``
+    attribute), so ``make_scheduler`` keeps its 3-argument signature and
+    custom stacks run under any backend for free."""
 
     lbs: Optional[LoadBalancer] = None
 
-    def build(self, env, exp: "Experiment", spec: "WorkloadSpec") -> None:
+    def build(self, env, exp: "Experiment", spec: "WorkloadSpec",
+              backend: ExecutionBackend) -> None:
         self.env = env
         self.exp = exp
         self.spec = spec
         self.scheduler = self.make_scheduler(
             build_flat_workers(exp.cluster), env, exp)
+        if backend.execute is not None:
+            self.scheduler.execute = backend.execute
         self._clock = _ServiceClock()
         if type(self).submit is FlatWorkerStack.submit:
             # hot path: same closure-over-locals trick as ArchipelagoStack
@@ -278,8 +292,9 @@ class SparrowStack(FlatWorkerStack):
                                 probes=int(exp.params.get("probes", 2)),
                                 seed=exp.seed)
 
-    def build(self, env, exp: "Experiment", spec: "WorkloadSpec") -> None:
-        super().build(env, exp, spec)
+    def build(self, env, exp: "Experiment", spec: "WorkloadSpec",
+              backend: ExecutionBackend) -> None:
+        super().build(env, exp, spec, backend)
         submit_request = self.scheduler.submit_request
         self.submit = lambda req, now: submit_request(req)
 

@@ -7,6 +7,7 @@ real-execution serving engine (``repro.serving``).
 """
 from __future__ import annotations
 
+import dataclasses
 import enum
 import itertools
 from dataclasses import dataclass, field
@@ -126,6 +127,19 @@ class DagSpec:
     def slack(self) -> float:
         """Total slack the user granted on top of the critical path."""
         return self.deadline - self._cp_time
+
+    def with_deadline(self, deadline: Optional[float] = None, *,
+                      slack: Optional[float] = None) -> "DagSpec":
+        """Copy with a new deadline — absolute (``deadline=``) or derived
+        from the cached critical path (``slack=`` sets it to
+        ``critical_path_time() + slack``).  This is how calibrated serving
+        DAGs get their measured deadlines without hand-rolling a second
+        construction pass."""
+        if (deadline is None) == (slack is None):
+            raise ValueError("pass exactly one of deadline= or slack=")
+        if slack is not None:
+            deadline = self._cp_time + slack
+        return dataclasses.replace(self, deadline=deadline)
 
 
 # ---------------------------------------------------------------------------

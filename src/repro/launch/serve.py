@@ -1,29 +1,43 @@
 """Serving launcher: `python -m repro.launch.serve --arch <id> ...`
 
-Runs a single-tenant Archipelago serving session with real JAX execution:
-calibrates the model (real compile = sandbox setup cost), pre-warms, then
-drives Poisson traffic through LBS -> SGS -> workers and reports latency
-percentiles and deadline adherence.
+Runs a single-tenant Archipelago serving session through the experiment API
+with the ``jax`` execution backend: calibrates the model (real XLA compile =
+sandbox setup cost), pre-warms, then drives Poisson traffic through
+LBS -> SGS -> workers and reports the full ``ExperimentResult`` (latency
+percentiles, deadline adherence, cold starts).  ``--backend stub`` replays
+the same pipeline with scripted times (no compiles) for smoke testing.
 """
 import argparse
-import random
 
 from ..configs import ARCH_IDS, get_config
 from ..core import ClusterConfig
-from ..serving import ServedModel, ServingApp, ServingStack
-from ..sim.metrics import summarize
+from ..serving import ServedModel, ServingApp
+from ..sim import Experiment, simulate
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="minicpm-2b", choices=ARCH_IDS)
     ap.add_argument("--rps", type=float, default=10.0)
-    ap.add_argument("--requests", type=int, default=60)
+    ap.add_argument("--requests", type=int, default=60,
+                    help="expected request count (duration = requests/rps)")
     ap.add_argument("--prompt", type=int, default=32)
     ap.add_argument("--gen", type=int, default=4)
     ap.add_argument("--slack", type=float, default=0.5)
     ap.add_argument("--n-sgs", type=int, default=2)
+    ap.add_argument("--backend", default="jax",
+                    choices=["jax", "stub", "modeled"])
+    ap.add_argument("--stack", default="archipelago")
+    ap.add_argument("--warmup", type=float, default=None,
+                    help="steady-state window start (exclude the pre-warm "
+                         "transient from the reported stats); default: half "
+                         "the duration for the jax backend — real compiles "
+                         "take seconds and arrivals start at t=0 — else 0")
     args = ap.parse_args()
+    duration = args.requests / args.rps
+    warmup = args.warmup
+    if warmup is None:
+        warmup = duration / 2.0 if args.backend == "jax" else 0.0
 
     app = ServingApp(
         dag_id=args.arch,
@@ -31,21 +45,31 @@ def main() -> None:
             get_config(args.arch, reduced=True),
             prompt_len=args.prompt, gen_len=args.gen)},
         slack=args.slack)
-    print(f"[serve] calibrating {args.arch} (real XLA compile)...")
-    stack = ServingStack([app], cluster=ClusterConfig(
-        n_sgs=args.n_sgs, workers_per_sgs=2, cores_per_worker=2))
-    for name, spec in stack.fn_specs.items():
+    exp = Experiment(
+        stack=args.stack,
+        backend=args.backend,
+        workload_factory="serving_apps",
+        workload_kwargs=dict(apps=[app], duration=duration,
+                             rps=args.rps, prewarm_per_fn=4),
+        cluster=ClusterConfig(n_sgs=args.n_sgs, workers_per_sgs=2,
+                              cores_per_worker=2),
+        warmup=warmup, drain=10.0)
+    if args.backend == "jax":
+        print(f"[serve] calibrating {args.arch} (real XLA compile)...")
+    r = simulate(exp)
+    backend = r.sim.backend
+    for name, spec in (getattr(backend, "fn_specs", None) or {}).items():
         print(f"  {name}: exec={spec.exec_time*1e3:.1f}ms "
               f"setup={spec.setup_time:.1f}s "
               f"SNE={spec.setup_time/spec.exec_time:.0f}x")
-    t = stack.prewarm(args.arch, n_per_fn=4)
-    rng = random.Random(0)
-    for _ in range(args.requests):
-        t += rng.expovariate(args.rps)
-        stack.submit_at(t, args.arch)
-    m = stack.run(until=t + 10.0)
-    print(" ", summarize(args.arch, m))
-    print(f"  real executions: {stack.executor.n_executions}")
+    lat = r.latency_percentiles
+    print(f"  {r.name}: n={r.n_requests} done={r.n_completed} "
+          f"p50={(lat['p50'] or 0)*1e3:.1f}ms "
+          f"p99={(lat['p99'] or 0)*1e3:.1f}ms "
+          f"deadlines_met={(r.deadline_met_frac or 0)*100:.2f}% "
+          f"cold_starts={r.cold_start_count}")
+    print(f"  executions: {backend.counters().get('n_executions', 0)} "
+          f"({r.backend} backend)")
 
 
 if __name__ == "__main__":

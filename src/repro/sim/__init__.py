@@ -6,7 +6,9 @@ from .workload import (ArrivalProcess, ConstantRate, OnOffRate, PoissonResampled
                        paper_workload_1, paper_workload_2)
 from .metrics import Metrics, summarize
 from .experiment import (ClassStats, Experiment, ExperimentResult, SimResult,
-                         SweepResult, run_sweep, simulate)
+                         SweepResult, available_workloads,
+                         get_workload_factory, register_workload, run_sweep,
+                         simulate)
 from .runner import run_archipelago, run_baseline, run_sparrow
 
 __all__ = [
@@ -15,5 +17,6 @@ __all__ = [
     "paper_workload_1", "paper_workload_2", "Metrics", "summarize",
     "ClassStats", "Experiment", "ExperimentResult", "SimResult",
     "SweepResult", "run_sweep", "simulate",
+    "register_workload", "get_workload_factory", "available_workloads",
     "run_archipelago", "run_baseline", "run_sparrow",
 ]

@@ -18,6 +18,11 @@ stable row schema.
 The legacy ``run_archipelago``/``run_baseline``/``run_sparrow`` drivers in
 ``repro.sim.runner`` are thin shims over this loop and remain decision-
 identical to their pre-refactor selves (``tests/test_equivalence.py``).
+
+The ``backend`` axis selects *what executes an invocation* (``modeled`` —
+the default analytic simulation — ``stub`` scripted times, or ``jax`` real
+hardware-in-the-loop execution; ``repro.core.backends``), orthogonal to the
+scheduler stack, so real-execution scenarios are ordinary sweep cells.
 """
 from __future__ import annotations
 
@@ -29,6 +34,7 @@ from dataclasses import dataclass, field
 from typing import (Any, Callable, Dict, List, Mapping, Optional, Sequence,
                     Tuple, Union)
 
+from ..core.backends import ExecutionBackend, resolve_backend
 from ..core.cluster import ClusterConfig
 from ..core.lbs import LBSConfig, LoadBalancer
 from ..core.sgs import SGSConfig
@@ -42,14 +48,62 @@ from .workload import WorkloadSpec, paper_workload_1, paper_workload_2
 __all__ = [
     "Experiment", "ExperimentResult", "ClassStats", "SimResult",
     "simulate", "run_sweep", "SweepResult", "WORKLOAD_FACTORIES",
+    "register_workload", "get_workload_factory", "available_workloads",
 ]
 
 # Named workload factories so sweeps can construct per-cell workloads from a
 # string + kwargs (a shared WorkloadSpec would pin scale/duration/seed).
-WORKLOAD_FACTORIES: Dict[str, Callable[..., WorkloadSpec]] = {
-    "paper_workload_1": paper_workload_1,
-    "paper_workload_2": paper_workload_2,
-}
+# Registered through ``register_workload`` — same shape as ``register_stack``
+# and ``register_backend``.
+WORKLOAD_FACTORIES: Dict[str, Callable[..., WorkloadSpec]] = {}
+
+
+def register_workload(name: str, *aliases: str
+                      ) -> Callable[[Callable[..., WorkloadSpec]],
+                                    Callable[..., WorkloadSpec]]:
+    """Decorator: make a workload factory constructible by name through
+    ``Experiment(workload_factory=name)``.  Raises on duplicate
+    registration."""
+
+    def deco(fn: Callable[..., WorkloadSpec]) -> Callable[..., WorkloadSpec]:
+        names = (name, *aliases)
+        taken = [n for n in names if n in WORKLOAD_FACTORIES]
+        if taken:       # validate before inserting: no partial registration
+            raise ValueError(
+                f"workload factory {taken[0]!r} is already registered")
+        for n in names:
+            WORKLOAD_FACTORIES[n] = fn
+        return fn
+
+    return deco
+
+
+def get_workload_factory(name: str) -> Callable[..., WorkloadSpec]:
+    import_err: Optional[BaseException] = None
+    if name not in WORKLOAD_FACTORIES:
+        # serving factories register on import of repro.serving.engine; pull
+        # it in lazily so `workload_factory="serving_apps"` works without the
+        # caller importing the (jax-dependent) serving package first
+        try:
+            from ..serving import engine as _serving_engine  # noqa: F401
+        except ImportError as e:                        # pragma: no cover
+            import_err = e
+    try:
+        return WORKLOAD_FACTORIES[name]
+    except KeyError:
+        extra = (f" (importing repro.serving failed: {import_err})"
+                 if import_err is not None else "")
+        raise ValueError(
+            f"unknown workload factory {name!r}; registered factories: "
+            f"{', '.join(sorted(WORKLOAD_FACTORIES))}{extra}") from import_err
+
+
+def available_workloads() -> List[str]:
+    return sorted(WORKLOAD_FACTORIES)
+
+
+register_workload("paper_workload_1")(paper_workload_1)
+register_workload("paper_workload_2")(paper_workload_2)
 
 
 @dataclass
@@ -60,6 +114,9 @@ class SimResult:
     env: SimEnv
     lbs: Optional[LoadBalancer] = None
     scheduler: object = None
+    # the built execution backend (executor handles, counters) — None only
+    # for legacy constructions
+    backend: Optional[ExecutionBackend] = None
 
 
 @dataclass
@@ -67,15 +124,21 @@ class Experiment:
     """One declarative simulation: workload × cluster × stack × knobs.
 
     Workload is either an explicit ``workload`` spec or a
-    ``workload_factory`` (callable or a ``WORKLOAD_FACTORIES`` name) applied
-    to ``workload_kwargs`` — use the factory form in sweeps so each cell can
-    vary scale/duration.  ``params`` holds stack-specific knobs (``n_lbs``,
+    ``workload_factory`` (callable or a registered name) applied to
+    ``workload_kwargs`` — use the factory form in sweeps so each cell can
+    vary scale/duration.  ``backend`` selects the execution backend
+    (registered name + ``backend_kwargs``, or a ready
+    ``ExecutionBackend`` instance — share one across sweep cells so e.g.
+    JAX models calibrate once); the default ``"modeled"`` is the pure
+    analytic simulation.  ``params`` holds stack-specific knobs (``n_lbs``,
     ``keepalive``, ``probes``, ``scan_limit``, ...); ``sgs``/``lbs`` carry
     the Archipelago policy configs; ``lb_cost``/``sgs_cost`` are the §7.4
     control-plane decision costs.
     """
 
     stack: str = "archipelago"
+    backend: Union[str, ExecutionBackend] = "modeled"
+    backend_kwargs: Dict[str, Any] = field(default_factory=dict)
     workload: Optional[WorkloadSpec] = None
     workload_factory: Union[str, Callable[..., WorkloadSpec], None] = None
     workload_kwargs: Dict[str, Any] = field(default_factory=dict)
@@ -96,23 +159,24 @@ class Experiment:
             return self.workload
         f = self.workload_factory
         if isinstance(f, str):
-            try:
-                f = WORKLOAD_FACTORIES[f]
-            except KeyError:
-                raise ValueError(
-                    f"unknown workload factory {f!r}; known: "
-                    f"{', '.join(sorted(WORKLOAD_FACTORIES))}") from None
+            f = get_workload_factory(f)
         if f is None:
             raise ValueError(
                 "Experiment needs either `workload` or `workload_factory`")
         return f(**self.workload_kwargs)
+
+    def backend_name(self) -> str:
+        return self.backend if isinstance(self.backend, str) \
+            else self.backend.name
 
     def label(self) -> str:
         if self.name:
             return self.name
         wl = (self.workload_factory
               if isinstance(self.workload_factory, str) else "custom")
-        return f"{self.stack}/{wl}/seed{self.seed}"
+        b = self.backend_name()
+        tail = "" if b == "modeled" else f"/{b}"
+        return f"{self.stack}/{wl}/seed{self.seed}{tail}"
 
 
 # ---------------------------------------------------------------------------
@@ -187,6 +251,7 @@ class ExperimentResult:
     per_class: Dict[str, ClassStats]
     n_events: int
     wall_s: float
+    backend: str = "modeled"       # execution backend the run used
     sim: Optional[SimResult] = field(default=None, repr=False, compare=False)
 
     def to_dict(self) -> Dict[str, Any]:
@@ -238,6 +303,7 @@ def _build_result(exp: Experiment, spec: WorkloadSpec, sim: SimResult,
         per_class=per_class,
         n_events=sim.env.n_events,
         wall_s=round(wall_s, 4),
+        backend=exp.backend_name(),
         sim=sim)
 
 
@@ -287,11 +353,23 @@ def _run_experiment(exp: Experiment,
                     timed_calls: Sequence[Tuple[float, Hook]] = ()
                     ) -> Tuple[WorkloadSpec, SimResult, Stack, float]:
     """The pump loop without result summarization (the legacy ``run_*``
-    shims return the raw ``SimResult`` and skip the summary entirely)."""
+    shims return the raw ``SimResult`` and skip the summary entirely).
+
+    Order of construction: workload resolves first, then the execution
+    backend re-specs it (calibration / scripted times), then the stack
+    builds against the resolved backend.  A spec-provided ``pre_pump`` hook
+    (serving prewarm — the §3 "initial DAG upload") runs after the stack is
+    built but before any arrival fires.
+    """
     spec = exp.resolve_workload()
+    backend = resolve_backend(exp.backend, exp.backend_kwargs)
+    spec = backend.build(exp, spec)
     env = SimEnv()
     stack: Stack = get_stack(exp.stack)()
-    stack.build(env, exp, spec)
+    stack.build(env, exp, spec, backend)
+    pre_pump = getattr(spec, "pre_pump", None)
+    if pre_pump is not None:
+        pre_pump(env, stack)
     metrics = Metrics()
 
     t0 = time.perf_counter()
@@ -326,7 +404,8 @@ def _run_experiment(exp: Experiment,
 
     sim = SimResult(metrics=metrics, env=env,
                     lbs=getattr(stack, "lbs", None),
-                    scheduler=getattr(stack, "scheduler", None))
+                    scheduler=getattr(stack, "scheduler", None),
+                    backend=backend)
     return spec, sim, stack, wall
 
 
@@ -338,17 +417,19 @@ def _run_experiment(exp: Experiment,
 def _override(exp: Experiment, path: str, value: Any) -> Experiment:
     """Return a copy of ``exp`` with one (possibly dotted) field replaced.
 
-    ``"seed"`` replaces a top-level field; ``"cluster.n_sgs"`` /
-    ``"sgs.proactive"`` / ``"lbs.scale_out_threshold"`` replace a field of a
-    nested config (instantiating the default config when unset);
-    ``"params.probes"`` / ``"workload_kwargs.scale"`` set one dict key.
+    ``"seed"`` (or ``"backend"``, ``"stack"``, ...) replaces a top-level
+    field; ``"cluster.n_sgs"`` / ``"sgs.proactive"`` /
+    ``"lbs.scale_out_threshold"`` replace a field of a nested config
+    (instantiating the default config when unset); ``"params.probes"`` /
+    ``"workload_kwargs.scale"`` / ``"backend_kwargs.exec_time"`` set one
+    dict key.
     """
     head, _, rest = path.partition(".")
     if not rest:
         if head not in {f.name for f in dataclasses.fields(exp)}:
             raise ValueError(f"unknown Experiment field {head!r}")
         return dataclasses.replace(exp, **{head: value})
-    if head in ("params", "workload_kwargs"):
+    if head in ("params", "workload_kwargs", "backend_kwargs"):
         d = dict(getattr(exp, head))
         d[rest] = value
         return dataclasses.replace(exp, **{head: d})

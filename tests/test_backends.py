@@ -1,0 +1,309 @@
+"""The execution-backend seam: registry errors, stub-under-every-stack,
+scripted times surfacing in metrics, modeled-backend identity, the workload
+registry, and full ExperimentResult reporting for real-execution runs
+(the ServingStack.run() regression: the old private pump loop collected
+only queuing delays — no per-class stats, no n_events, no warmup window)."""
+import json
+from dataclasses import replace
+
+import pytest
+
+from repro.core import (ClusterConfig, ExecutionBackend, StubBackend,
+                        available_backends, available_stacks, get_backend,
+                        register_backend)
+from repro.core.backends import respec_dag
+from repro.core.types import DagSpec, FunctionSpec
+from repro.serving.engine import ServingApp, serving_workload
+from repro.sim import (Experiment, ExperimentResult, available_workloads,
+                       register_workload, run_sweep, simulate)
+
+SMALL = ClusterConfig(n_sgs=2, workers_per_sgs=2, cores_per_worker=4,
+                      pool_mem_mb=2048.0)
+
+
+def _tiny_exp(**kw):
+    base = dict(workload_factory="paper_workload_1",
+                workload_kwargs=dict(duration=3.0, scale=0.02,
+                                     dags_per_class=1),
+                cluster=SMALL, warmup=1.0, drain=3.0)
+    base.update(kw)
+    return Experiment(**base)
+
+
+def _serving_exp(**kw):
+    apps = [ServingApp("chat", {"chat/gen": None}, slack=0.5),
+            ServingApp("caption", {"vlm/embed": None, "vlm/decode": None},
+                       edges=(("vlm/embed", "vlm/decode"),), slack=1.0)]
+    base = dict(stack="archipelago", backend="stub",
+                backend_kwargs=dict(exec_time=0.05, setup_time=0.4),
+                workload_factory="serving_apps",
+                workload_kwargs=dict(apps=apps, duration=6.0, rps=8.0,
+                                     prewarm_per_fn=2),
+                cluster=SMALL, warmup=1.0, drain=5.0)
+    base.update(kw)
+    return Experiment(**base)
+
+
+# -- registry ----------------------------------------------------------------
+
+
+def test_builtin_backends_registered():
+    names = available_backends()
+    for name in ("modeled", "stub", "jax"):
+        assert name in names
+
+
+def test_unknown_backend_error_lists_registered():
+    with pytest.raises(ValueError) as ei:
+        simulate(_tiny_exp(backend="no-such-backend"))
+    msg = str(ei.value)
+    for name in ("modeled", "stub", "jax"):
+        assert name in msg
+
+
+def test_duplicate_backend_registration_rejected():
+    with pytest.raises(ValueError, match="already registered"):
+        register_backend("stub")(object)
+
+
+def test_backend_instance_passes_through():
+    backend = StubBackend(exec_time=0.03)
+    res = simulate(_tiny_exp(backend=backend))
+    assert res.backend == "stub"
+    assert res.sim.backend is backend
+    assert backend.n_executions > 0
+
+
+def test_backend_kwargs_rejected_with_instance():
+    with pytest.raises(ValueError, match="backend_kwargs"):
+        simulate(_tiny_exp(backend=StubBackend(),
+                           backend_kwargs=dict(exec_time=0.1)))
+
+
+# -- the backend seam under every stack --------------------------------------
+
+
+def test_stub_backend_runs_under_every_registered_stack():
+    """The data plane is orthogonal to the control plane: any registered
+    stack drives real-execution code paths through ``simulate`` and reports
+    a full ExperimentResult."""
+    seen = set()
+    for name in available_stacks():
+        res = simulate(_tiny_exp(stack=name, backend="stub"))
+        assert res.backend == "stub"
+        assert res.n_completed > 0
+        assert res.n_events > 0
+        assert res.per_class                      # per-class stats populated
+        assert res.sim.backend.counters()["n_executions"] > 0
+        seen.add(name)
+    assert {"archipelago", "fifo", "baseline", "sparrow", "pull"} <= seen
+
+
+def test_stub_without_scripts_is_decision_identical_to_modeled():
+    for stack in ("archipelago", "fifo", "sparrow", "pull"):
+        m = simulate(_tiny_exp(stack=stack)).to_dict()
+        s = simulate(_tiny_exp(stack=stack, backend="stub")).to_dict()
+        for d in (m, s):
+            d.pop("wall_s"), d.pop("backend"), d.pop("name")
+        assert m == s
+
+
+def test_modeled_backend_is_default_and_explicit_form_identical():
+    a = simulate(_tiny_exp()).to_dict()
+    b = simulate(_tiny_exp(backend="modeled")).to_dict()
+    a.pop("wall_s"), b.pop("wall_s")
+    assert a == b
+    assert b["backend"] == "modeled"
+
+
+def test_scripted_times_surface_in_metrics():
+    """Scripted setup/exec times must show up in cold-start latency and the
+    percentiles — the seam feeds scheduling real numbers, not fn defaults."""
+    dag = DagSpec("d", (FunctionSpec("d/f", 0.001),), (), deadline=1.0)
+    from repro.sim import ConstantRate, WorkloadSpec
+    spec = WorkloadSpec([(dag, ConstantRate(5.0))], duration=2.0)
+    res = simulate(Experiment(
+        workload=spec, cluster=SMALL, backend="stub",
+        backend_kwargs=dict(exec_time=0.080, setup_time=0.500)))
+    assert res.cold_start_count >= 1
+    lats = res.sim.metrics.latencies()
+    # the first (cold) request pays scripted setup + exec
+    assert max(lats) >= 0.58
+    # every request pays at least the scripted exec time
+    assert min(lats) >= 0.08
+    assert res.latency_percentiles["p50"] >= 0.08
+
+
+def test_stub_per_fn_scripting():
+    res = simulate(_serving_exp(backend_kwargs=dict(
+        exec_time={"chat/gen": 0.2, "vlm/embed": 0.01, "vlm/decode": 0.01},
+        setup_time=0.1)))
+    chat = res.per_class["chat"]
+    caption = res.per_class["caption"]
+    assert chat.p50 >= 0.2
+    assert caption.p50 < 0.2
+
+
+def test_backend_is_a_sweep_axis():
+    sweep = run_sweep(_tiny_exp(), {"backend": ["modeled", "stub"]})
+    assert len(sweep) == 2
+    assert [r["result"]["backend"] for r in sweep] == ["modeled", "stub"]
+    keys = {frozenset(r["result"].keys()) for r in sweep}
+    assert len(keys) == 1              # stable row schema across backends
+
+
+def test_backend_kwargs_is_a_sweep_axis():
+    sweep = run_sweep(_tiny_exp(backend="stub"),
+                      {"backend_kwargs.exec_time": [0.05, 0.1]})
+    p50s = [r["result"]["latency_percentiles"]["p50"] for r in sweep]
+    assert p50s[0] >= 0.05
+    assert p50s[1] >= 0.1
+    assert p50s[1] > p50s[0]
+
+
+def test_jax_backend_requires_served_models():
+    with pytest.raises(ValueError, match="served"):
+        simulate(_tiny_exp(backend="jax"))
+
+
+# -- workload registry (register_workload) -----------------------------------
+
+
+def test_workload_registry_lists_and_rejects_duplicates():
+    assert "paper_workload_1" in available_workloads()
+    with pytest.raises(ValueError, match="already registered"):
+        register_workload("paper_workload_1")(lambda: None)
+
+
+def test_serving_apps_factory_registered():
+    assert "serving_apps" in available_workloads()
+
+
+def test_unknown_workload_error_lists_known():
+    with pytest.raises(ValueError) as ei:
+        simulate(_tiny_exp(workload_factory="not_a_workload"))
+    msg = str(ei.value)
+    assert "paper_workload_1" in msg and "serving_apps" in msg
+
+
+# -- serving workloads through the unified path ------------------------------
+
+
+def test_serving_run_reports_full_experiment_result():
+    """Regression for the old ServingStack.run(): the unified path must
+    report per-class stats, event counts, queuing percentiles and the
+    steady-state window for real-execution (stub) runs."""
+    res = simulate(_serving_exp())
+    assert res.n_completed == res.n_requests > 0
+    assert res.n_events > 0
+    assert set(res.per_class) == {"chat", "caption"}
+    assert res.queuing_percentiles["p50"] is not None
+    assert res.deadline_met_frac is not None
+    assert res.n_requests <= res.n_requests_total       # warmup filtering
+    assert res.n_requests == sum(
+        1 for r in res.sim.metrics.requests if r.arrival_time >= 1.0)
+    d = res.to_dict()
+    back = ExperimentResult.from_dict(json.loads(json.dumps(d)))
+    assert back.to_dict() == d
+    assert back.backend == "stub"
+
+
+def test_serving_deadlines_derive_from_critical_path():
+    """The old engine built DagSpecs with the dead `deadline=0.0 or 1.0`
+    expression and constructed every DAG twice; ``with_deadline`` derives
+    the deadline from the DAG's (possibly re-specced) critical path once."""
+    app = ServingApp("caption", {"vlm/embed": None, "vlm/decode": None},
+                     edges=(("vlm/embed", "vlm/decode"),), slack=1.0)
+    dag = app.dag()
+    assert dag.deadline == pytest.approx(dag.critical_path_time() + 1.0)
+    assert dag.deadline != 1.0          # the old dead expression's value
+    # re-speccing with scripted times re-derives the deadline
+    new = respec_dag(dag, {
+        "vlm/embed": FunctionSpec("vlm/embed", 0.2),
+        "vlm/decode": FunctionSpec("vlm/decode", 0.3)}, slack=1.0)
+    assert new.critical_path_time() == pytest.approx(0.5)
+    assert new.deadline == pytest.approx(1.5)
+
+
+def test_with_deadline_validation():
+    dag = DagSpec("d", (FunctionSpec("d/f", 0.1),), (), deadline=1.0)
+    assert dag.with_deadline(2.0).deadline == 2.0
+    assert dag.with_deadline(slack=0.5).deadline == pytest.approx(0.6)
+    with pytest.raises(ValueError, match="exactly one"):
+        dag.with_deadline()
+    with pytest.raises(ValueError, match="exactly one"):
+        dag.with_deadline(2.0, slack=0.5)
+
+
+def test_prewarm_pre_pump_reduces_cold_starts():
+    warm = simulate(_serving_exp())
+    cold = simulate(_serving_exp(workload_kwargs=dict(
+        apps=[ServingApp("chat", {"chat/gen": None}, slack=0.5),
+              ServingApp("caption", {"vlm/embed": None, "vlm/decode": None},
+                         edges=(("vlm/embed", "vlm/decode"),), slack=1.0)],
+        duration=6.0, rps=8.0, prewarm_per_fn=0)))
+    assert warm.sim.metrics.cold_start_count() \
+        < cold.sim.metrics.cold_start_count()
+
+
+def test_serving_workload_under_baseline_stack():
+    """Reactive baselines ignore prewarm (no proactive allocation) but the
+    serving workload still runs and reports through the same pipeline."""
+    res = simulate(_serving_exp(stack="fifo"))
+    assert res.n_completed == res.n_requests > 0
+    assert res.sim.metrics.cold_start_count() > 0   # no prewarm possible
+
+
+def test_serving_workload_rejects_duplicate_fn_names():
+    apps = [ServingApp("a", {"f": None}), ServingApp("b", {"f": None})]
+    with pytest.raises(ValueError, match="more than one app"):
+        serving_workload(apps, duration=1.0)
+
+
+def test_serving_workload_rejects_duplicate_dag_ids():
+    apps = [ServingApp("a", {"f": None}), ServingApp("a", {"g": None})]
+    with pytest.raises(ValueError, match="duplicate dag_id"):
+        serving_workload(apps, duration=1.0)
+
+
+def test_serving_workload_validates_rps_and_arrivals_keys():
+    apps = [ServingApp("a", {"f": None}), ServingApp("b", {"g": None})]
+    with pytest.raises(ValueError, match="unknown dag_id"):
+        serving_workload(apps, duration=1.0, rps={"typo": 5.0, "a": 1.0,
+                                                  "b": 1.0})
+    with pytest.raises(ValueError, match="must cover every app"):
+        serving_workload(apps, duration=1.0, rps={"a": 5.0})
+    with pytest.raises(ValueError, match="unknown dag_id"):
+        from repro.sim import ConstantRate
+        serving_workload(apps, duration=1.0,
+                         arrivals={"typo": ConstantRate(1.0)})
+    # a partial rps mapping is fine when arrivals covers the rest
+    from repro.sim import ConstantRate
+    spec = serving_workload(apps, duration=1.0, rps={"a": 5.0},
+                            arrivals={"b": ConstantRate(2.0)})
+    assert len(spec.tenants) == 2
+    # but the same dag_id in both is ambiguous
+    with pytest.raises(ValueError, match="both"):
+        serving_workload(apps, duration=1.0, rps={"a": 5.0, "b": 1.0},
+                         arrivals={"b": ConstantRate(2.0)})
+
+
+def test_stub_rejects_unknown_scripted_fn_names():
+    with pytest.raises(ValueError, match="unknown function"):
+        simulate(_serving_exp(backend_kwargs=dict(
+            exec_time={"chat/gn": 0.2})))       # typo for chat/gen
+
+
+def test_custom_backend_registration():
+    @register_backend("test-doubling")
+    class DoublingBackend(ExecutionBackend):
+        """Every invocation takes twice its modeled time."""
+
+        def build(self, exp, spec):
+            self.execute = lambda inv: 2.0 * inv.fn.exec_time
+            return spec
+
+    fast = simulate(_tiny_exp())
+    slow = simulate(_tiny_exp(backend="test-doubling"))
+    assert slow.latency_percentiles["p50"] \
+        > fast.latency_percentiles["p50"]
