@@ -5,14 +5,28 @@ pipeline) over scheduler stacks through ``run_sweep``, with real JAX
 execution (``backend="jax"``: one shared backend instance, so the models
 calibrate/compile once across all cells) and writes a structured
 ``BENCH_serving.json``: full per-cell ``ExperimentResult`` rows plus a
-flattened per-class view.
+flattened per-class view, and — on full (non-smoke) real-JAX runs — a
+**batched-vs-unbatched comparison** (``jax-batched`` vs ``jax`` on the same
+app and traffic) with batch-occupancy counters.
 
-    python -m benchmarks.bench_serving [--smoke] [--backend jax|stub]
+    python -m benchmarks.bench_serving [--smoke] \
+        [--backend jax|jax-batched|stub|stub-batched]
 
 ``--smoke`` runs 1 small model for a short duration and writes
 ``BENCH_serving.partial.json`` (gitignored) so partial runs never clobber
 the tracked artifact — the PR-2 ``--only`` convention.  ``--backend stub``
-replays the same pipeline with deterministic scripted times (no compiles).
+replays the same pipeline with deterministic scripted times (no compiles);
+``stub-batched``/``jax-batched`` route execution through the batching data
+plane (``BatchCoalescer``).
+
+Throughput note: the simulator grants every invocation its own abstract
+core, so *simulated* completion counts cannot show what batching buys on
+one physical device.  The comparison therefore reports
+``completed_per_wall_s`` — completed requests per wall-clock second of the
+run, i.e. what the actual hardware sustained while the event loop drove it.
+Per-invocation ``jax`` pays one full model run per invocation; ``jax-batched``
+amortizes weight reads across every batch member, so the same request count
+needs a fraction of the device time.
 """
 from __future__ import annotations
 
@@ -20,22 +34,105 @@ import argparse
 import json
 import sys
 import time
+from dataclasses import replace
 from pathlib import Path
 
 from .common import timer  # noqa: F401  (also bootstraps sys.path for src/)
 
-from repro.core import ClusterConfig, JaxBackend, StubBackend
+from repro.core import (BatchedJaxBackend, ClusterConfig, JaxBackend,
+                        StubBackend, StubBatchedBackend)
 from repro.serving import multitenant_apps, smoke_apps
-from repro.sim import Experiment, run_sweep
+from repro.sim import Experiment, run_sweep, simulate
 
 STACKS = ["archipelago", "fifo", "pull"]
+
+# batched-vs-unbatched comparison knobs: one small model, enough offered
+# load that several invocations are in flight per batch window
+COMPARE_RPS = 450.0
+COMPARE_DURATION = 4.0
+COMPARE_WINDOW = 0.008
+COMPARE_MAX_BATCH = 8
+
+
+def _make_backend(name: str, batch_window: float = COMPARE_WINDOW,
+                  max_batch: int = COMPARE_MAX_BATCH):
+    if name == "jax":
+        return JaxBackend()
+    if name == "jax-batched":
+        return BatchedJaxBackend(batch_window=batch_window,
+                                 max_batch=max_batch)
+    if name == "stub":
+        return StubBackend(exec_time=0.020, setup_time=1.0)
+    if name == "stub-batched":
+        return StubBatchedBackend(exec_time=0.020, setup_time=1.0,
+                                  batch_window=batch_window,
+                                  max_batch=max_batch)
+    raise ValueError(name)
+
+
+def batched_comparison() -> dict:
+    """``jax`` vs ``jax-batched`` on identical traffic: same app, same
+    arrivals, same cluster — only the data plane differs.  Returns the
+    comparison rows plus the headline wall-clock-throughput speedup."""
+    apps = smoke_apps()
+    base = Experiment(
+        stack="archipelago",
+        workload_factory="serving_apps",
+        workload_kwargs=dict(apps=apps, duration=COMPARE_DURATION,
+                             rps=COMPARE_RPS, prewarm_per_fn=4),
+        cluster=ClusterConfig(n_sgs=2, workers_per_sgs=2,
+                              cores_per_worker=4),
+        warmup=1.0, drain=5.0)
+    rows = {}
+    for name in ("jax", "jax-batched"):
+        print(f"[bench_serving] comparison: {name} @ {COMPARE_RPS:.0f} rps "
+              f"(real executions)...", flush=True)
+        res = simulate(replace(base, backend=_make_backend(name)))
+        d = res.to_dict()
+        # completed requests per wall second: what the hardware sustained
+        d["completed_per_wall_s"] = (
+            res.n_completed / res.wall_s if res.wall_s else None)
+        rows[name] = d
+        extra = ""
+        bc = res.backend_counters
+        if bc.get("n_batches"):
+            extra = (f" batches={bc['n_batches']} "
+                     f"mean_occ={bc['n_batched_invocations']/bc['n_batches']:.2f} "
+                     f"max_occ={bc['max_batch_occupancy']}")
+        print(f"  {name:>12}: done={res.n_completed} wall={res.wall_s:.1f}s "
+              f"-> {d['completed_per_wall_s']:.1f} req/wall-s{extra}",
+              flush=True)
+    speedup = (rows["jax-batched"]["completed_per_wall_s"]
+               / rows["jax"]["completed_per_wall_s"])
+    print(f"  batched throughput speedup: {speedup:.2f}x", flush=True)
+    return {
+        "rps": COMPARE_RPS,
+        "duration": COMPARE_DURATION,
+        "batch_window": COMPARE_WINDOW,
+        "max_batch": COMPARE_MAX_BATCH,
+        "metric": "completed_per_wall_s (completed requests per wall-clock "
+                  "second: real device throughput under the event loop)",
+        "results": rows,
+        "throughput_speedup": speedup,
+    }
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="1 small model, short duration, partial artifact")
-    ap.add_argument("--backend", default="jax", choices=["jax", "stub"])
+    ap.add_argument("--backend", default="jax",
+                    choices=["jax", "jax-batched", "stub", "stub-batched"])
+    ap.add_argument("--no-compare", action="store_true",
+                    help="skip the jax-batched vs jax comparison (it runs "
+                         "on full --backend jax runs by default)")
+    ap.add_argument("--batch-window", type=float, default=COMPARE_WINDOW,
+                    help="batched backends, main sweep only: coalescing "
+                         "window in sim seconds (the comparison always uses "
+                         "the pinned COMPARE_* constants)")
+    ap.add_argument("--max-batch", type=int, default=COMPARE_MAX_BATCH,
+                    help="batched backends, main sweep only: size-triggered "
+                         "flush threshold")
     ap.add_argument("--out", default="",
                     help="JSON artifact path (default: BENCH_serving.json "
                          "at the repo root, or BENCH_serving.partial.json "
@@ -43,14 +140,14 @@ def main() -> None:
     args = ap.parse_args()
 
     apps = smoke_apps() if args.smoke else multitenant_apps()
-    if args.backend == "jax":
+    backend = _make_backend(args.backend, args.batch_window, args.max_batch)
+    if args.backend.startswith("jax"):
         # one instance shared across every sweep cell: calibrate once
-        backend = JaxBackend()
         n_models = len({id(m) for a in apps for m in a.models.values()})
-        print(f"[bench_serving] calibrating {n_models} model(s) "
-              f"(real XLA compiles)...", flush=True)
-    else:
-        backend = StubBackend(exec_time=0.020, setup_time=1.0)
+        per = ("one executable per batch bucket"
+               if args.backend == "jax-batched" else "real XLA compiles")
+        print(f"[bench_serving] calibrating {n_models} model(s) ({per})...",
+              flush=True)
 
     duration = 3.0 if args.smoke else 12.0
     base = Experiment(
@@ -73,11 +170,17 @@ def main() -> None:
               f"done={res['n_completed']} "
               f"p99={(res['latency_percentiles']['p99'] or 0)*1e3:.1f}ms "
               f"deadlines_met={(res['deadline_met_frac'] or 0)*100:.1f}% "
-              f"cold_starts={res['cold_start_count']}", flush=True)
+              f"cold_starts={res['cold_start_count']} "
+              f"batches={res['backend_counters'].get('n_batches', 0)}",
+              flush=True)
         for cls, stats in sorted(res["per_class"].items()):
             per_class_rows.append(dict(stats, **row["cell"],
                                        dag_class=cls,
                                        backend=res["backend"]))
+
+    comparison = None
+    if args.backend == "jax" and not args.smoke and not args.no_compare:
+        comparison = batched_comparison()
 
     calibration = {
         name: {"exec_time": spec.exec_time, "setup_time": spec.setup_time}
@@ -87,7 +190,7 @@ def main() -> None:
                     else "BENCH_serving.json")
     out_path = Path(args.out) if args.out else repo_root / default_name
     payload = {
-        "schema": 1,
+        "schema": 2,
         "bench": "serving",
         "smoke": bool(args.smoke),
         "backend": backend.name,
@@ -97,6 +200,7 @@ def main() -> None:
         "wall_s": round(time.time() - t0, 2),
         "sweep": sweep.to_dict(),          # full ExperimentResult rows
         "per_class_rows": per_class_rows,  # flattened per-class view
+        "batched_comparison": comparison,  # jax-batched vs jax (full runs)
     }
     with open(out_path, "w") as f:
         json.dump(payload, f, indent=2, sort_keys=True)

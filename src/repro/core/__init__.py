@@ -22,9 +22,10 @@ from .sgs import Env, SGSConfig, SemiGlobalScheduler
 from .lbs import ConsistentHashRing, LBSConfig, LoadBalancer
 from .baselines import CentralizedFIFO, SparrowScheduler
 from .cluster import ClusterConfig, build_cluster, build_flat_workers
-from .backends import (ExecutionBackend, JaxBackend, ModeledBackend,
-                       StubBackend, available_backends, get_backend,
-                       register_backend)
+from .backends import (BatchCoalescer, BatchedJaxBackend, CompletionQueue,
+                       ExecutionBackend, JaxBackend, ModeledBackend,
+                       StubBackend, StubBatchedBackend, available_backends,
+                       get_backend, register_backend)
 from .stacks import (Stack, available_stacks, get_stack, register_stack)
 from .fault import (StateStore, checkpoint_lbs, checkpoint_sgs, fail_worker,
                     restore_lbs, restore_sgs)
@@ -36,7 +37,8 @@ __all__ = [
     "ConsistentHashRing", "LBSConfig", "LoadBalancer", "CentralizedFIFO",
     "SparrowScheduler", "ClusterConfig", "build_cluster", "build_flat_workers",
     "Stack", "available_stacks", "get_stack", "register_stack",
-    "ExecutionBackend", "ModeledBackend", "StubBackend", "JaxBackend",
+    "ExecutionBackend", "ModeledBackend", "StubBackend", "StubBatchedBackend",
+    "JaxBackend", "BatchedJaxBackend", "BatchCoalescer", "CompletionQueue",
     "available_backends", "get_backend", "register_backend",
     "StateStore", "checkpoint_lbs", "checkpoint_sgs", "fail_worker",
     "restore_lbs", "restore_sgs",

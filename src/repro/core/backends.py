@@ -27,28 +27,46 @@ Built-ins:
   ``FunctionSpec``s are rewritten from ``exec_time``/``setup_time`` kwargs
   and the execute hook replays them, exercising the real-execution code path
   without real hardware work.
+* ``stub-batched`` — the stub seam run through the batching data plane
+  (``BatchCoalescer``): deterministic scripted per-batch times, exercising
+  window/bucket coalescing and completion ordering without hardware work.
 * ``jax`` — hardware-in-the-loop: calibrates every served model (real XLA
   compile = sandbox setup cost), rewrites the workload with *measured*
   ``FunctionSpec``s, and executes each invocation as a real jitted JAX call
   (``repro.serving.executor.JaxModelExecutor``).  See ``docs/SERVING.md``.
+* ``jax-batched`` — like ``jax`` but the data plane coalesces concurrently
+  in-flight invocations of the same served model into padded batches
+  (bucketed by powers of two, per-bucket executables compiled at
+  calibration time — ``repro.serving.executor.BatchingJaxExecutor``).
+
+The execution contract is *asynchronous*: schedulers dispatch through
+``submit(inv, done, delay)`` and the backend completes later by firing
+``done(exec_s)`` via ``env.call_after`` (see ``types.SubmitFn``).  Backends
+that only define the legacy synchronous ``execute`` hook are adapted
+automatically in :meth:`ExecutionBackend.bind`.
 """
 from __future__ import annotations
 
 import dataclasses
+import heapq
 from typing import (TYPE_CHECKING, Any, Callable, Dict, List, Mapping,
-                    Optional, Type, Union)
+                    Optional, Tuple, Type, Union)
 
-from .types import DagSpec, ExecuteFn, FunctionSpec
+from .types import (DagSpec, DoneFn, ExecuteFn, FunctionSpec, Invocation,
+                    SubmitFn)
 
 if TYPE_CHECKING:   # pragma: no cover - typing only, avoids a core->sim cycle
     from ..serving.executor import JaxModelExecutor, ServedModel
     from ..sim.experiment import Experiment
     from ..sim.workload import WorkloadSpec
+    from .sgs import Env
 
 __all__ = [
-    "ExecutionBackend", "ModeledBackend", "StubBackend", "JaxBackend",
+    "ExecutionBackend", "ModeledBackend", "StubBackend",
+    "StubBatchedBackend", "JaxBackend", "BatchedJaxBackend",
+    "CompletionQueue", "BatchCoalescer",
     "register_backend", "get_backend", "available_backends",
-    "resolve_backend", "respec_dag", "respec_workload",
+    "resolve_backend", "respec_dag", "respec_workload", "served_model_key",
 ]
 
 
@@ -56,23 +74,66 @@ class ExecutionBackend:
     """Base class for execution backends (subclass + ``@register_backend``).
 
     Lifecycle: ``simulate`` resolves the experiment's backend, calls
-    ``build(exp, spec)`` once before the stack is constructed, and hands the
-    backend to every stack's ``build`` — stacks thread ``self.execute`` into
-    their schedulers uniformly.
+    ``build(exp, spec)`` once before the stack is constructed, then
+    ``bind(env)`` with the live event loop, and hands the backend to every
+    stack's ``build`` — stacks thread ``self.submit`` into their schedulers
+    uniformly.
 
-    ``execute`` is the data-plane hook (``Invocation -> seconds of
-    execution``).  ``None`` means "modeled": schedulers charge
-    ``fn.exec_time`` directly with zero per-invocation indirection (the
-    simulator hot path, see docs/PERF.md).  ``build`` may also return a
-    re-specced workload (measured or scripted ``FunctionSpec``s) — the stack
-    and metrics layers only ever see the resolved spec.
+    ``submit`` is the asynchronous data-plane hook
+    (``submit(inv, done, delay)``, see ``types.SubmitFn``): the scheduler
+    dispatches and keeps running; the backend fires ``done(exec_s)`` at the
+    completion instant via ``env.call_after``.  ``None`` means "modeled":
+    schedulers charge ``fn.exec_time`` directly with zero per-invocation
+    indirection (the simulator hot path, see docs/PERF.md).
+
+    ``execute`` is the legacy *synchronous* hook (``Invocation -> seconds``).
+    Backends that only set it keep working: the default ``bind`` wraps it
+    into a ``submit`` that runs the hook at dispatch time, with the
+    completion event landing at the exact instant and insertion order the
+    pre-seam code produced (an unscripted ``stub`` therefore stays
+    decision-identical to ``modeled``).  Batched backends instead deliver
+    completions through :class:`CompletionQueue` — deterministic ordering,
+    ties broken by ``inv_id``.
+
+    ``build`` may also return a re-specced workload (measured or scripted
+    ``FunctionSpec``s) — the stack and metrics layers only ever see the
+    resolved spec.
     """
 
     name: str = "base"
     execute: Optional[ExecuteFn] = None
+    submit: Optional[SubmitFn] = None
 
     def build(self, exp: "Experiment", spec: "WorkloadSpec") -> "WorkloadSpec":
         return spec
+
+    def bind(self, env: "Env") -> None:
+        """Attach the live event loop for this run (called once per
+        ``simulate``, after ``build`` and before the stack is constructed).
+
+        The default adapts a legacy ``execute`` hook to the asynchronous
+        seam.  Backends with a native ``submit`` override this to (re)build
+        their per-run state — instances are reusable across sweep cells, so
+        anything holding an old env must be reconstructed here.
+        """
+        self.env = env
+        if self.execute is not None:
+            execute = self.execute
+            call_after = env.call_after
+
+            def submit(inv: Invocation, done: DoneFn, delay: float = 0.0
+                       ) -> None:
+                # legacy hook: runs synchronously at dispatch time; the
+                # completion event lands at exactly the instant, insertion
+                # point and order the pre-seam code produced, so an
+                # unscripted stub stays decision-identical to modeled
+                # (batched backends route completions through a
+                # CompletionQueue instead — inv_id-ordered, since batch
+                # flush timing has no modeled twin to mirror)
+                exec_s = execute(inv)
+                call_after(delay + exec_s, done, exec_s)
+
+            self.submit = submit
 
     def counters(self) -> Dict[str, int]:
         return {}
@@ -126,6 +187,139 @@ def resolve_backend(backend: Union[str, ExecutionBackend],
             "backend_kwargs only apply when `backend` is a name; "
             "configure the instance directly instead")
     return backend
+
+
+# ---------------------------------------------------------------------------
+# Asynchronous-seam plumbing: deterministic completions + batch coalescing
+# ---------------------------------------------------------------------------
+
+
+class CompletionQueue:
+    """Deterministically ordered completion delivery for a data plane.
+
+    ``schedule(inv, exec_s, done, delay)`` arranges for ``done(exec_s)`` to
+    fire at ``env.now() + delay + exec_s``.  Completions due at the same sim
+    instant fire in ``inv_id`` order regardless of scheduling order — the
+    event heap alone would use insertion order, which for a batched backend
+    depends on flush timing.  This is what keeps stub/batched runs exactly
+    reproducible.
+    """
+
+    def __init__(self, env: "Env"):
+        self.env = env
+        # (fire_time, inv_id, exec_s, done)
+        self._heap: List[Tuple[float, int, float, DoneFn]] = []
+
+    def schedule(self, inv: Invocation, exec_s: float, done: DoneFn,
+                 delay: float = 0.0) -> None:
+        lag = delay + exec_s
+        heapq.heappush(self._heap,
+                       (self.env.now() + lag, inv.inv_id, exec_s, done))
+        self.env.call_after(lag, self._fire)
+
+    def _fire(self) -> None:
+        # one flush event per schedule(); each drains everything due at its
+        # fire instant in (time, inv_id) order, so later flushes at the same
+        # timestamp find the heap already empty.  Entry times and event times
+        # come from the identical float expression (now + lag), so exact
+        # comparison is safe — no epsilon that could deliver a completion at
+        # an infinitesimally earlier instant.
+        now = self.env.now()
+        h = self._heap
+        while h and h[0][0] <= now:
+            _, _, exec_s, done = heapq.heappop(h)
+            done(exec_s)
+
+
+class BatchCoalescer:
+    """Per-function time/size-window batching on top of the async seam.
+
+    Invocations submitted for the same function while earlier ones are still
+    waiting are coalesced: the first submission opens a ``batch_window``
+    (sim seconds); the batch flushes when the window closes or as soon as
+    ``max_batch`` invocations have gathered.  ``run_batch(fn_name, invs)``
+    executes the whole batch ONCE and returns the shared runtime in seconds
+    — every member completes at ``flush_time + runtime`` (the batch moves at
+    the speed of the padded executable, not of its slowest member), with
+    completions delivered in ``inv_id`` order via :class:`CompletionQueue`.
+
+    A cold invocation (``delay`` = sandbox setup) enrolls only once its
+    setup has elapsed, so batches never start before their members could.
+    """
+
+    def __init__(self, env: "Env",
+                 run_batch: Callable[[str, List[Invocation]], float],
+                 batch_window: float = 0.005, max_batch: int = 8):
+        if max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        if batch_window < 0:
+            raise ValueError(
+                f"batch_window must be >= 0, got {batch_window}")
+        self.env = env
+        self.run_batch = run_batch
+        self.batch_window = batch_window
+        self.max_batch = max_batch
+        self._cq = CompletionQueue(env)
+        self._pending: Dict[str, List[Tuple[Invocation, DoneFn]]] = {}
+        # generation per function: a window-flush event is stale if an
+        # early (size-triggered) flush already took its batch
+        self._gen: Dict[str, int] = {}
+        # occupancy counters (surfaced through backend.counters())
+        self.n_batches = 0
+        self.n_batched_invocations = 0
+        self.n_batch_slots = 0          # sum of padded bucket sizes
+        self.max_occupancy = 0
+
+    def submit(self, inv: Invocation, done: DoneFn, delay: float = 0.0
+               ) -> None:
+        if delay > 0.0:
+            self.env.call_after(delay, self._enroll, inv, done)
+        else:
+            self._enroll(inv, done)
+
+    def _enroll(self, inv: Invocation, done: DoneFn) -> None:
+        q = self._pending.setdefault(inv.fn.name, [])
+        q.append((inv, done))
+        if len(q) >= self.max_batch:
+            self._flush(inv.fn.name, self._gen.get(inv.fn.name, 0))
+        elif len(q) == 1:
+            gen = self._gen.get(inv.fn.name, 0)
+            if self.batch_window > 0.0:
+                self.env.call_after(self.batch_window, self._flush,
+                                    inv.fn.name, gen)
+            else:
+                self._flush(inv.fn.name, gen)
+
+    def _flush(self, fn_name: str, gen: int) -> None:
+        if self._gen.get(fn_name, 0) != gen:
+            return                      # stale window: batch already ran
+        batch = self._pending.get(fn_name)
+        if not batch:
+            return
+        self._gen[fn_name] = gen + 1
+        self._pending[fn_name] = []
+        invs = [inv for inv, _ in batch]
+        runtime = self.run_batch(fn_name, invs)
+        k = len(batch)
+        self.n_batches += 1
+        self.n_batched_invocations += k
+        self.n_batch_slots += pow2_bucket(k)
+        if k > self.max_occupancy:
+            self.max_occupancy = k
+        for inv, done in sorted(batch, key=lambda p: p[0].inv_id):
+            self._cq.schedule(inv, runtime, done)
+
+    def counters(self) -> Dict[str, int]:
+        return {"n_batches": self.n_batches,
+                "n_batched_invocations": self.n_batched_invocations,
+                "n_batch_slots": self.n_batch_slots,
+                "max_batch_occupancy": self.max_occupancy}
+
+
+def pow2_bucket(k: int) -> int:
+    """Smallest power of two >= k (the padded batch size a batch of ``k``
+    executes at)."""
+    return 1 << (k - 1).bit_length() if k > 1 else 1
 
 
 # ---------------------------------------------------------------------------
@@ -236,6 +430,69 @@ class StubBackend(ExecutionBackend):
         return {"n_executions": self.n_executions}
 
 
+@register_backend("stub-batched")
+class StubBatchedBackend(StubBackend):
+    """Scripted times through the *batching* data plane (CI).
+
+    Same scripting knobs as ``stub`` (``exec_time``/``setup_time``), but the
+    submit hook is a native :class:`BatchCoalescer`: concurrently in-flight
+    invocations of the same function coalesce into one scripted "batch
+    execution" of ``exec_time + batch_cost * (bucket - 1)`` seconds (bucket
+    = padded power-of-two size; the default ``batch_cost=0`` models perfect
+    batching).  Deterministically exercises window/bucket coalescing, batch
+    occupancy counters, and inv_id-ordered completions without hardware.
+    """
+
+    def __init__(self,
+                 exec_time: Union[float, Mapping[str, float], None] = None,
+                 setup_time: Union[float, Mapping[str, float], None] = None,
+                 batch_window: float = 0.005, max_batch: int = 8,
+                 batch_cost: float = 0.0):
+        super().__init__(exec_time, setup_time)
+        self.batch_window = batch_window
+        self.max_batch = max_batch
+        self.batch_cost = batch_cost
+        self._coalescer: Optional[BatchCoalescer] = None
+
+    def build(self, exp: "Experiment", spec: "WorkloadSpec") -> "WorkloadSpec":
+        spec = super().build(exp, spec)
+        self.execute = None     # native async submit: skip the legacy adapter
+        return spec
+
+    def bind(self, env: "Env") -> None:
+        self.env = env
+
+        def run_batch(fn_name: str, invs: List[Invocation]) -> float:
+            self.n_executions += 1
+            bucket = pow2_bucket(len(invs))
+            return invs[0].fn.exec_time + self.batch_cost * (bucket - 1)
+
+        self._coalescer = BatchCoalescer(env, run_batch,
+                                         batch_window=self.batch_window,
+                                         max_batch=self.max_batch)
+        self.submit = self._coalescer.submit
+
+    def counters(self) -> Dict[str, int]:
+        c = dict(super().counters())
+        if self._coalescer is not None:
+            c.update(self._coalescer.counters())
+        return c
+
+
+def served_model_key(served: Mapping[str, "ServedModel"]) -> tuple:
+    """Content-based calibration-cache key for a served-model set.
+
+    Keys on what determines the compiled executables and their measured
+    times (config identity + shapes + batch), NOT on ``id(m)``: object ids
+    can be reused after a ``ServedModel`` is garbage-collected, which would
+    false-hit the cache and serve stale calibration for a different model.
+    """
+    return tuple(sorted(
+        (name, m.cfg.name, m.cfg.arch_type, m.cfg.n_layers, m.cfg.d_model,
+         m.prompt_len, m.gen_len, m.batch)
+        for name, m in served.items()))
+
+
 @register_backend("jax")
 class JaxBackend(ExecutionBackend):
     """Hardware-in-the-loop: real jitted JAX execution under the schedulers.
@@ -261,25 +518,80 @@ class JaxBackend(ExecutionBackend):
         self.fn_specs: Optional[Dict[str, FunctionSpec]] = None
         self._calibrated_key: Optional[tuple] = None
 
-    def build(self, exp: "Experiment", spec: "WorkloadSpec") -> "WorkloadSpec":
+    def _resolve_served(self, spec: "WorkloadSpec"
+                        ) -> Mapping[str, "ServedModel"]:
         served = self.served if self.served is not None \
             else getattr(spec, "served", None)
         if not served:
             raise ValueError(
-                'backend="jax" needs served models: use a serving workload '
-                '(repro.serving.engine.serving_workload) or pass '
+                f'backend="{self.name}" needs served models: use a serving '
+                'workload (repro.serving.engine.serving_workload) or pass '
                 'backend_kwargs=dict(served={fn_name: ServedModel})')
-        key = tuple(sorted((name, id(m)) for name, m in served.items()))
+        return served
+
+    def _make_executor(self, served: Mapping[str, "ServedModel"]):
+        from ..serving.executor import JaxModelExecutor  # lazy: needs jax
+        return JaxModelExecutor(dict(served))
+
+    def build(self, exp: "Experiment", spec: "WorkloadSpec") -> "WorkloadSpec":
+        served = self._resolve_served(spec)
+        key = served_model_key(served)
         if self.executor is None or self._calibrated_key != key:
-            from ..serving.executor import JaxModelExecutor  # lazy: needs jax
-            self.executor = JaxModelExecutor(dict(served))
+            self.executor = self._make_executor(served)
             self.fn_specs = self.executor.calibrate(mem_mb=self.mem_mb,
                                                     runs=self.calib_runs)
             self._calibrated_key = key
-        self.execute = self.executor.execute
+        # the batching executor has no per-invocation hook; its subclass
+        # installs a native async submit in bind() instead
+        self.execute = getattr(self.executor, "execute", None)
         return respec_workload(spec, self.fn_specs,
                                getattr(spec, "slacks", None))
 
     def counters(self) -> Dict[str, int]:
         n = self.executor.n_executions if self.executor is not None else 0
         return {"n_executions": n}
+
+
+@register_backend("jax-batched")
+class BatchedJaxBackend(JaxBackend):
+    """Hardware-in-the-loop with a *batched* data plane.
+
+    Like ``jax``, but concurrently in-flight invocations of the same
+    ``ServedModel`` coalesce (``BatchCoalescer``: ``batch_window`` sim
+    seconds / ``max_batch`` size) into ONE padded batched execution —
+    bucketed by powers of two, with per-bucket executables compiled at
+    calibration time (``BatchingJaxExecutor``), so sweeps pay each compile
+    once.  Every member of a batch completes after the batch's measured
+    wall time: the hardware amortizes weight reads over the whole batch,
+    which is the single biggest real-throughput lever on CPU/TPU serving.
+
+    ``batch_window`` and ``max_batch`` are ordinary sweepable
+    ``backend_kwargs``.  Calibration is cached on the content key
+    (``served_model_key``); pass one instance across sweep cells to compile
+    once.
+    """
+
+    def __init__(self, served: Optional[Mapping[str, "ServedModel"]] = None,
+                 mem_mb: float = 512.0, calib_runs: int = 3,
+                 batch_window: float = 0.005, max_batch: int = 8):
+        super().__init__(served, mem_mb=mem_mb, calib_runs=calib_runs)
+        self.batch_window = batch_window
+        self.max_batch = max_batch
+        self._coalescer: Optional[BatchCoalescer] = None
+
+    def _make_executor(self, served: Mapping[str, "ServedModel"]):
+        from ..serving.executor import BatchingJaxExecutor  # lazy: needs jax
+        return BatchingJaxExecutor(dict(served), max_batch=self.max_batch)
+
+    def bind(self, env: "Env") -> None:
+        self.env = env
+        self._coalescer = BatchCoalescer(env, self.executor.run_batch,
+                                         batch_window=self.batch_window,
+                                         max_batch=self.max_batch)
+        self.submit = self._coalescer.submit
+
+    def counters(self) -> Dict[str, int]:
+        c = dict(super().counters())
+        if self._coalescer is not None:
+            c.update(self._coalescer.counters())
+        return c

@@ -16,7 +16,7 @@ from typing import Deque, Dict, List, Optional, Tuple
 from .sandbox import Worker
 from .sgs import Env
 from .types import (DagSpec, ExecuteFn, Invocation, Request, Sandbox,
-                    SandboxState)
+                    SandboxState, SubmitFn)
 
 
 class CentralizedFIFO:
@@ -24,11 +24,15 @@ class CentralizedFIFO:
 
     def __init__(self, workers: List[Worker], env: Env,
                  keepalive: float = 900.0,
-                 execute: Optional[ExecuteFn] = None):
+                 execute: Optional[ExecuteFn] = None,
+                 backend_submit: Optional[SubmitFn] = None):
         self.workers = workers
         self.env = env
         self.keepalive = keepalive
-        self.execute = execute      # execution-backend hook (core.backends)
+        # async execution seam (core.backends); falls back to the legacy
+        # synchronous `execute` hook, then to modeled timing
+        self.backend_submit = backend_submit
+        self.execute = execute
         self._queue: Deque[Invocation] = deque()
         self._completed_fns: Dict[int, set] = {}
         self.n_cold_starts = 0
@@ -93,6 +97,13 @@ class CentralizedFIFO:
             self.n_warm_hits += 1
             sbx.state = SandboxState.BUSY
             sbx.last_used = now
+        if self.backend_submit is not None:
+            # async seam: dispatch returns immediately; the backend fires
+            # the completion callback (possibly after batching)
+            def done(exec_s: float, inv=inv, w=w, sbx=sbx) -> None:
+                self._complete(inv, w, sbx)
+            self.backend_submit(inv, done, setup)
+            return
         exec_s = inv.fn.exec_time if self.execute is None \
             else self.execute(inv)
         self.env.call_after(setup + exec_s, self._complete, inv, w, sbx)
@@ -142,12 +153,16 @@ class SparrowScheduler:
 
     def __init__(self, workers: List[Worker], env: Env, probes: int = 2,
                  seed: int = 0, keepalive: float = 900.0,
-                 execute: Optional[ExecuteFn] = None):
+                 execute: Optional[ExecuteFn] = None,
+                 backend_submit: Optional[SubmitFn] = None):
         self.workers = workers
         self.env = env
         self.probes = probes
         self.keepalive = keepalive
-        self.execute = execute      # execution-backend hook (core.backends)
+        # async execution seam (core.backends); `execute` is the legacy
+        # synchronous hook
+        self.backend_submit = backend_submit
+        self.execute = execute
         self._rng = random.Random(seed)
         self._wqueues: Dict[int, Deque[Invocation]] = {
             w.worker_id: deque() for w in workers}
@@ -198,6 +213,11 @@ class SparrowScheduler:
             else:
                 self.n_warm_hits += 1
                 sbx.state = SandboxState.BUSY
+            if self.backend_submit is not None:
+                def done(exec_s: float, inv=inv, w=w, sbx=sbx) -> None:
+                    self._complete(inv, w, sbx)
+                self.backend_submit(inv, done, setup)
+                continue
             exec_s = inv.fn.exec_time if self.execute is None \
                 else self.execute(inv)
             self.env.call_after(setup + exec_s, self._complete, inv, w, sbx)

@@ -10,7 +10,7 @@ from typing import List, Optional
 from .lbs import LBSConfig, LoadBalancer
 from .sandbox import Worker
 from .sgs import Env, SGSConfig, SemiGlobalScheduler
-from .types import ExecuteFn
+from .types import ExecuteFn, SubmitFn
 
 
 @dataclass
@@ -25,12 +25,14 @@ class ClusterConfig:
 def build_cluster(env: Env, cluster: Optional[ClusterConfig] = None,
                   sgs_cfg: Optional[SGSConfig] = None,
                   lbs_cfg: Optional[LBSConfig] = None,
-                  execute: Optional[ExecuteFn] = None) -> LoadBalancer:
+                  execute: Optional[ExecuteFn] = None,
+                  backend_submit: Optional[SubmitFn] = None) -> LoadBalancer:
     """Construct the full Archipelago stack: workers -> SGSs -> LBS.
 
-    ``execute`` is the execution backend's data-plane hook
-    (``core.backends``), threaded uniformly into every SGS; ``None`` keeps
-    the modeled fast path (invocations charge ``fn.exec_time``)."""
+    ``backend_submit`` is the execution backend's asynchronous data-plane
+    hook (``core.backends``), threaded uniformly into every SGS;
+    ``execute`` is the legacy synchronous hook.  Both ``None`` keeps the
+    modeled fast path (invocations charge ``fn.exec_time``)."""
     cc = cluster or ClusterConfig()
     sgss: List[SemiGlobalScheduler] = []
     wid = 0
@@ -41,7 +43,8 @@ def build_cluster(env: Env, cluster: Optional[ClusterConfig] = None,
                                pool_mem_mb=cc.pool_mem_mb))
             wid += 1
         sgss.append(SemiGlobalScheduler(sgs_id=sid, workers=pool, env=env,
-                                        config=sgs_cfg, execute=execute))
+                                        config=sgs_cfg, execute=execute,
+                                        backend_submit=backend_submit))
     return LoadBalancer(sgss, config=lbs_cfg)
 
 

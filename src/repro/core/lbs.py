@@ -26,6 +26,11 @@ class ConsistentHashRing:
     """Classic Karger ring [31] with virtual nodes."""
 
     def __init__(self, ids: List[int], vnodes: int = 50):
+        if not ids:
+            # lookup() would otherwise die later with a bare
+            # ZeroDivisionError from `% len(self._points)`
+            raise ValueError(
+                "ConsistentHashRing needs at least one SGS id")
         self._points: List[int] = []
         self._owner: Dict[int, int] = {}
         for sid in ids:

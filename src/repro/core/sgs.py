@@ -14,7 +14,7 @@ from typing import Callable, Dict, List, Optional, Protocol, Set, Tuple
 from .estimator import DemandEstimator
 from .sandbox import SandboxManager, Worker
 from .types import (DagSpec, ExecuteFn, FunctionSpec, Invocation, Request,
-                    Sandbox, SandboxState)
+                    Sandbox, SandboxState, SubmitFn)
 
 
 class Env(Protocol):
@@ -59,13 +59,20 @@ class SemiGlobalScheduler:
     def __init__(self, sgs_id: int, workers: List[Worker], env: Env,
                  config: Optional[SGSConfig] = None,
                  execute: Optional[ExecuteFn] = None,
-                 report: Optional[ReportFn] = None):
+                 report: Optional[ReportFn] = None,
+                 backend_submit: Optional[SubmitFn] = None):
         self.sgs_id = sgs_id
         self.workers = workers
         self.env = env
         self.cfg = config or SGSConfig()
-        self.execute = execute      # execution-backend hook (core.backends);
-                                    # None = modeled timing (fn.exec_time)
+        # asynchronous execution seam (core.backends): dispatch hands the
+        # invocation to the data plane and returns; the backend fires the
+        # completion callback later, so the control plane (queue pops,
+        # proactive allocation, scaling ticks) never blocks on execution
+        self.backend_submit = backend_submit
+        self.execute = execute      # legacy synchronous hook (blocks dispatch
+                                    # for the execution call); None = modeled
+                                    # timing (fn.exec_time)
         self.report = report                # piggyback channel to the LBS
 
         self.estimator = DemandEstimator(sla=self.cfg.sla,
@@ -281,15 +288,28 @@ class SemiGlobalScheduler:
                         self.proactive_sandbox_count(inv.request.dag.dag_id))
 
         self._inflight.setdefault(w.worker_id, []).append(inv)
-        if self.execute is not None:
-            # backend execution (stub/jax): the hook returns the invocation's
-            # actual runtime — measured wall seconds for real JAX calls
+        if self.backend_submit is not None:
+            # asynchronous seam: hand the invocation to the data plane and
+            # keep scheduling — the backend (possibly batching it with other
+            # in-flight invocations) fires `done` at the completion instant
+            self.backend_submit(inv, self._make_done(inv, w, sbx), setup)
+        elif self.execute is not None:
+            # legacy synchronous hook: runs the execution call inside the
+            # dispatch path and blocks on it (kept for direct constructions)
             runtime = setup + self.execute(inv)
             self.env.call_after(runtime, self._complete, inv, w, sbx)
         else:
             self.env.call_after(setup + inv.fn.exec_time,
                                 self._complete, inv, w, sbx)
         return True
+
+    def _make_done(self, inv: Invocation, w: Worker, sbx: Sandbox
+                   ) -> Callable[[float], None]:
+        """Completion callback for the async seam: fired by the backend at
+        the invocation's completion instant with its actual runtime."""
+        def done(exec_s: float) -> None:
+            self._complete(inv, w, sbx)
+        return done
 
     def _complete(self, inv: Invocation, w: Worker, sbx: Sandbox) -> None:
         now = self.env.now()

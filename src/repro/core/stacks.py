@@ -69,7 +69,8 @@ class Stack(Protocol):
     """What ``simulate``'s generic pump loop needs from a scheduler stack.
 
     Lifecycle: ``build`` once (against the resolved execution backend —
-    stacks thread ``backend.execute`` into their schedulers so *what runs an
+    stacks thread the backend's asynchronous ``submit`` seam (falling back
+    to the legacy ``execute`` hook) into their schedulers so *what runs an
     invocation* is orthogonal to *where it runs*, see ``core.backends``),
     ``submit`` per arrival (called inside the pump at the request's arrival
     instant), ``start_background`` once after the first arrival is scheduled
@@ -149,7 +150,8 @@ class ArchipelagoStack:
         self.exp = exp
         self.spec = spec
         self.lbs = build_cluster(env, exp.cluster, exp.sgs, exp.lbs,
-                                 execute=backend.execute)
+                                 execute=backend.execute,
+                                 backend_submit=backend.submit)
         n_lb = max(1, int(exp.params.get("n_lbs", 4)))
         self._n_lb = n_lb
         self._lb_clocks = [_ServiceClock() for _ in range(n_lb)]
@@ -215,9 +217,9 @@ class FlatWorkerStack:
     ``exp.sgs_cost`` per DAG function (§2.4's centralized bottleneck).
 
     The execution backend's hook is wired onto the scheduler after
-    construction (every built-in scheduler exposes an ``execute``
-    attribute), so ``make_scheduler`` keeps its 3-argument signature and
-    custom stacks run under any backend for free."""
+    construction (every built-in scheduler exposes ``backend_submit`` /
+    ``execute`` attributes), so ``make_scheduler`` keeps its 3-argument
+    signature and custom stacks run under any backend for free."""
 
     lbs: Optional[LoadBalancer] = None
 
@@ -228,7 +230,11 @@ class FlatWorkerStack:
         self.spec = spec
         self.scheduler = self.make_scheduler(
             build_flat_workers(exp.cluster), env, exp)
-        if backend.execute is not None:
+        if backend.submit is not None:
+            # asynchronous execution seam (core.backends.SubmitFn)
+            self.scheduler.backend_submit = backend.submit
+        elif backend.execute is not None:
+            # pre-seam custom backends that were built without bind()
             self.scheduler.execute = backend.execute
         self._clock = _ServiceClock()
         if type(self).submit is FlatWorkerStack.submit:

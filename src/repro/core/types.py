@@ -265,4 +265,26 @@ class Sandbox:
 # Callback the scheduler uses to run a function.  Returns actual runtime (s).
 # Simulated executors return fn.exec_time (+ jitter); the real executor runs a
 # jitted JAX call and returns measured wall time.
+#
+# This is the *legacy synchronous* data-plane hook: the scheduler blocks on
+# it inside its dispatch path, so a real backend can only run one invocation
+# at a time.  New backends implement the asynchronous ``SubmitFn`` seam
+# below; ``ExecuteFn`` hooks are adapted automatically
+# (``core.backends.ExecutionBackend.bind``).
 ExecuteFn = Callable[[Invocation], float]
+
+# Completion callback, provided by the scheduler per dispatched invocation.
+# The backend invokes ``done(exec_seconds)`` *at the sim instant the
+# invocation finishes* (i.e. via ``env.call_after``, never synchronously from
+# inside ``submit``); ``exec_seconds`` is the execution time that was charged
+# (measured wall seconds for real backends).
+DoneFn = Callable[[float], None]
+
+# Asynchronous execution seam: ``submit(inv, done, delay)`` hands an
+# invocation to the data plane and returns immediately — the scheduler's
+# control loop (queue pops, proactive allocation, scaling ticks) keeps
+# running while the backend executes, possibly coalescing concurrently
+# in-flight invocations into batches.  ``delay`` is scheduler-side time that
+# must elapse before execution can begin (cold-start sandbox setup): the
+# backend fires ``done(exec_s)`` at ``now + delay + exec_s``.
+SubmitFn = Callable[[Invocation, DoneFn, float], None]

@@ -26,7 +26,13 @@ def main() -> None:
     ap.add_argument("--slack", type=float, default=0.5)
     ap.add_argument("--n-sgs", type=int, default=2)
     ap.add_argument("--backend", default="jax",
-                    choices=["jax", "stub", "modeled"])
+                    choices=["jax", "jax-batched", "stub", "stub-batched",
+                             "modeled"])
+    ap.add_argument("--batch-window", type=float, default=0.005,
+                    help="batched backends: coalescing window (sim seconds)")
+    ap.add_argument("--max-batch", type=int, default=8,
+                    help="batched backends: flush when this many invocations "
+                         "of one model have gathered")
     ap.add_argument("--stack", default="archipelago")
     ap.add_argument("--warmup", type=float, default=None,
                     help="steady-state window start (exclude the pre-warm "
@@ -36,8 +42,13 @@ def main() -> None:
     args = ap.parse_args()
     duration = args.requests / args.rps
     warmup = args.warmup
+    real_jax = args.backend in ("jax", "jax-batched")
     if warmup is None:
-        warmup = duration / 2.0 if args.backend == "jax" else 0.0
+        warmup = duration / 2.0 if real_jax else 0.0
+    backend_kwargs = {}
+    if args.backend.endswith("-batched"):
+        backend_kwargs = dict(batch_window=args.batch_window,
+                              max_batch=args.max_batch)
 
     app = ServingApp(
         dag_id=args.arch,
@@ -48,14 +59,17 @@ def main() -> None:
     exp = Experiment(
         stack=args.stack,
         backend=args.backend,
+        backend_kwargs=backend_kwargs,
         workload_factory="serving_apps",
         workload_kwargs=dict(apps=[app], duration=duration,
                              rps=args.rps, prewarm_per_fn=4),
         cluster=ClusterConfig(n_sgs=args.n_sgs, workers_per_sgs=2,
                               cores_per_worker=2),
         warmup=warmup, drain=10.0)
-    if args.backend == "jax":
-        print(f"[serve] calibrating {args.arch} (real XLA compile)...")
+    if real_jax:
+        n_compiles = "one executable per batch bucket" \
+            if args.backend == "jax-batched" else "real XLA compile"
+        print(f"[serve] calibrating {args.arch} ({n_compiles})...")
     r = simulate(exp)
     backend = r.sim.backend
     for name, spec in (getattr(backend, "fn_specs", None) or {}).items():
@@ -70,6 +84,14 @@ def main() -> None:
           f"cold_starts={r.cold_start_count}")
     print(f"  executions: {backend.counters().get('n_executions', 0)} "
           f"({r.backend} backend)")
+    bc = r.backend_counters
+    if bc.get("n_batches"):
+        print(f"  batches: {bc['n_batches']} "
+              f"(mean occupancy "
+              f"{bc['n_batched_invocations'] / bc['n_batches']:.2f}, "
+              f"max {bc['max_batch_occupancy']}, "
+              f"padding efficiency "
+              f"{bc['n_batched_invocations'] / bc['n_batch_slots']:.2f})")
 
 
 if __name__ == "__main__":

@@ -4,10 +4,11 @@ Serving runs route through the experiment API: register apps as a workload
 (``serving_workload`` / ``workload_factory="serving_apps"``) and
 ``simulate`` with ``backend="jax"`` — see ``docs/SERVING.md``.
 """
-from .executor import JaxModelExecutor, ModelInstance, ServedModel
+from .executor import (BatchingJaxExecutor, JaxModelExecutor, ModelInstance,
+                       ServedModel)
 from .engine import ServingApp, ServingWorkloadSpec, serving_workload
 from .apps import multitenant_apps, smoke_apps
 
-__all__ = ["JaxModelExecutor", "ModelInstance", "ServedModel", "ServingApp",
-           "ServingWorkloadSpec", "serving_workload", "multitenant_apps",
-           "smoke_apps"]
+__all__ = ["BatchingJaxExecutor", "JaxModelExecutor", "ModelInstance",
+           "ServedModel", "ServingApp", "ServingWorkloadSpec",
+           "serving_workload", "multitenant_apps", "smoke_apps"]

@@ -22,8 +22,11 @@ wall time is measured and fed back* — queuing, placement, proactive
 allocation and scaling all operate on real numbers.  (A fully wall-clock-
 threaded server adds nothing for a single-host CPU container; the event
 engine gives deterministic, auditable schedules while the data plane stays
-real.)  The same workload runs under ``backend="stub"`` (scripted times,
-CI) or ``"modeled"`` (placeholder times) unchanged.
+real.)  The same workload runs under ``backend="jax-batched"`` (the
+batching data plane: concurrently in-flight invocations of one model
+coalesce into padded batched executions — ``batch_window``/``max_batch``
+are sweepable ``backend_kwargs``), ``"stub"``/``"stub-batched"`` (scripted
+times, CI) or ``"modeled"`` (placeholder times) unchanged.
 
 The spec's ``pre_pump`` hook reproduces the paper's "initial DAG upload"
 (§3): before traffic, each app's initial SGS proactively allocates

@@ -117,6 +117,10 @@ class SimResult:
     # the built execution backend (executor handles, counters) — None only
     # for legacy constructions
     backend: Optional[ExecutionBackend] = None
+    # this run's data-plane counter deltas (n_executions, batch occupancy,
+    # ...): backend.counters() accumulates across sweep cells when one
+    # instance is shared, so the per-run view is a before/after difference
+    backend_counters: Dict[str, int] = field(default_factory=dict)
 
 
 @dataclass
@@ -252,6 +256,11 @@ class ExperimentResult:
     n_events: int
     wall_s: float
     backend: str = "modeled"       # execution backend the run used
+    # per-run data-plane counters (this cell only, even when a backend
+    # instance is shared across sweep cells): n_executions for stub/jax;
+    # batched backends add n_batches / n_batched_invocations / n_batch_slots
+    # / max_batch_occupancy (see docs/SERVING.md "Batched serving")
+    backend_counters: Dict[str, int] = field(default_factory=dict)
     sim: Optional[SimResult] = field(default=None, repr=False, compare=False)
 
     def to_dict(self) -> Dict[str, Any]:
@@ -259,6 +268,7 @@ class ExperimentResult:
              for f in dataclasses.fields(self) if f.name != "sim"}
         d["latency_percentiles"] = dict(self.latency_percentiles)
         d["queuing_percentiles"] = dict(self.queuing_percentiles)
+        d["backend_counters"] = dict(self.backend_counters)
         d["per_class"] = {k: v.to_dict()
                           for k, v in sorted(self.per_class.items())}
         return d
@@ -304,6 +314,7 @@ def _build_result(exp: Experiment, spec: WorkloadSpec, sim: SimResult,
         n_events=sim.env.n_events,
         wall_s=round(wall_s, 4),
         backend=exp.backend_name(),
+        backend_counters=dict(sim.backend_counters),
         sim=sim)
 
 
@@ -356,21 +367,27 @@ def _run_experiment(exp: Experiment,
     shims return the raw ``SimResult`` and skip the summary entirely).
 
     Order of construction: workload resolves first, then the execution
-    backend re-specs it (calibration / scripted times), then the stack
-    builds against the resolved backend.  A spec-provided ``pre_pump`` hook
-    (serving prewarm — the §3 "initial DAG upload") runs after the stack is
-    built but before any arrival fires.
+    backend re-specs it (calibration / scripted times), then ``bind`` hands
+    the backend the live event loop (building its asynchronous ``submit``
+    seam — legacy ``execute``-only backends are adapted here), then the
+    stack builds against the resolved backend.  A spec-provided ``pre_pump``
+    hook (serving prewarm — the §3 "initial DAG upload") runs after the
+    stack is built but before any arrival fires.
     """
     spec = exp.resolve_workload()
     backend = resolve_backend(exp.backend, exp.backend_kwargs)
     spec = backend.build(exp, spec)
     env = SimEnv()
+    backend.bind(env)
     stack: Stack = get_stack(exp.stack)()
     stack.build(env, exp, spec, backend)
     pre_pump = getattr(spec, "pre_pump", None)
     if pre_pump is not None:
         pre_pump(env, stack)
     metrics = Metrics()
+    # snapshot data-plane counters so the reported view is this run's delta
+    # (a shared backend instance accumulates across sweep cells)
+    counters_before = dict(backend.counters())
 
     t0 = time.perf_counter()
     times, dags = _arrival_stream(spec, exp.seed, exp.workload_method)
@@ -402,10 +419,12 @@ def _run_experiment(exp: Experiment,
     stack.collect(metrics)
     wall = time.perf_counter() - t0
 
+    counters = {k: v - counters_before.get(k, 0)
+                for k, v in backend.counters().items()}
     sim = SimResult(metrics=metrics, env=env,
                     lbs=getattr(stack, "lbs", None),
                     scheduler=getattr(stack, "scheduler", None),
-                    backend=backend)
+                    backend=backend, backend_counters=counters)
     return spec, sim, stack, wall
 
 

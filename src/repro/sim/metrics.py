@@ -3,7 +3,7 @@ cold starts."""
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 from ..core.types import Request
 
@@ -12,7 +12,13 @@ def percentile(xs: Sequence[float], p: float) -> float:
     """Nearest-rank percentile; p in [0,100]."""
     if not xs:
         return float("nan")
-    s = sorted(xs)
+    return _pct_sorted(sorted(xs), p)
+
+
+def _pct_sorted(s: Sequence[float], p: float) -> float:
+    """Nearest-rank percentile over an already-sorted sequence."""
+    if not s:
+        return float("nan")
     k = max(0, min(len(s) - 1, int(round(p / 100.0 * (len(s) - 1)))))
     return s[k]
 
@@ -24,10 +30,27 @@ class Metrics:
     # per-sample dispatch timestamps, parallel to ``queuing_delays`` — lets
     # steady-state views filter delay samples and requests consistently
     queuing_delay_times: List[float] = field(default_factory=list)
+    # sorted-latency cache: ``summarize``/``latency_pct`` take several
+    # percentiles per report and each used to re-sort the full latency list.
+    # Keyed on (n_requests, n_completed): requests are append-only and a
+    # completion_time is written exactly once, so any change to the latency
+    # set moves one of the two counts.  compare=False keeps dataclass
+    # equality on the data fields only.
+    _lat_cache: Optional[Tuple[Tuple[int, int], List[float]]] = field(
+        default=None, repr=False, compare=False)
 
     @property
     def completed(self) -> List[Request]:
         return [r for r in self.requests if r.completion_time is not None]
+
+    def sorted_latencies(self) -> List[float]:
+        """E2E latencies of completed requests, ascending — one sort per
+        (requests, completions) state, cached across percentile calls."""
+        done = self.completed
+        key = (len(self.requests), len(done))
+        if self._lat_cache is None or self._lat_cache[0] != key:
+            self._lat_cache = (key, sorted(r.e2e_latency for r in done))
+        return self._lat_cache[1]
 
     def after_warmup(self, warmup: float) -> "Metrics":
         """Steady-state view: only requests arriving after ``warmup`` count
@@ -52,7 +75,7 @@ class Metrics:
         return [r.e2e_latency for r in self.completed]
 
     def latency_pct(self, p: float) -> float:
-        return percentile(self.latencies(), p)
+        return _pct_sorted(self.sorted_latencies(), p)
 
     def deadline_met_frac(self) -> float:
         done = self.completed
@@ -87,12 +110,12 @@ class Metrics:
 
 
 def summarize(name: str, m: Metrics) -> str:
-    lat = m.latencies()
+    lat = m.sorted_latencies()          # one sort feeds all three ranks
     if not lat:
         return f"{name}: no completed requests"
     return (f"{name}: n={len(m.requests)} done={len(lat)} "
-            f"p50={percentile(lat,50)*1e3:.1f}ms "
-            f"p99={percentile(lat,99)*1e3:.1f}ms "
-            f"p99.9={percentile(lat,99.9)*1e3:.1f}ms "
+            f"p50={_pct_sorted(lat,50)*1e3:.1f}ms "
+            f"p99={_pct_sorted(lat,99)*1e3:.1f}ms "
+            f"p99.9={_pct_sorted(lat,99.9)*1e3:.1f}ms "
             f"deadlines_met={m.deadline_met_frac()*100:.2f}% "
             f"cold_starts={m.cold_start_count()}")

@@ -1,0 +1,242 @@
+"""The asynchronous execution seam (PR 4): submit/done contract, the
+deterministic CompletionQueue, BatchCoalescer window/bucket semantics, the
+stub-batched backend under every stack, batch-occupancy counters in
+ExperimentResult, and the modeled fast path staying untouched."""
+import json
+
+import pytest
+
+from repro.core import (BatchCoalescer, ClusterConfig, CompletionQueue,
+                        ConsistentHashRing, ExecutionBackend,
+                        StubBatchedBackend, available_stacks,
+                        register_backend)
+from repro.core.backends import pow2_bucket, served_model_key
+from repro.core.types import DagSpec, FunctionSpec, Invocation, Request
+from repro.sim import Experiment, ExperimentResult, simulate
+from repro.sim.engine import SimEnv
+
+SMALL = ClusterConfig(n_sgs=2, workers_per_sgs=2, cores_per_worker=4,
+                      pool_mem_mb=2048.0)
+
+
+def _tiny_exp(**kw):
+    base = dict(workload_factory="paper_workload_1",
+                workload_kwargs=dict(duration=3.0, scale=0.02,
+                                     dags_per_class=1),
+                cluster=SMALL, warmup=1.0, drain=3.0)
+    base.update(kw)
+    return Experiment(**base)
+
+
+def _inv(fn_name="f", exec_time=0.1):
+    dag = DagSpec("d", (FunctionSpec(fn_name, exec_time),), ())
+    req = Request(dag=dag, arrival_time=0.0)
+    return Invocation(request=req, fn=dag.fn(fn_name), ready_time=0.0)
+
+
+def _cmp_dict(res):
+    d = res.to_dict()
+    d.pop("wall_s")
+    return d
+
+
+# -- CompletionQueue ----------------------------------------------------------
+
+
+def test_completion_queue_ties_fire_in_inv_id_order():
+    env = SimEnv()
+    fired = []
+    cq = CompletionQueue(env)
+    hi, lo = _inv(), _inv()
+    assert hi.inv_id < lo.inv_id
+    # scheduled in REVERSE inv_id order, both due at t=0.5
+    cq.schedule(lo, 0.5, lambda s: fired.append(("lo", s)))
+    cq.schedule(hi, 0.5, lambda s: fired.append(("hi", s)))
+    env.run()
+    assert fired == [("hi", 0.5), ("lo", 0.5)]
+
+
+def test_completion_queue_delay_offsets_fire_time():
+    env = SimEnv()
+    fired = []
+    cq = CompletionQueue(env)
+    cq.schedule(_inv(), 0.2, lambda s: fired.append((env.now(), s)),
+                delay=0.3)
+    env.run()
+    assert fired == [(0.5, 0.2)]       # done(exec_s) at now + delay + exec_s
+
+
+# -- BatchCoalescer -----------------------------------------------------------
+
+
+def _coalescer(env, runtimes, **kw):
+    batches = []
+
+    def run_batch(fn_name, invs):
+        batches.append((fn_name, [i.inv_id for i in invs]))
+        return runtimes
+
+    return BatchCoalescer(env, run_batch, **kw), batches
+
+
+def test_coalescer_window_flush_batches_concurrent_submits():
+    env = SimEnv()
+    co, batches = _coalescer(env, 0.1, batch_window=0.01, max_batch=8)
+    done = []
+    invs = [_inv() for _ in range(3)]
+    for inv in invs:
+        co.submit(inv, lambda s, i=inv: done.append((env.now(), i.inv_id)))
+    env.run()
+    assert len(batches) == 1                   # one padded batch of 3
+    assert batches[0][1] == [i.inv_id for i in invs]
+    # all complete at window + shared runtime, in inv_id order
+    assert done == [(pytest.approx(0.11), i.inv_id) for i in invs]
+    assert co.counters() == {"n_batches": 1, "n_batched_invocations": 3,
+                             "n_batch_slots": 4, "max_batch_occupancy": 3}
+
+
+def test_coalescer_size_flush_preempts_window():
+    env = SimEnv()
+    co, batches = _coalescer(env, 0.1, batch_window=10.0, max_batch=2)
+    done = []
+    for _ in range(5):
+        co.submit(_inv(), lambda s: done.append(env.now()))
+    env.run()
+    # 2+2 flush immediately at max_batch; the trailing 1 waits the window
+    assert [len(ids) for _, ids in batches] == [2, 2, 1]
+    assert done[:4] == [pytest.approx(0.1)] * 4
+    assert done[4] == pytest.approx(10.1)
+    c = co.counters()
+    assert c["n_batches"] == 3 and c["n_batched_invocations"] == 5
+    assert c["max_batch_occupancy"] == 2
+
+
+def test_coalescer_separates_functions_and_defers_cold_setup():
+    env = SimEnv()
+    co, batches = _coalescer(env, 0.1, batch_window=0.01, max_batch=8)
+    a, b = _inv("a"), _inv("b")
+    cold = _inv("a")
+    co.submit(a, lambda s: None)
+    co.submit(b, lambda s: None)
+    co.submit(cold, lambda s: None, 0.5)       # setup: enrolls at t=0.5
+    env.run()
+    assert batches == [("a", [a.inv_id]), ("b", [b.inv_id]),
+                       ("a", [cold.inv_id])]
+
+
+def test_coalescer_validates_knobs():
+    env = SimEnv()
+    with pytest.raises(ValueError, match="max_batch"):
+        BatchCoalescer(env, lambda n, i: 0.1, max_batch=0)
+    with pytest.raises(ValueError, match="batch_window"):
+        BatchCoalescer(env, lambda n, i: 0.1, batch_window=-1.0)
+
+
+def test_pow2_bucket():
+    assert [pow2_bucket(k) for k in (1, 2, 3, 4, 5, 8, 9)] \
+        == [1, 2, 4, 4, 8, 8, 16]
+
+
+# -- the async seam under the experiment API ---------------------------------
+
+
+def test_stub_completions_are_reproducible_under_every_stack():
+    for name in available_stacks():
+        a = _cmp_dict(simulate(_tiny_exp(stack=name, backend="stub")))
+        b = _cmp_dict(simulate(_tiny_exp(stack=name, backend="stub")))
+        assert a == b, f"stub run not reproducible under stack {name!r}"
+
+
+def test_stub_batched_runs_under_every_stack_and_is_reproducible():
+    for name in available_stacks():
+        a = simulate(_tiny_exp(stack=name, backend="stub-batched"))
+        assert a.n_completed > 0
+        assert a.backend == "stub-batched"
+        assert a.backend_counters["n_batches"] > 0
+        assert a.backend_counters["n_batched_invocations"] \
+            >= a.backend_counters["n_batches"]
+        b = simulate(_tiny_exp(stack=name, backend="stub-batched"))
+        assert _cmp_dict(a) == _cmp_dict(b), \
+            f"batched run not reproducible under stack {name!r}"
+
+
+def test_batches_actually_form_under_load():
+    """At an offered load with many concurrent in-flight invocations the
+    coalescer must gather real batches (occupancy > 1), and perfect
+    batching (batch_cost=0) must beat per-invocation stub throughput."""
+    exp = _tiny_exp(backend="stub-batched",
+                    backend_kwargs=dict(exec_time=0.2, batch_window=0.02,
+                                        max_batch=8),
+                    workload_kwargs=dict(duration=3.0, scale=0.2,
+                                         dags_per_class=1))
+    res = simulate(exp)
+    bc = res.backend_counters
+    assert bc["max_batch_occupancy"] > 1
+    assert bc["n_batched_invocations"] > bc["n_batches"]
+    assert bc["n_batch_slots"] >= bc["n_batched_invocations"]
+    # occupancy counters round-trip through JSON with the result
+    back = ExperimentResult.from_dict(json.loads(json.dumps(res.to_dict())))
+    assert back.backend_counters == bc
+
+
+def test_modeled_backend_keeps_the_fast_path_untouched():
+    """The modeled backend must leave both data-plane hooks unset so
+    schedulers take the exact pre-seam fast path (the equivalence goldens
+    pin the resulting decisions; see tests/test_equivalence.py)."""
+    res = simulate(_tiny_exp())
+    backend = res.sim.backend
+    assert backend.name == "modeled"
+    assert backend.submit is None and backend.execute is None
+    sgss = res.sim.lbs.sgss.values()
+    assert all(s.backend_submit is None and s.execute is None for s in sgss)
+    assert res.backend_counters == {}
+
+
+def test_legacy_execute_only_backend_is_adapted_to_submit():
+    @register_backend("test-legacy-sync")
+    class LegacySync(ExecutionBackend):
+        def build(self, exp, spec):
+            self.execute = lambda inv: inv.fn.exec_time
+            return spec
+
+    res = simulate(_tiny_exp(backend="test-legacy-sync"))
+    backend = res.sim.backend
+    assert backend.submit is not None          # bind() wrapped the hook
+    assert res.n_completed > 0
+    # the adapter preserves modeled timing exactly
+    m = _cmp_dict(simulate(_tiny_exp()))
+    s = _cmp_dict(res)
+    for d in (m, s):
+        d.pop("backend"), d.pop("name"), d.pop("backend_counters")
+    assert m == s
+
+
+# -- satellite regressions ----------------------------------------------------
+
+
+def test_served_model_key_is_content_based():
+    """Regression for the id()-keyed calibration cache: a garbage-collected
+    ServedModel's id can be reused, false-hitting the cache.  The key must
+    depend on model content only."""
+    pytest.importorskip("jax")
+    from repro.serving import ServedModel
+    from repro.configs import get_config
+
+    cfg = get_config("mamba2-370m", reduced=True)
+    a = {"f": ServedModel(cfg, prompt_len=16, gen_len=2)}
+    same = {"f": ServedModel(cfg, prompt_len=16, gen_len=2)}
+    assert served_model_key(a) == served_model_key(same)   # ids differ
+    assert served_model_key(a) != served_model_key(
+        {"f": ServedModel(cfg, prompt_len=32, gen_len=2)})
+    assert served_model_key(a) != served_model_key(
+        {"f": ServedModel(cfg, prompt_len=16, gen_len=2, batch=4)})
+    assert served_model_key(a) != served_model_key(
+        {"g": ServedModel(cfg, prompt_len=16, gen_len=2)})
+    other = get_config("gemma3-1b", reduced=True)
+    assert served_model_key(a) != served_model_key(
+        {"f": ServedModel(other, prompt_len=16, gen_len=2)})
+
+
+def test_hash_ring_rejects_empty_id_list():
+    with pytest.raises(ValueError, match="at least one SGS id"):
+        ConsistentHashRing([])

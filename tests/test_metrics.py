@@ -1,7 +1,12 @@
 """Metrics regressions: cold-start fraction consistency and warmup-filtered
 queuing-delay samples."""
+import math
+
+import pytest
+
 from repro.core.types import DagSpec, FunctionSpec, Request
 from repro.sim import Experiment, Metrics, simulate
+from repro.sim.metrics import percentile
 
 
 def _req(dag, arrival, completion=None, n_cold=0):
@@ -77,3 +82,33 @@ def test_simulated_runs_carry_queuing_timestamps_for_every_sample():
         w = m.after_warmup(0.5)
         assert all(t >= 0.5 for t in w.queuing_delay_times)
         assert len(w.queuing_delays) <= len(m.queuing_delays)
+
+
+def test_sorted_latency_cache_invalidates_on_appends_and_completions():
+    """`summarize`/`latency_pct` take several percentiles per report; the
+    sorted-latency array is computed once per (requests, completions) state
+    and must invalidate when either changes."""
+    dag = _dag(1)
+    m = Metrics(requests=[_req(dag, 0.0, completion=0.3)])
+    assert m.latency_pct(50) == m.latencies()[0]
+    first = m.sorted_latencies()
+    assert m.sorted_latencies() is first            # cache hit, no re-sort
+
+    # a new completed request invalidates via len(requests)
+    m.requests.append(_req(dag, 0.1, completion=0.2))
+    assert m.sorted_latencies() == sorted(m.latencies())
+    assert m.latency_pct(0) == 0.1                  # 0.2 - 0.1
+
+    # an in-flight request completing invalidates via n_completed
+    pending = _req(dag, 0.2, completion=None)
+    m.requests.append(pending)
+    snap = m.sorted_latencies()
+    pending.completion_time = 0.25
+    assert m.sorted_latencies() != snap
+    assert m.latency_pct(0) == pytest.approx(0.05)
+    assert m.latency_pct(100) == pytest.approx(0.3)
+
+
+def test_percentile_function_unchanged_for_unsorted_input():
+    assert percentile([3.0, 1.0, 2.0], 50) == 2.0
+    assert math.isnan(percentile([], 99))
