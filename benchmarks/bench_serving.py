@@ -133,6 +133,13 @@ def main() -> None:
     ap.add_argument("--max-batch", type=int, default=COMPARE_MAX_BATCH,
                     help="batched backends, main sweep only: size-triggered "
                          "flush threshold")
+    ap.add_argument("--workers", type=int, default=1,
+                    help="run sweep cells in N worker processes "
+                         "(repro.sim.run_sweep(workers=N)).  Requires "
+                         "picklable cells: works with the stub backends; "
+                         "a shared live JAX backend falls back to "
+                         "sequential with a warning (cells would not share "
+                         "one calibration anyway)")
     ap.add_argument("--out", default="",
                     help="JSON artifact path (default: BENCH_serving.json "
                          "at the repo root, or BENCH_serving.partial.json "
@@ -162,7 +169,7 @@ def main() -> None:
     stacks = STACKS[:2] if args.smoke else STACKS
 
     t0 = time.time()
-    sweep = run_sweep(base, {"stack": stacks})
+    sweep = run_sweep(base, {"stack": stacks}, workers=args.workers)
     per_class_rows = []
     for row in sweep:
         res = row["result"]
@@ -185,6 +192,13 @@ def main() -> None:
     calibration = {
         name: {"exec_time": spec.exec_time, "setup_time": spec.setup_time}
         for name, spec in (getattr(backend, "fn_specs", None) or {}).items()}
+    executions = backend.counters().get("n_executions", 0)
+    if args.workers > 1:
+        # parallel cells executed in worker processes: the shared instance
+        # here never ran, so total executions come from the per-cell deltas
+        executions = sum(
+            row["result"]["backend_counters"].get("n_executions", 0)
+            for row in sweep.rows)
     repo_root = Path(__file__).resolve().parent.parent
     default_name = ("BENCH_serving.partial.json" if args.smoke
                     else "BENCH_serving.json")
@@ -196,7 +210,7 @@ def main() -> None:
         "backend": backend.name,
         "python": sys.version.split()[0],
         "calibration": calibration,
-        "executions": backend.counters().get("n_executions", 0),
+        "executions": executions,
         "wall_s": round(time.time() - t0, 2),
         "sweep": sweep.to_dict(),          # full ExperimentResult rows
         "per_class_rows": per_class_rows,  # flattened per-class view

@@ -3,19 +3,70 @@
 Prints ``name,us_per_call,derived`` CSV rows and writes a machine-readable
 ``BENCH_figs.json`` (one structured row per emitted metric, plus full
 ``ExperimentResult`` rows for every simulated experiment).  Run:
-    python -m benchmarks.run [--only fig7,...] [--quick]
+    python -m benchmarks.run [--only fig7,...] [--quick] [--workers N]
 (``PYTHONPATH=src`` is no longer required but still works.)
+
+``--workers N`` farms whole figure benchmarks to a spawn-context process
+pool (every bench is an independent fixed-seed simulation, so results are
+identical to sequential execution); rows are merged back in canonical
+bench order, child stdout interleaves.
 """
 from __future__ import annotations
 
 import argparse
+import importlib
 import json
 import sys
 import time
 import traceback
 from pathlib import Path
+from typing import Dict, List, Optional, Tuple
 
 from .common import EXPERIMENTS, RECORDS, ROWS, emit, reset
+
+# name -> (module, quick arg, full arg); None args = call run() bare
+BENCH_SPECS: Dict[str, Tuple[str, Optional[float], Optional[float]]] = {
+    "fig2d": ("fig2d_sparrow", 8.0, 16.0),
+    "fig7": ("fig7_macro", 12.0, 25.0),
+    "fig8b": ("fig8b_estimation", 12.0, 20.0),
+    "fig9": ("fig9_placement", 12.0, 24.0),
+    "eviction": ("fig_eviction", 12.0, 24.0),
+    "fig10": ("fig10_deadline_scaling", 12.0, 20.0),
+    "fig11": ("fig11_contention", 12.0, 24.0),
+    "fig12": ("fig12_sot", 10.0, 16.0),
+    "fig13": ("fig13_sgs_size", 10.0, 20.0),
+    "scaleout": ("fig_scaleout_gradual", 14.0, 30.0),
+    "fault": ("fig_fault", 12.0, 20.0),
+    "overheads": ("tbl_overheads", 500, 2000),
+    "roofline": ("roofline_table", None, None),
+}
+
+
+def _bench_call(name: str, quick: bool) -> None:
+    mod_name, qarg, farg = BENCH_SPECS[name]
+    mod = importlib.import_module(f".{mod_name}", package=__package__)
+    if qarg is None:
+        mod.run()
+    else:
+        mod.run(qarg if quick else farg)
+
+
+def _bench_worker(arg: Tuple[str, bool]
+                  ) -> Tuple[str, int, List[str], list, list]:
+    """Process-pool entry point: run one figure bench in a fresh process
+    and ship its emitted rows back to the parent."""
+    name, quick = arg
+    reset()
+    failures = 0
+    t0 = time.time()
+    try:
+        _bench_call(name, quick)
+        emit(f"_bench_{name}_wall", (time.time() - t0) * 1e6, "ok")
+    except Exception:
+        traceback.print_exc()
+        emit(f"_bench_{name}_wall", (time.time() - t0) * 1e6, "FAILED")
+        failures = 1
+    return name, failures, list(ROWS), list(RECORDS), list(EXPERIMENTS)
 
 
 def main() -> None:
@@ -23,6 +74,10 @@ def main() -> None:
     ap.add_argument("--only", default="")
     ap.add_argument("--quick", action="store_true",
                     help="shorter durations (CI smoke)")
+    ap.add_argument("--workers", type=int, default=1,
+                    help="run figure benchmarks in N worker processes "
+                         "(results identical to sequential; child output "
+                         "interleaves)")
     ap.add_argument("--out", default="",
                     help="JSON artifact path (default: BENCH_figs.json at "
                          "the repo root, or BENCH_figs.partial.json when "
@@ -31,42 +86,36 @@ def main() -> None:
     args = ap.parse_args()
     reset()     # in-process reruns must not accumulate rows
 
-    from . import (fig2d_sparrow, fig7_macro, fig8b_estimation,
-                   fig9_placement, fig10_deadline_scaling, fig11_contention,
-                   fig12_sot, fig13_sgs_size, fig_eviction, fig_fault,
-                   fig_scaleout_gradual, roofline_table, tbl_overheads)
-
-    benches = {
-        "fig2d": lambda: fig2d_sparrow.run(8.0 if args.quick else 16.0),
-        "fig7": lambda: fig7_macro.run(12.0 if args.quick else 25.0),
-        "fig8b": lambda: fig8b_estimation.run(12.0 if args.quick else 20.0),
-        "fig9": lambda: fig9_placement.run(12.0 if args.quick else 24.0),
-        "eviction": lambda: fig_eviction.run(12.0 if args.quick else 24.0),
-        "fig10": lambda: fig10_deadline_scaling.run(
-            12.0 if args.quick else 20.0),
-        "fig11": lambda: fig11_contention.run(12.0 if args.quick else 24.0),
-        "fig12": lambda: fig12_sot.run(10.0 if args.quick else 16.0),
-        "fig13": lambda: fig13_sgs_size.run(10.0 if args.quick else 20.0),
-        "scaleout": lambda: fig_scaleout_gradual.run(
-            14.0 if args.quick else 30.0),
-        "fault": lambda: fig_fault.run(12.0 if args.quick else 20.0),
-        "overheads": lambda: tbl_overheads.run(500 if args.quick else 2000),
-        "roofline": roofline_table.run,
-    }
     only = [s for s in args.only.split(",") if s]
+    unknown = [s for s in only if s not in BENCH_SPECS]
+    if unknown:
+        sys.exit(f"unknown bench name(s): {', '.join(unknown)}")
+    selected = [n for n in BENCH_SPECS if not only or n in only]
     failures = 0
     print("name,us_per_call,derived")
-    for name, fn in benches.items():
-        if only and name not in only:
-            continue
-        t0 = time.time()
-        try:
-            fn()
-            emit(f"_bench_{name}_wall", (time.time() - t0) * 1e6, "ok")
-        except Exception:
-            traceback.print_exc()
-            emit(f"_bench_{name}_wall", (time.time() - t0) * 1e6, "FAILED")
-            failures += 1
+    if args.workers > 1 and len(selected) > 1:
+        import multiprocessing
+        ctx = multiprocessing.get_context("spawn")
+        with ctx.Pool(min(args.workers, len(selected))) as pool:
+            results = pool.map(_bench_worker,
+                               [(n, args.quick) for n in selected])
+        # merge in canonical bench order (pool.map preserves input order)
+        for _name, fail, rows, records, experiments in results:
+            failures += fail
+            ROWS.extend(rows)
+            RECORDS.extend(records)
+            EXPERIMENTS.extend(experiments)
+    else:
+        for name in selected:
+            t0 = time.time()
+            try:
+                _bench_call(name, args.quick)
+                emit(f"_bench_{name}_wall", (time.time() - t0) * 1e6, "ok")
+            except Exception:
+                traceback.print_exc()
+                emit(f"_bench_{name}_wall", (time.time() - t0) * 1e6,
+                     "FAILED")
+                failures += 1
 
     repo_root = Path(__file__).resolve().parent.parent
     default_name = "BENCH_figs.partial.json" if only else "BENCH_figs.json"

@@ -11,7 +11,7 @@ from __future__ import annotations
 import heapq
 import random
 from collections import deque
-from typing import Deque, Dict, List, Optional, Tuple
+from typing import Callable, Deque, Dict, List, Optional, Tuple
 
 from .sandbox import Worker
 from .sgs import Env
@@ -40,6 +40,8 @@ class CentralizedFIFO:
         self.queuing_delays: List[float] = []
         self.queuing_delay_times: List[float] = []   # dispatch timestamps
         self.completed_requests: List[Request] = []
+        # flat-metrics completion hook (see SemiGlobalScheduler.on_complete)
+        self.on_complete: Optional[Callable[[Request, float], None]] = None
 
     # -- intake ---------------------------------------------------------------
     def submit_request(self, req: Request) -> None:
@@ -132,7 +134,11 @@ class CentralizedFIFO:
         dag = req.dag
         if len(done) == len(dag.functions):
             req.completion_time = now
-            self.completed_requests.append(req)
+            rec = self.on_complete
+            if rec is not None:
+                rec(req, now)
+            else:
+                self.completed_requests.append(req)
             del self._completed_fns[req.req_id]
         else:
             for child in dag.children(inv.fn.name):
@@ -172,6 +178,8 @@ class SparrowScheduler:
         self.queuing_delays: List[float] = []
         self.queuing_delay_times: List[float] = []   # dispatch timestamps
         self.completed_requests: List[Request] = []
+        # flat-metrics completion hook (see SemiGlobalScheduler.on_complete)
+        self.on_complete: Optional[Callable[[Request, float], None]] = None
 
     def submit_request(self, req: Request) -> None:
         now = self.env.now()
@@ -234,7 +242,11 @@ class SparrowScheduler:
         dag = req.dag
         if len(done) == len(dag.functions):
             req.completion_time = now
-            self.completed_requests.append(req)
+            rec = self.on_complete
+            if rec is not None:
+                rec(req, now)
+            else:
+                self.completed_requests.append(req)
             del self._completed_fns[req.req_id]
         else:
             for child in dag.children(inv.fn.name):

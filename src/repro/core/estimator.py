@@ -82,7 +82,10 @@ class RateEstimator:
     _initialized: bool = False
 
     def record_arrival(self, now: float) -> None:
-        self._roll(now)
+        # fast path: no window boundary crossed since the last sample (the
+        # overwhelmingly common case on the per-invocation hot path)
+        if now - self._window_start >= self.interval:
+            self._roll(now)
         self._count += 1
 
     def rate(self, now: float) -> float:
@@ -115,12 +118,22 @@ class DemandEstimator:
     _rates: Dict[str, RateEstimator] = field(default_factory=dict)
 
     def _est(self, fn_name: str) -> RateEstimator:
-        if fn_name not in self._rates:
-            self._rates[fn_name] = RateEstimator(self.interval, self.alpha)
-        return self._rates[fn_name]
+        est = self._rates.get(fn_name)
+        if est is None:
+            est = self._rates[fn_name] = RateEstimator(self.interval,
+                                                       self.alpha)
+        return est
 
     def record_arrival(self, fn_name: str, now: float) -> None:
-        self._est(fn_name).record_arrival(now)
+        # hand-inlined _est + RateEstimator.record_arrival: this runs once
+        # per function invocation
+        est = self._rates.get(fn_name)
+        if est is None:
+            est = self._rates[fn_name] = RateEstimator(self.interval,
+                                                       self.alpha)
+        if now - est._window_start >= est.interval:
+            est._roll(now)
+        est._count += 1
 
     def rate(self, fn_name: str, now: float) -> float:
         return self._est(fn_name).rate(now)

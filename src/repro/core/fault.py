@@ -72,6 +72,8 @@ def restore_sgs(sgs: SemiGlobalScheduler, store: StateStore,
 
 def checkpoint_lbs(lbs: LoadBalancer, store: StateStore) -> None:
     """Persist per-DAG SGS mappings (active/removed lists)."""
+    for st in lbs._dag_state.values():
+        lbs._fold(st)       # reading sandbox_count: apply buffered reports
     mapping = {dag_id: {"active": list(st.active),
                         "removed": list(st.removed),
                         "sandbox_count": dict(st.sandbox_count)}
@@ -114,9 +116,10 @@ def fail_worker(sgs: SemiGlobalScheduler, worker_id: int) -> int:
     # become no-ops because the request is re-driven from the queue
     now = sgs.env.now()
     n_retry = 0
-    for inv in list(sgs._inflight.get(worker_id, [])):
+    for inv in list(sgs._inflight.get(worker_id, {}).values()):
         retry = Invocation(request=inv.request, fn=inv.fn, ready_time=now)
-        heapq.heappush(sgs._queue, (retry.priority_key(), retry))
+        k0, k1, k2 = retry.priority_key()
+        heapq.heappush(sgs._queue, (k0, k1, k2, retry))
         n_retry += 1
     sgs._dead_workers.add(worker_id)
     sgs._inflight.pop(worker_id, None)

@@ -12,7 +12,7 @@ import bisect
 import hashlib
 import random
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 from .sgs import SemiGlobalScheduler
 from .types import DagSpec, Request
@@ -78,16 +78,29 @@ class _DagState:
     qdelay_ewma: Dict[int, float] = field(default_factory=dict)
     qdelay_samples: Dict[int, int] = field(default_factory=dict)
     sandbox_count: Dict[int, int] = field(default_factory=dict)
+    # unfolded piggyback reports [(sgs_id, qdelay, sandbox_count), ...]:
+    # ``report`` is on the per-dispatch hot path, so samples are buffered
+    # and folded into the EWMA/window dicts lazily at every read point
+    # (_fold) — the fold preserves per-SGS sample order, so every value
+    # ever *read* is bit-identical to eager per-sample updates
+    pending: List[tuple] = field(default_factory=list)
+    # max(dag.slack, 1e-6), computed once (the lottery divides by it on
+    # every multi-SGS draw)
+    slack_floor: float = 1.0
     last_decision: float = 0.0
     below_sit_streak: int = 0
     n_scale_outs: int = 0
     n_scale_ins: int = 0
+
+    def __post_init__(self):
+        self.slack_floor = max(self.dag.slack, 1e-6)
 
 
 class LoadBalancer:
     def __init__(self, sgss: List[SemiGlobalScheduler],
                  config: Optional[LBSConfig] = None):
         self.cfg = config or LBSConfig()
+        self._alpha = self.cfg.ewma_alpha
         self.sgss: Dict[int, SemiGlobalScheduler] = {s.sgs_id: s for s in sgss}
         self.ring = ConsistentHashRing(list(self.sgss))
         self._dag_state: Dict[str, _DagState] = {}
@@ -102,9 +115,10 @@ class LoadBalancer:
     def select(self, req: Request, now: float) -> SemiGlobalScheduler:
         """Routing decision only (lets callers model control-plane latency
         between the decision and the submission)."""
-        st = self._state(req.dag, now)
-        sid = self._lottery(st)
-        return self.sgss[sid]
+        st = self._dag_state.get(req.dag.dag_id)   # inlined _state fast path
+        if st is None:
+            st = self._state(req.dag, now)
+        return self.sgss[self._lottery(st)]
 
     def route(self, req: Request, now: float) -> SemiGlobalScheduler:
         sgs = self.select(req, now)
@@ -133,39 +147,47 @@ class LoadBalancer:
         allocates more sandboxes, and earns even more tickets while its
         queue grows.
         """
+        active = st.active
         if not self.cfg.gradual:
             # instant-scaling ablation: plain round-robin over active SGSs
-            return st.active[self._rng.randrange(len(st.active))]
-        if len(st.active) == 1 and not st.removed:
+            return active[self._rng.randrange(len(active))]
+        if len(active) == 1 and not st.removed:
             # single-SGS fast path (the common case): the draw is a foregone
             # conclusion, but still consume one uniform so the RNG stream —
             # and therefore every later multi-SGS lottery — is unchanged
             self._rng.random()
-            return st.active[0]
-        slack = max(st.dag.slack, 1e-6)
-
-        def damp(sid: int) -> float:
-            return 1.0 + st.qdelay_ewma.get(sid, 0.0) / slack
-
-        ids: List[int] = []
-        tickets: List[float] = []
-        for sid in st.active:
-            ids.append(sid)
-            tickets.append(max(1.0, float(st.sandbox_count.get(sid, 0)))
-                           / damp(sid))
-        for sid in st.removed:
-            ids.append(sid)
-            tickets.append(self.cfg.discount_factor
-                           * max(1.0, float(st.sandbox_count.get(sid, 0)))
-                           / damp(sid))
-        total = sum(tickets)
+            return active[0]
+        if st.pending:
+            self._fold(st)      # multi-SGS draw reads EWMAs/counts
+        # damping divisor: 1 + qdelay/slack (hotspot damping, see docstring);
+        # hand-inlined — this runs once per routed request under scale-out.
+        # Stored sandbox counts are already clamped >= 1 (``_fold``,
+        # ``_state``, ``_scale_out``), so the historical
+        # ``max(1.0, float(count))`` reduces to a default of 1.
+        slack = st.slack_floor
+        ewma_get = st.qdelay_ewma.get
+        count_get = st.sandbox_count.get
+        tickets: List[Tuple[int, float]] = []
+        append = tickets.append
+        total = 0.0
+        for sid in active:
+            t = count_get(sid, 1) / (1.0 + ewma_get(sid, 0.0) / slack)
+            append((sid, t))
+            total += t
+        if st.removed:
+            discount = self.cfg.discount_factor
+            for sid in st.removed:
+                t = (discount * count_get(sid, 1)
+                     / (1.0 + ewma_get(sid, 0.0) / slack))
+                append((sid, t))
+                total += t
         pick = self._rng.random() * total
         acc = 0.0
-        for sid, t in zip(ids, tickets):
+        for sid, t in tickets:
             acc += t
             if pick <= acc:
                 return sid
-        return ids[-1]
+        return tickets[-1][0]
 
     # ------------------------------------------------------------- piggyback
     def report(self, dag_id: str, sgs_id: int, qdelay: float,
@@ -173,11 +195,27 @@ class LoadBalancer:
         st = self._dag_state.get(dag_id)
         if st is None:
             return
-        a = self.cfg.ewma_alpha
-        prev = st.qdelay_ewma.get(sgs_id)
-        st.qdelay_ewma[sgs_id] = qdelay if prev is None else a * qdelay + (1 - a) * prev
-        st.qdelay_samples[sgs_id] = st.qdelay_samples.get(sgs_id, 0) + 1
-        st.sandbox_count[sgs_id] = max(1, sandbox_count)
+        st.pending.append((sgs_id, qdelay, sandbox_count))
+
+    def _fold(self, st: _DagState) -> None:
+        """Apply buffered piggyback reports in arrival order (see
+        ``_DagState.pending``).  Called before any read of the EWMA/window/
+        count dicts; produces exactly the values eager per-report updates
+        would have."""
+        pending = st.pending
+        if not pending:
+            return
+        a = self._alpha
+        ewma = st.qdelay_ewma
+        samples = st.qdelay_samples
+        counts = st.sandbox_count
+        for sgs_id, qdelay, sandbox_count in pending:
+            prev = ewma.get(sgs_id)
+            ewma[sgs_id] = qdelay if prev is None \
+                else a * qdelay + (1 - a) * prev
+            samples[sgs_id] = samples.get(sgs_id, 0) + 1
+            counts[sgs_id] = sandbox_count if sandbox_count > 1 else 1
+        pending.clear()
 
     # --------------------------------------------------------------- scaling
     def scaling_metric(self, st: _DagState) -> float:
@@ -200,6 +238,8 @@ class LoadBalancer:
         """Periodic scaling pass over every DAG (engine calls this each
         decision interval; decisions also gate on filled windows, §5.2.2)."""
         for st in self._dag_state.values():
+            if st.pending:
+                self._fold(st)
             window_full = all(
                 st.qdelay_samples.get(sid, 0) >= self.cfg.qdelay_window
                 for sid in st.active)

@@ -58,13 +58,20 @@ class _FnBucket:
     scheduler never picks one), so they are tracked as a bare counter and
     transitions in/out of BUSY skip all list maintenance."""
 
-    __slots__ = ("alloc", "warm", "soft", "busy_n")
+    __slots__ = ("alloc", "warm", "soft", "busy_n", "alloc_flag",
+                 "evict_pushed")
 
     def __init__(self):
         self.alloc: List[Sandbox] = []
         self.warm: List[Sandbox] = []
         self.soft: List[Sandbox] = []
         self.busy_n = 0
+        # manager-index bookkeeping (see _FnIndex): whether this bucket is
+        # counted in the per-function "has ALLOCATING sandboxes" total, and
+        # the schedulable count of the live eviction-heap entry (-1: none) —
+        # dedupes the one-entry-per-completion heap churn
+        self.alloc_flag = False
+        self.evict_pushed = -1
 
     def list_for(self, state: SandboxState) -> Optional[List[Sandbox]]:
         """The sorted list for a state; None for BUSY (counter-only)."""
@@ -275,10 +282,10 @@ _EMPTY: List[Worker] = []
 
 class _FnIndex:
     """Per-function manager-level indices: schedulable total, worker sets by
-    residency kind, and the lazy placement/eviction heaps."""
+    residency kind, and the lazy placement/eviction/warm-candidate heaps."""
 
     __slots__ = ("total", "idle", "soft", "place_heap", "evict_heap",
-                 "idle_sorted")
+                 "idle_sorted", "warm_heap", "n_alloc")
 
     def __init__(self):
         self.total = 0                      # schedulable sandboxes, all workers
@@ -286,7 +293,21 @@ class _FnIndex:
         self.soft: Set[Worker] = set()      # workers with SOFT_EVICTED
         self.place_heap: List[Tuple[int, int]] = []
         self.evict_heap: List[Tuple[int, int]] = []
-        self.idle_sorted: Optional[List[Worker]] = None   # cache, pool order
+        # ``idle`` in pool order as (pool_index, worker, bucket) triples,
+        # maintained incrementally on membership change (insort/remove,
+        # small lists) — the dispatcher walks this on every decision, and
+        # both the re-sort per walk and the per-probe bucket lookup it
+        # replaces dominated the hot path
+        self.idle_sorted: List[Tuple[int, "Worker", _FnBucket]] = []
+        # lazy max-heap of (-warm_count, pool_index, worker, bucket): the
+        # dispatcher's most-warm-copies pick in O(log W) amortized instead
+        # of a full walk.  Only consulted when ``n_alloc`` is 0 — with an
+        # ALLOCATING sandbox anywhere, the walk's lazy ALLOC->WARM
+        # promotions are observable side effects and the legacy full probe
+        # order must run.  Entries are pushed on every warm-count change
+        # and validated (count + ownership) at pop.
+        self.warm_heap: List[Tuple[int, int, "Worker", _FnBucket]] = []
+        self.n_alloc = 0        # workers with a non-empty ALLOCATING bucket
 
 
 @dataclass
@@ -335,6 +356,10 @@ class SandboxManager:
             w.owner = self
             w.pool_index = i
             self._by_id[w.worker_id] = w
+        # lazy-heap growth bound, computed once (decision-neutral: it only
+        # gates when compaction rebuilds a heap; worker removal leaves it
+        # conservatively large)
+        self.heap_cap = 64 + 8 * len(self.workers)
 
     # ---------------------------------------------------------- heap keying
     def _place_key(self, count: int, wid: int) -> Tuple[int, int]:
@@ -356,12 +381,23 @@ class SandboxManager:
             fi.total += c
             fi.place_heap.append(self._place_key(c, w.worker_id))
             fi.evict_heap.append(self._evict_key(c, w.worker_id))
+            b = w._buckets.get(fn_name)
+            if b is not None:
+                b.evict_pushed = c
+                b.alloc_flag = bool(b.alloc)
+                if b.alloc_flag:
+                    fi.n_alloc += 1
+                if b.warm:
+                    fi.warm_heap.append((-len(b.warm), w.pool_index, w, b))
             if w.idle_count(fn_name):
                 fi.idle.add(w)
             if w.bucket_len(fn_name, _SOFT):
                 fi.soft.add(w)
+        fi.idle_sorted = sorted(
+            (w.pool_index, w, w._buckets[fn_name]) for w in fi.idle)
         heapq.heapify(fi.place_heap)
         heapq.heapify(fi.evict_heap)
+        heapq.heapify(fi.warm_heap)
         self._fns[fn_name] = fi
         return fi
 
@@ -384,19 +420,29 @@ class SandboxManager:
             if b.alloc or b.warm:
                 if w not in fi.idle:
                     fi.idle.add(w)
-                    fi.idle_sorted = None
+                    insort(fi.idle_sorted, (w.pool_index, w, b))
             elif w in fi.idle:
                 fi.idle.remove(w)
-                fi.idle_sorted = None
+                fi.idle_sorted.remove((w.pool_index, w, b))
         if touched_soft:
             if b.soft:
                 fi.soft.add(w)
             else:
                 fi.soft.discard(w)
+        has_alloc = bool(b.alloc)
+        if has_alloc != b.alloc_flag:
+            b.alloc_flag = has_alloc
+            fi.n_alloc += 1 if has_alloc else -1
+        cap = self.heap_cap
+        if b.warm:
+            # keep a current-count warm-candidate entry live (lazy heap)
+            heap = fi.warm_heap
+            heapq.heappush(heap, (-len(b.warm), w.pool_index, w, b))
+            if len(heap) > cap:
+                self._compact_warm(fn_name, fi)
         if sched_delta or gained_idle:
             c = len(b.alloc) + len(b.warm) + b.busy_n
             wid = w.worker_id
-            cap = 64 + 8 * len(self.workers)
             if sched_delta:
                 # placement validity depends only on the count, so the place
                 # heap needs no entry for pure BUSY->WARM candidacy changes
@@ -404,10 +450,12 @@ class SandboxManager:
                 heapq.heappush(heap, self._place_key(c, wid))
                 if len(heap) > cap:     # bound lazy-entry growth
                     self._compact(fn_name, heap, self._place_key)
-            heap = fi.evict_heap
-            heapq.heappush(heap, self._evict_key(c, wid))
-            if len(heap) > cap:
-                self._compact(fn_name, heap, self._evict_key)
+            if b.evict_pushed != c:     # dedupe: a live entry already covers c
+                b.evict_pushed = c
+                heap = fi.evict_heap
+                heapq.heappush(heap, self._evict_key(c, wid))
+                if len(heap) > cap:
+                    self._compact(fn_name, heap, self._evict_key)
 
     def _compact(self, fn_name: str, heap: List[Tuple[int, int]],
                  keyer: Callable[[int, int], Tuple[int, int]]) -> None:
@@ -416,25 +464,46 @@ class SandboxManager:
                    for w in self.workers]
         heapq.heapify(heap)
 
+    def _compact_warm(self, fn_name: str, fi: "_FnIndex") -> None:
+        """Rebuild the warm-candidate heap from current warm counts."""
+        entries = []
+        for w in self.workers:
+            b = w._buckets.get(fn_name)
+            if b is not None and b.warm:
+                entries.append((-len(b.warm), w.pool_index, w, b))
+        fi.warm_heap[:] = entries
+        heapq.heapify(fi.warm_heap)
+
     # ------------------------------------------------- fused hot transitions
     def mark_busy(self, w: Worker, sbx: Sandbox) -> None:
         """WARM -> BUSY (warm dispatch hit), fused: equivalent to
         ``sbx.state = BUSY`` but with the generic reindex/note cascade
-        hand-inlined — this transition changes no schedulable count and can
-        only *shrink* idle membership, so no heap entries are needed."""
-        b = w._buckets[sbx.fn.name]
-        b.warm.remove(sbx)
+        hand-inlined — this transition changes no schedulable count, so no
+        place/evict entries are needed; the warm-candidate heap gets the
+        worker's refreshed warm count (if any warm copies remain)."""
+        name = sbx.fn.name
+        b = w._buckets[name]
+        warm = b.warm
+        warm.remove(sbx)
         b.busy_n += 1
         w._n_busy += 1
         sbx._state = _BUSY
-        if not (b.warm or b.alloc):
-            fi = self._fns[sbx.fn.name]
-            fi.idle.discard(w)
-            fi.idle_sorted = None
+        fi = self._fns[name]
+        if warm:
+            heap = fi.warm_heap
+            heapq.heappush(heap, (-len(warm), w.pool_index, w, b))
+            if len(heap) > 64 + 8 * len(self.workers):
+                self._compact_warm(name, fi)
+        elif not b.alloc:
+            if w in fi.idle:
+                fi.idle.remove(w)
+                fi.idle_sorted.remove((w.pool_index, w, b))
 
     def mark_warm(self, w: Worker, sbx: Sandbox) -> None:
         """BUSY -> WARM (completion), fused mirror of ``mark_busy``; pushes
-        the one eviction-heap entry the worker gains candidacy with."""
+        the refreshed warm-candidate entry and — only when no live entry
+        already covers the (unchanged) schedulable count — the one
+        eviction-heap entry the worker gains candidacy with."""
         name = sbx.fn.name
         b = w._buckets[name]
         insort(b.warm, sbx, key=_sbx_sort_key)
@@ -442,27 +511,31 @@ class SandboxManager:
         w._n_busy -= 1
         sbx._state = _WARM
         fi = self._fns[name]
+        cap = self.heap_cap
         if w not in fi.idle:
             fi.idle.add(w)
-            fi.idle_sorted = None
-        heap = fi.evict_heap
-        heapq.heappush(heap, self._evict_key(
-            len(b.alloc) + len(b.warm) + b.busy_n, w.worker_id))
-        if len(heap) > 64 + 8 * len(self.workers):
-            self._compact(name, heap, self._evict_key)
+            insort(fi.idle_sorted, (w.pool_index, w, b))
+        heap = fi.warm_heap
+        heapq.heappush(heap, (-len(b.warm), w.pool_index, w, b))
+        if len(heap) > cap:
+            self._compact_warm(name, fi)
+        c = len(b.alloc) + len(b.warm) + b.busy_n
+        if b.evict_pushed != c:
+            b.evict_pushed = c
+            heap = fi.evict_heap
+            heapq.heappush(heap, self._evict_key(c, w.worker_id))
+            if len(heap) > cap:
+                self._compact(name, heap, self._evict_key)
 
     # -------------------------------------------------------- SGS-side views
     def idle_workers(self, fn_name: str) -> List[Worker]:
         """Workers holding a WARM/ALLOCATING sandbox of ``fn_name``, in pool
-        order (the dispatcher's warm-candidate index).  The sorted view is
-        cached and invalidated only when membership changes."""
+        order (the dispatcher's warm-candidate index), maintained
+        incrementally on membership change."""
         fi = self._fns.get(fn_name)
-        if fi is None or not fi.idle:
+        if fi is None:
             return _EMPTY
-        lst = fi.idle_sorted
-        if lst is None:
-            lst = fi.idle_sorted = sorted(fi.idle, key=_pool_key)
-        return lst
+        return [e[1] for e in fi.idle_sorted]
 
     def has_soft_workers(self, fn_name: str) -> bool:
         fi = self._fns.get(fn_name)
@@ -476,15 +549,22 @@ class SandboxManager:
         del self._by_id[w.worker_id]
         if w in self.workers:
             self.workers.remove(w)
-        for fn_name in w._buckets:
+        for fn_name, b in w._buckets.items():
             fi = self._fns.get(fn_name)
             if fi is None:
                 continue
             fi.total -= w.schedulable_count(fn_name)
             if w in fi.idle:
                 fi.idle.remove(w)
-                fi.idle_sorted = None
+                fi.idle_sorted.remove((w.pool_index, w, b))
             fi.soft.discard(w)
+            if b.alloc_flag:
+                b.alloc_flag = False
+                fi.n_alloc -= 1
+            # purge the failed worker's warm-candidate entries outright so
+            # the dispatcher's fast path never has to consider ownership
+            if b.warm:
+                self._compact_warm(fn_name, fi)
         w.owner = None
 
     # ------------------------------------------------------------------ API
@@ -553,24 +633,33 @@ class SandboxManager:
         packed ablation the mirror image is the *min* non-empty worker, so
         packing is preserved.)  Victim selection is O(log W) amortized via the
         eviction heap + the per-worker state buckets."""
-        heap = self._ensure_fn(fn.name).evict_heap
+        fname = fn.name
+        heap = self._ensure_fn(fname).evict_heap
         packed = self.placement == "packed"
         for _ in range(n):
-            victim_worker: Optional[Worker] = None
+            victim: Optional[_FnBucket] = None
             while heap:
                 cnt, wid = heapq.heappop(heap)
                 if not packed:
                     cnt = -cnt
                 w = self._by_id.get(wid)
-                if (w is None or w.schedulable_count(fn.name) != cnt
-                        or not w.idle_count(fn.name)):
-                    continue            # dead, stale, or no evictable sandbox
-                victim_worker = w
+                if w is None:
+                    continue            # dead worker
+                b = w._buckets.get(fname)
+                if b is None:
+                    continue
+                if b.evict_pushed == cnt:
+                    b.evict_pushed = -1  # the tracked live entry is consumed
+                if (len(b.alloc) + len(b.warm) + b.busy_n != cnt
+                        or not (b.alloc or b.warm)):
+                    continue            # stale count or no evictable sandbox
+                victim = b
                 break
-            if victim_worker is None:
+            if victim is None:
                 return
-            sbx = (victim_worker.find(fn.name, _WARM)
-                   or victim_worker.find(fn.name, _ALLOC))
+            # earliest-created WARM, else earliest-created ALLOCATING (the
+            # bucket lists are sbx_id-sorted, so this is Worker.find)
+            sbx = victim.warm[0] if victim.warm else victim.alloc[0]
             sbx.state = _SOFT           # hooks push refreshed heap entries
             self.n_soft_evictions += 1
 

@@ -9,10 +9,12 @@ from __future__ import annotations
 
 import heapq
 from dataclasses import dataclass, field
+from bisect import insort as _insort
+from heapq import heappop as _heappop, heappush as _heappush
 from typing import Callable, Dict, List, Optional, Protocol, Set, Tuple
 
-from .estimator import DemandEstimator
-from .sandbox import SandboxManager, Worker
+from .estimator import DemandEstimator, RateEstimator
+from .sandbox import SandboxManager, Worker, _sbx_sort_key
 from .types import (DagSpec, ExecuteFn, FunctionSpec, Invocation, Request,
                     Sandbox, SandboxState, SubmitFn)
 
@@ -54,6 +56,14 @@ class SGSConfig:
 #   (dag_id, sgs_id, queuing_delay_sample, proactive_sandbox_count)
 ReportFn = Callable[[str, int, float, int], None]
 
+# shared sentinel marking a single-function request's DAG progress ("done on
+# first completion") — avoids a set allocation per request for the dominant
+# C1/C2 classes.  Immutable, so sharing is safe.
+_SINGLE_FN: frozenset = frozenset()
+
+_BUSY_ST = SandboxState.BUSY
+_WARM_ST = SandboxState.WARM
+
 
 class SemiGlobalScheduler:
     def __init__(self, sgs_id: int, workers: List[Worker], env: Env,
@@ -83,20 +93,26 @@ class SemiGlobalScheduler:
             placement="even" if self.cfg.even_placement else "packed",
             eviction="fair" if self.cfg.fair_eviction else "lru")
 
-        # SRSF priority queue of ready invocations (static key, §4.2)
-        self._queue: List[Tuple[Tuple[float, float, int], Invocation]] = []
-        # DAG progress: req_id -> set of completed function names
-        self._completed_fns: Dict[int, Set[str]] = {}
+        # SRSF priority queue of ready invocations (static key, §4.2),
+        # flattened to (deadline-rcp, rcp, inv_id, inv) 4-tuples: identical
+        # ordering to the old ((k0, k1, id), inv) nesting (inv_id uniquifies
+        # before the Invocation could ever be compared) without a nested
+        # tuple allocation per push
+        self._queue: List[Tuple[float, float, int, Invocation]] = []
         self._dags: Dict[str, DagSpec] = {}       # DAGs this SGS serves
         # fn name -> (floor demand, expiry) set by LBS preallocation
         self._demand_floor: Dict[str, Tuple[int, float]] = {}
         self._ticking = False
         # fault tolerance (§6.1): in-flight tracking + failed-worker view
-        self._inflight: Dict[int, List[Invocation]] = {}
+        # (worker_id -> {inv_id -> Invocation}, insertion-ordered like the
+        # old per-worker list but with O(1) completion removal)
+        self._inflight: Dict[int, Dict[int, Invocation]] = {}
         self._dead_workers: Set[int] = set()
         # incremental pool-wide free-core count: _dispatch's work-conserving
         # loop gate is O(1) instead of an O(W) any() per queue pop
         self._free_cores = sum(w.cores - w.busy_cores for w in workers)
+        # per-dag cached [_FnIndex, ...] for the piggyback sandbox count
+        self._dag_fis: Dict[str, List[object]] = {}
 
         # metrics
         self.n_cold_starts = 0
@@ -104,6 +120,10 @@ class SemiGlobalScheduler:
         self.queuing_delays: List[float] = []
         self.queuing_delay_times: List[float] = []   # dispatch timestamps
         self.completed_requests: List[Request] = []
+        # flat-metrics completion hook (``Metrics.record_completion``): when
+        # set, completed requests are folded into the run's column buffers
+        # and released instead of accumulating on ``completed_requests``
+        self.on_complete: Optional[Callable[[Request, float], None]] = None
 
     # ---------------------------------------------------------------- intake
     def submit_request(self, req: Request) -> None:
@@ -112,22 +132,53 @@ class SemiGlobalScheduler:
         req.sgs_id = self.sgs_id
         dag = req.dag
         self._dags[dag.dag_id] = dag
-        self._completed_fns[req.req_id] = set()
-        # arrival statistics feed the estimator for every constituent function
-        record = self.estimator.record_arrival
+        # DAG progress rides on the request (attribute load on the
+        # completion path instead of a per-request dict entry); single-
+        # function DAGs (the common classes) need no progress set — the
+        # shared immutable sentinel marks "completes on first invocation"
+        req.fns_done = set() if dag._n_fns > 1 else _SINGLE_FN
+        # arrival statistics feed the estimator for every constituent
+        # function (DemandEstimator.record_arrival hand-inlined: this loop
+        # runs once per invocation)
+        est_ = self.estimator
+        rates = est_._rates
         for f in dag.functions:
-            record(f.name, now)
-        self._ensure_ticking()
+            est = rates.get(f.name)
+            if est is None:
+                est = rates[f.name] = RateEstimator(est_.interval,
+                                                    est_.alpha)
+            if now - est._window_start >= est.interval:
+                est._roll(now)
+            est._count += 1
+        if not self._ticking:
+            self._ensure_ticking()
         queue = self._queue
+        roots = dag._roots
+        if not queue and len(roots) == 1 and self._free_cores > 0:
+            # bypass the heap: the queue is empty and this request's single
+            # root would be popped right back by _dispatch — start it
+            # directly (identical decision); a failed start queues the
+            # invocation exactly like a skipped pop would
+            root = roots[0]
+            inv = Invocation(request=req, fn=dag._fn_map[root],
+                             ready_time=now)
+            worker, sbx = self._choose_worker(inv, now)
+            if worker is not None and self._start(inv, worker, sbx, now):
+                return
+            rcp = dag._rcp[root]
+            _heappush(queue,
+                      (req.arrival_time + dag.deadline - rcp, rcp,
+                       inv.inv_id, inv))
+            return
         abs_deadline = req.arrival_time + dag.deadline
         rcp_map = dag._rcp
         fn_map = dag._fn_map
-        for root in dag._roots:
+        for root in roots:
             inv = Invocation(request=req, fn=fn_map[root], ready_time=now)
             rcp = rcp_map[root]
-            heapq.heappush(queue,
-                           ((abs_deadline - rcp, rcp, inv.inv_id), inv))
-        self._dispatch()
+            _heappush(queue, (abs_deadline - rcp, rcp, inv.inv_id, inv))
+        if self._free_cores > 0:    # inlined _dispatch entry gate
+            self._dispatch()
 
     def preallocate(self, dag: DagSpec, n_per_fn: int) -> None:
         """LBS-triggered warm-up during gradual scale-out (§5.2.3)."""
@@ -152,15 +203,19 @@ class SemiGlobalScheduler:
         pop = heapq.heappop
         choose = self._choose_worker
         start = self._start
-        skipped: List[Tuple[Tuple[float, float, int], Invocation]] = []
+        skipped: Optional[List[Tuple[float, float, int, Invocation]]] = None
         while queue and self._free_cores > 0:
             item = pop(queue)
-            inv = item[1]
-            worker, sbx = choose(inv, now)
-            if worker is None or not start(inv, worker, sbx, now):
-                skipped.append(item)
-        for item in skipped:
-            heapq.heappush(queue, item)
+            worker, sbx = choose(item[3], now)
+            if worker is None or not start(item[3], worker, sbx, now):
+                if skipped is None:
+                    skipped = [item]
+                else:
+                    skipped.append(item)
+        if skipped:
+            push = heapq.heappush
+            for item in skipped:
+                push(queue, item)
 
     def _choose_worker(self, inv: Invocation, now: float
                        ) -> Tuple[Optional[Worker], Optional[Sandbox]]:
@@ -178,45 +233,87 @@ class SemiGlobalScheduler:
         soft-revival / reactive-cold fallbacks with O(1) per-worker checks.
         """
         fn_name = inv.fn.name
+        # deliberate private-index access throughout: this is the hottest
+        # loop in the simulator and an accessor call per probe is measurable
         mgr = self.sandboxes
-        warm_best: Optional[Worker] = None
-        warm_best_count = -1
-        warm_sbx: Optional[Sandbox] = None
-        for w in mgr.idle_workers(fn_name):
-            if w.busy_cores >= w.cores:
-                continue
-            # deliberate private-index access: this is the hottest loop in
-            # the simulator and an accessor call per probe is measurable
-            b = w._buckets[fn_name]
-            if b.alloc:
-                # lazy ALLOCATING->WARM promotion can fire: full legacy probe
-                s = w.warm_available(fn_name, now)
-                if s is None:
-                    continue
+        fi = mgr._fns.get(fn_name)
+        if fi is not None:
+            if fi.n_alloc == 0:
+                # Fast path: no ALLOCATING sandbox of this function anywhere
+                # in the pool, so the legacy walk has no lazy-promotion side
+                # effects and its answer reduces to "most warm copies,
+                # earliest pool position, with a free core" — served from
+                # the lazy warm-candidate max-heap in O(log W) amortized.
+                # Entries are validated against the live warm count (and
+                # worker ownership) at pop; valid entries whose worker has
+                # no free core right now are re-pushed after the search.
+                heap = fi.warm_heap
+                stash = None
+                pick_w: Optional[Worker] = None
+                pick_s: Optional[Sandbox] = None
+                while heap:
+                    e = heap[0]
+                    w = e[2]
+                    warm = e[3].warm
+                    if len(warm) != -e[0]:
+                        _heappop(heap)              # stale count
+                        continue
+                    if w.busy_cores >= w.cores:
+                        _heappop(heap)              # valid but ineligible
+                        if stash is None:
+                            stash = [e]
+                        else:
+                            stash.append(e)
+                        continue
+                    pick_w = w
+                    pick_s = warm[0]
+                    break
+                if stash is not None:
+                    for e in stash:
+                        _heappush(heap, e)
+                if pick_w is not None:
+                    return pick_w, pick_s
             else:
-                # no ALLOCATING sandbox -> no promotion possible, and a WARM
-                # sandbox is always past its ready_at (time is monotone), so
-                # the probe reduces to the bucket head
-                warm = b.warm
-                if not warm:
-                    continue
-                s = warm[0]
-            # among warm candidates prefer the one with most warm copies
-            c = len(b.warm)
-            if c > warm_best_count:
-                warm_best, warm_best_count, warm_sbx = w, c, s
-        if warm_best is not None:
-            return warm_best, warm_sbx
-        revive = self.cfg.revive_on_dispatch and mgr.has_soft_workers(fn_name)
+                warm_best: Optional[Worker] = None
+                warm_best_count = -1
+                warm_sbx: Optional[Sandbox] = None
+                for _, w, b in fi.idle_sorted:
+                    if w.busy_cores >= w.cores:
+                        continue
+                    if b.alloc:
+                        # lazy ALLOCATING->WARM promotion can fire: full
+                        # legacy probe
+                        s = w.warm_available(fn_name, now)
+                        if s is None:
+                            continue
+                    else:
+                        # no ALLOCATING sandbox -> no promotion possible,
+                        # and a WARM sandbox is always past its ready_at
+                        # (time is monotone), so the probe reduces to the
+                        # bucket head
+                        warm = b.warm
+                        if not warm:
+                            continue
+                        s = warm[0]
+                    # among warm candidates prefer the one with most warm
+                    # copies
+                    c = len(b.warm)
+                    if c > warm_best_count:
+                        warm_best, warm_best_count, warm_sbx = w, c, s
+                if warm_best is not None:
+                    return warm_best, warm_sbx
+        revive = (self.cfg.revive_on_dispatch
+                  and fi is not None and bool(fi.soft))
         mem_mb = inv.fn.mem_mb
         cold_best: Optional[Worker] = None
         for w in self.workers:
-            if w.free_cores <= 0:
+            if w.busy_cores >= w.cores:
                 continue
             if revive and w.has_ready_soft(fn_name, now):
                 return w, None      # _start revives it instantly
-            if cold_best is None and (w.free_pool_mem >= mem_mb
-                                      or w.has_non_busy_sandbox()):
+            if cold_best is None and (w.pool_mem_mb - w._used_pool_mem
+                                      >= mem_mb
+                                      or len(w._sandboxes) > w._n_busy):
                 if not revive:
                     return w, None  # nothing revivable anywhere: first fit
                 cold_best = w
@@ -271,23 +368,48 @@ class SemiGlobalScheduler:
             sbx.state = SandboxState.BUSY
         else:
             self.n_warm_hits += 1
-            # warm hit: fused WARM->BUSY transition (the dominant case)
-            self.sandboxes.mark_busy(w, sbx)
+            # warm hit: fused WARM->BUSY transition (the dominant case).
+            # Hand-inlined SandboxManager.mark_busy — that method is the
+            # reference implementation; any change there must land here too
+            # (tests/test_equivalence.py pins the shared behavior).
+            mgr = self.sandboxes
+            name = sbx.fn.name
+            b = w._buckets[name]
+            warm = b.warm
+            warm.remove(sbx)
+            b.busy_n += 1
+            w._n_busy += 1
+            sbx._state = _BUSY_ST
+            fi = mgr._fns[name]
+            if warm:
+                heap = fi.warm_heap
+                _heappush(heap, (-len(warm), w.pool_index, w, b))
+                if len(heap) > mgr.heap_cap:
+                    mgr._compact_warm(name, fi)
+            elif not b.alloc:
+                if w in fi.idle:
+                    fi.idle.remove(w)
+                    fi.idle_sorted.remove((w.pool_index, w, b))
         sbx.last_used = now
         inv.start_time = now
         qdelay = now - inv.ready_time
         self.queuing_delays.append(qdelay)
         self.queuing_delay_times.append(now)
-        inv.request.total_queuing_delay += qdelay
+        req = inv.request
+        req.total_queuing_delay += qdelay
         w.busy_cores += 1
         self._free_cores -= 1
 
         # piggyback queuing delay + per-DAG sandbox count to the LBS (§5.2.1)
         if self.report is not None:
-            self.report(inv.request.dag.dag_id, self.sgs_id, qdelay,
-                        self.proactive_sandbox_count(inv.request.dag.dag_id))
+            dag_id = req.dag.dag_id
+            self.report(dag_id, self.sgs_id, qdelay,
+                        self.proactive_sandbox_count(dag_id))
 
-        self._inflight.setdefault(w.worker_id, []).append(inv)
+        inflight = self._inflight.get(w.worker_id)
+        if inflight is None:
+            inflight = self._inflight[w.worker_id] = {}
+        inflight[inv.inv_id] = inv
         if self.backend_submit is not None:
             # asynchronous seam: hand the invocation to the data plane and
             # keep scheduling — the backend (possibly batching it with other
@@ -316,26 +438,60 @@ class SemiGlobalScheduler:
         if w.worker_id in self._dead_workers:
             return      # fail-stop: this execution was lost and retried
         inflight = self._inflight.get(w.worker_id)
-        if inflight is not None and inv in inflight:
-            inflight.remove(inv)
+        if inflight is not None:
+            inflight.pop(inv.inv_id, None)
         w.busy_cores -= 1
         self._free_cores += 1
-        # fused BUSY->WARM transition (every completion takes it)
-        self.sandboxes.mark_warm(w, sbx)
+        # fused BUSY->WARM transition (every completion takes it).
+        # Hand-inlined SandboxManager.mark_warm — that method is the
+        # reference implementation; any change there must land here too
+        # (tests/test_equivalence.py pins the shared behavior).
+        mgr = self.sandboxes
+        name = inv.fn.name
+        b = w._buckets[name]
+        _insort(b.warm, sbx, key=_sbx_sort_key)
+        b.busy_n -= 1
+        w._n_busy -= 1
+        sbx._state = _WARM_ST
+        fi = mgr._fns[name]
+        cap = mgr.heap_cap
+        if w not in fi.idle:
+            fi.idle.add(w)
+            _insort(fi.idle_sorted, (w.pool_index, w, b))
+        heap = fi.warm_heap
+        _heappush(heap, (-len(b.warm), w.pool_index, w, b))
+        if len(heap) > cap:
+            mgr._compact_warm(name, fi)
+        c = len(b.alloc) + len(b.warm) + b.busy_n
+        if b.evict_pushed != c:
+            b.evict_pushed = c
+            heap = fi.evict_heap
+            _heappush(heap, mgr._evict_key(c, w.worker_id))
+            if len(heap) > cap:
+                mgr._compact(name, heap, mgr._evict_key)
         if sbx.ready_at > now:
             sbx.ready_at = now
         sbx.last_used = now
         req = inv.request
-        done = self._completed_fns.get(req.req_id)
+        done = req.fns_done
         if done is None:        # request finished elsewhere (defensive)
-            self._dispatch()
+            if self._queue and self._free_cores > 0:
+                self._dispatch()
             return
-        done.add(inv.fn.name)
         dag = req.dag
-        if len(done) == len(dag.functions):
+        if done is _SINGLE_FN:
+            finished = True
+        else:
+            done.add(inv.fn.name)
+            finished = len(done) == dag._n_fns
+        if finished:
             req.completion_time = now
-            self.completed_requests.append(req)
-            del self._completed_fns[req.req_id]
+            req.fns_done = None
+            rec = self.on_complete
+            if rec is not None:
+                rec(req, now)
+            else:
+                self.completed_requests.append(req)
         else:
             # DAG awareness: release children whose parents all completed
             abs_deadline = req.arrival_time + dag.deadline
@@ -344,10 +500,11 @@ class SemiGlobalScheduler:
                     cinv = Invocation(request=req, fn=dag._fn_map[child],
                                       ready_time=now)
                     rcp = dag._rcp[child]
-                    heapq.heappush(self._queue,
-                                   ((abs_deadline - rcp, rcp, cinv.inv_id),
-                                    cinv))
-        self._dispatch()
+                    _heappush(self._queue,
+                              (abs_deadline - rcp, rcp, cinv.inv_id,
+                               cinv))
+        if self._queue and self._free_cores > 0:    # inlined dispatch gate
+            self._dispatch()
 
     # ----------------------------------------------------------- estimation
     def _ensure_ticking(self) -> None:
@@ -377,11 +534,22 @@ class SemiGlobalScheduler:
         return len(self._queue)
 
     def proactive_sandbox_count(self, dag_id: str) -> int:
-        dag = self._dags.get(dag_id)
-        if dag is None:
-            return 0
-        mgr = self.sandboxes
+        # per-dispatch piggyback path: read the per-function schedulable
+        # totals straight off the manager indices (= total_sandboxes, O(1)).
+        # The _FnIndex objects are stable once created, so the per-dag list
+        # is resolved once and reused.
+        fis = self._dag_fis.get(dag_id)
+        if fis is None:
+            dag = self._dags.get(dag_id)
+            if dag is None:
+                return 0
+            mgr = self.sandboxes
+            fis = self._dag_fis[dag_id] = [
+                mgr._fns.get(f.name) or mgr._ensure_fn(f.name)
+                for f in dag.functions]
+        if len(fis) == 1:       # single-function DAGs: the dominant case
+            return fis[0].total
         total = 0
-        for f in dag.functions:    # total_sandboxes is O(1) post-refactor
-            total += mgr.total_sandboxes(f.name)
+        for fi in fis:
+            total += fi.total
         return total

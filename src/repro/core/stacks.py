@@ -95,6 +95,12 @@ class Stack(Protocol):
     def collect(self, metrics: "Metrics") -> None: ...
     def counters(self) -> Dict[str, int]: ...
 
+    # Optional: wire the run's flat metrics plane into every scheduler's
+    # ``on_complete`` hook (``Metrics.record_completion``) and return True.
+    # Stacks without it — or whose schedulers lack the hook — make the pump
+    # fall back to the legacy per-object request list.
+    # def attach_metrics(self, metrics: "Metrics") -> bool: ...
+
 
 _STACKS: Dict[str, Type] = {}
 
@@ -160,21 +166,31 @@ class ArchipelagoStack:
         if type(self).submit is ArchipelagoStack.submit:
             # hot path: close over locals so the pump pays zero attribute
             # lookups per arrival (same constants as the pre-registry driver)
-            lb_clocks = self._lb_clocks
             sgs_clocks = self._sgs_clocks
             select = self.lbs.select
             call_at = env.call_at
             lb_cost = exp.lb_cost
             sgs_cost = exp.sgs_cost
-            nxt = itertools.count().__next__
+            # round-robin over the LB replicas without a counter/modulo
+            next_lb_clock = itertools.cycle(self._lb_clocks).__next__
 
             def submit(req: Request, now: float) -> None:
-                # hop 1: LBS routing decision (a scalable service: many LBs)
-                t_routed = lb_clocks[nxt() % n_lb].acquire(now, lb_cost)
+                # hop 1: LBS routing decision (a scalable service: many
+                # LBs).  Both clock acquires are hand-inlined M/D/1 waits
+                # (identical arithmetic to _ServiceClock.acquire).
+                c = next_lb_clock()
+                t = c.busy_until
+                if now > t:
+                    t = now
+                c.busy_until = t_routed = t + lb_cost
                 sgs = select(req, now)
                 # hop 2: SGS scheduling decision, serialized per SGS
-                t_sched = sgs_clocks[sgs.sgs_id].acquire(
-                    t_routed, sgs_cost * len(req.dag.functions))
+                c = sgs_clocks[sgs.sgs_id]
+                t = c.busy_until
+                if t_routed > t:
+                    t = t_routed
+                c.busy_until = t_sched = \
+                    t + sgs_cost * req.dag._n_fns
                 call_at(t_sched, sgs.submit_request, req)
 
             self.submit = submit
@@ -199,10 +215,16 @@ class ArchipelagoStack:
                   lambda: lbs.check_scaling(env.now()),
                   until=self.spec.duration + self.exp.drain)
 
+    def attach_metrics(self, metrics: "Metrics") -> bool:
+        rec = metrics.completion_recorder()
+        for s in self.lbs.sgss.values():
+            s.on_complete = rec
+        return True
+
     def collect(self, metrics: "Metrics") -> None:
         for s in self.lbs.sgss.values():
-            metrics.queuing_delays.extend(s.queuing_delays)
-            metrics.queuing_delay_times.extend(s.queuing_delay_times)
+            metrics.add_queuing_samples(s.queuing_delays,
+                                        s.queuing_delay_times)
 
     def counters(self) -> Dict[str, int]:
         sgss = self.lbs.sgss.values()
@@ -238,15 +260,19 @@ class FlatWorkerStack:
             self.scheduler.execute = backend.execute
         self._clock = _ServiceClock()
         if type(self).submit is FlatWorkerStack.submit:
-            # hot path: same closure-over-locals trick as ArchipelagoStack
-            acquire = self._clock.acquire
+            # hot path: same closure-over-locals trick as ArchipelagoStack,
+            # with the M/D/1 clock acquire hand-inlined
+            clock = self._clock
             call_at = env.call_at
             submit_request = self.scheduler.submit_request
             sgs_cost = exp.sgs_cost
 
             def submit(req: Request, now: float) -> None:
-                call_at(acquire(now, sgs_cost * len(req.dag.functions)),
-                        submit_request, req)
+                t = clock.busy_until
+                if now > t:
+                    t = now
+                clock.busy_until = t = t + sgs_cost * req.dag._n_fns
+                call_at(t, submit_request, req)
 
             self.submit = submit
 
@@ -262,10 +288,16 @@ class FlatWorkerStack:
     def start_background(self) -> None:
         pass
 
+    def attach_metrics(self, metrics: "Metrics") -> bool:
+        # custom make_scheduler results may predate the hook: fall back
+        if not hasattr(self.scheduler, "on_complete"):
+            return False
+        self.scheduler.on_complete = metrics.completion_recorder()
+        return True
+
     def collect(self, metrics: "Metrics") -> None:
-        metrics.queuing_delays.extend(self.scheduler.queuing_delays)
-        metrics.queuing_delay_times.extend(
-            self.scheduler.queuing_delay_times)
+        metrics.add_queuing_samples(self.scheduler.queuing_delays,
+                                    self.scheduler.queuing_delay_times)
 
     def counters(self) -> Dict[str, int]:
         return {"cold_starts": self.scheduler.n_cold_starts,

@@ -68,6 +68,7 @@ class DagSpec:
             parents[v].append(u)
             children[u].append(v)
         object.__setattr__(self, "_fn_map", fn_map)
+        object.__setattr__(self, "_n_fns", len(self.functions))
         object.__setattr__(self, "_parents", parents)
         object.__setattr__(self, "_children", children)
         object.__setattr__(self, "_roots",
@@ -158,12 +159,21 @@ class Request:
 
     dag: DagSpec
     arrival_time: float
-    req_id: int = field(default_factory=lambda: next(_req_counter))
+    req_id: int = field(default_factory=_req_counter.__next__)
     completion_time: Optional[float] = None
     # bookkeeping
     n_cold_starts: int = 0
     total_queuing_delay: float = 0.0
     sgs_id: Optional[int] = None   # which SGS served it (set by LBS routing)
+    # row index in the run's flat metrics columns (``repro.sim.metrics``);
+    # -1 outside column-recording runs
+    m_idx: int = -1
+    # DAG-progress state owned by the serving scheduler (the set of
+    # completed function names; a shared sentinel for single-function DAGs;
+    # None once the request finished or before it was accepted) — carried on
+    # the request so the completion hot path pays an attribute load instead
+    # of a per-request dict entry
+    fns_done: Optional[object] = None
 
     @property
     def abs_deadline(self) -> float:
@@ -190,7 +200,7 @@ class Invocation:
     request: Request
     fn: FunctionSpec
     ready_time: float                       # when dependencies were met
-    inv_id: int = field(default_factory=lambda: next(_inv_counter))
+    inv_id: int = field(default_factory=_inv_counter.__next__)
     start_time: Optional[float] = None
     cold_start: bool = False
 

@@ -12,6 +12,7 @@ class SimEnv:
     def __init__(self):
         self._now = 0.0
         self._seq = itertools.count()
+        self._seq_next = self._seq.__next__
         self._events: List[Tuple[float, int, Callable[[], None]]] = []
         self.n_events = 0
 
@@ -23,31 +24,47 @@ class SimEnv:
                    *args) -> None:
         """Defer ``fn(*args)``; passing args directly (rather than closing
         over them) avoids a closure allocation per scheduled event on the
-        simulation hot path."""
-        self.call_at(self._now + max(0.0, delay), fn, *args)
+        simulation hot path.  The push is hand-inlined (this is the single
+        most-called scheduling entry point): ``t >= now`` holds by
+        construction, so ``call_at``'s past-check is unnecessary."""
+        now = self._now
+        t = now + delay
+        if t < now:                 # negative delay clamps to "immediately"
+            t = now
+        heapq.heappush(self._events, (t, self._seq_next(), fn, args))
 
     def call_at(self, t: float, fn: Callable[..., None], *args) -> None:
         if t < self._now - 1e-12:
             raise ValueError(f"cannot schedule in the past: {t} < {self._now}")
-        heapq.heappush(self._events, (t, next(self._seq), fn, args))
+        heapq.heappush(self._events, (t, self._seq_next(), fn, args))
 
     # -- driving -----------------------------------------------------------------
     def run_until(self, t_end: float) -> None:
         events = self._events
-        while events and events[0][0] <= t_end:
-            t, _, fn, args = heapq.heappop(events)
-            self._now = t
-            self.n_events += 1
-            fn(*args)
+        pop = heapq.heappop
+        n = 0
+        try:
+            while events and events[0][0] <= t_end:
+                t, _, fn, args = pop(events)
+                self._now = t
+                n += 1
+                fn(*args)
+        finally:
+            self.n_events += n
         self._now = max(self._now, t_end)
 
     def run(self) -> None:
         events = self._events
-        while events:
-            t, _, fn, args = heapq.heappop(events)
-            self._now = t
-            self.n_events += 1
-            fn(*args)
+        pop = heapq.heappop
+        n = 0
+        try:
+            while events:
+                t, _, fn, args = pop(events)
+                self._now = t
+                n += 1
+                fn(*args)
+        finally:
+            self.n_events += n
 
     def every(self, interval: float, fn: Callable[[], None],
               until: float = float("inf")) -> None:

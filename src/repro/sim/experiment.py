@@ -30,6 +30,8 @@ import dataclasses
 import itertools
 import math
 import time
+
+import numpy as np
 from dataclasses import dataclass, field
 from typing import (Any, Callable, Dict, List, Mapping, Optional, Sequence,
                     Tuple, Union)
@@ -193,13 +195,15 @@ _PCTS: Tuple[Tuple[str, float], ...] = (
 
 def _pct_dict(xs: Sequence[float]) -> Dict[str, Optional[float]]:
     """Nearest-rank percentiles (same rule as ``metrics.percentile``), one
-    sort for all requested ranks — this runs on ~1e5-sample lists per
-    ``simulate`` call."""
-    if not xs:
+    vectorized sort for all requested ranks — this runs on ~1e6-sample
+    arrays per ``simulate`` call (flat metrics hand numpy arrays straight
+    through; lists are converted once)."""
+    n = len(xs)
+    if n == 0:
         return {k: None for k, _ in _PCTS}
-    s = sorted(xs)
-    n1 = len(s) - 1
-    return {k: s[max(0, min(n1, int(round(p / 100.0 * n1))))]
+    s = np.sort(np.asarray(xs, dtype=np.float64))
+    n1 = n - 1
+    return {k: float(s[max(0, min(n1, int(round(p / 100.0 * n1))))])
             for k, p in _PCTS}
 
 
@@ -273,6 +277,17 @@ class ExperimentResult:
                           for k, v in sorted(self.per_class.items())}
         return d
 
+    def detach_sim(self) -> "ExperimentResult":
+        """Drop the live simulation handle (``sim``: metrics columns, event
+        loop, scheduler objects).  After detaching, the result is a plain
+        record — everything left round-trips losslessly through
+        ``to_dict``/``from_dict`` and pickles across process boundaries,
+        which is what lets ``run_sweep`` farm cells to worker processes.
+        ``run_sweep`` detaches every cell unless ``keep_sim=True``.
+        Returns self for chaining."""
+        self.sim = None
+        return self
+
     @classmethod
     def from_dict(cls, d: Mapping[str, Any]) -> "ExperimentResult":
         kw = dict(d)
@@ -283,14 +298,17 @@ class ExperimentResult:
 
 def _build_result(exp: Experiment, spec: WorkloadSpec, sim: SimResult,
                   warm_hits: int, wall_s: float) -> ExperimentResult:
+    # one code path for both metrics modes: flat (column) metrics serve
+    # ``latencies``/``n_requests``/``by_class`` as vectorized views, the
+    # legacy object mode scans its request list exactly as before
     m = sim.metrics.after_warmup(exp.warmup) if exp.warmup > 0 \
         else sim.metrics
     per_class = {}
     for cls_name, cm in m.by_class().items():
         pcts = _pct_dict(cm.latencies())
         per_class[cls_name] = ClassStats(
-            n_requests=len(cm.requests),
-            n_completed=len(cm.completed),
+            n_requests=cm.n_requests,
+            n_completed=cm.n_completed,
             p50=pcts["p50"],
             p99=pcts["p99"],
             deadline_met_frac=_none_if_nan(cm.deadline_met_frac()),
@@ -301,9 +319,9 @@ def _build_result(exp: Experiment, spec: WorkloadSpec, sim: SimResult,
         seed=exp.seed,
         duration=spec.duration,
         warmup=exp.warmup,
-        n_requests_total=len(sim.metrics.requests),
-        n_requests=len(m.requests),
-        n_completed=len(m.completed),
+        n_requests_total=sim.metrics.n_requests,
+        n_requests=m.n_requests,
+        n_completed=m.n_completed,
         latency_percentiles=_pct_dict(m.latencies()),
         queuing_percentiles=_pct_dict(m.queuing_delays),
         deadline_met_frac=_none_if_nan(m.deadline_met_frac()),
@@ -329,14 +347,38 @@ def _arrival_stream(spec: WorkloadSpec, seed: int, method: str
 
     The vectorized path never materializes per-arrival tuples; numpy floats
     are converted once (``tolist`` round-trips float64 exactly)."""
+    times, dags, _, _, _ = _arrival_columns(spec, seed, method)
+    return times, dags
+
+
+def _arrival_columns(spec: WorkloadSpec, seed: int, method: str
+                     ) -> Tuple[List[float], List[DagSpec], np.ndarray,
+                                np.ndarray, List[DagSpec]]:
+    """``_arrival_stream`` plus the raw arrival columns the flat metrics
+    plane attaches wholesale: (times, per-arrival dags, time array,
+    per-arrival tenant-dag index array, tenant dag list)."""
     if method == "legacy":
         pairs = spec.generate(seed, method="legacy")
-        return [t for t, _ in pairs], [d for _, d in pairs]
+        times = [t for t, _ in pairs]
+        dags = [d for _, d in pairs]
+        # rebuild the tenant index from object identity (the legacy
+        # generator hands per-arrival DAG objects, one per tenant)
+        tenant_dags: List[DagSpec] = []
+        by_id: Dict[int, int] = {}
+        idx = []
+        for d in dags:
+            k = by_id.get(id(d))
+            if k is None:
+                k = by_id[id(d)] = len(tenant_dags)
+                tenant_dags.append(d)
+            idx.append(k)
+        return (times, dags, np.asarray(times, dtype=np.float64),
+                np.asarray(idx, dtype=np.int64), tenant_dags)
     if method != "numpy":
         raise ValueError(f"unknown generation method {method!r}")
-    ts, idx, tenant_dags = spec.generate_arrays(seed)
-    dags = list(map(tenant_dags.__getitem__, idx.tolist()))
-    return ts.tolist(), dags
+    ts, idx_arr, tenant_dags = spec.generate_arrays(seed)
+    dags = list(map(tenant_dags.__getitem__, idx_arr.tolist()))
+    return ts.tolist(), dags, ts, idx_arr, tenant_dags
 
 
 Hook = Callable[[SimEnv, Stack], None]
@@ -384,27 +426,54 @@ def _run_experiment(exp: Experiment,
     pre_pump = getattr(spec, "pre_pump", None)
     if pre_pump is not None:
         pre_pump(env, stack)
-    metrics = Metrics()
     # snapshot data-plane counters so the reported view is this run's delta
     # (a shared backend instance accumulates across sweep cells)
     counters_before = dict(backend.counters())
 
     t0 = time.perf_counter()
-    times, dags = _arrival_stream(spec, exp.seed, exp.workload_method)
+    times, dags, arr_np, idx_np, tenant_dags = _arrival_columns(
+        spec, exp.seed, exp.workload_method)
+    # flat metrics plane: arrival columns attach wholesale, schedulers
+    # record completions straight into column buffers and release the
+    # Request objects.  Stacks that cannot wire the completion hook (custom
+    # schedulers predating it) fall back to the legacy per-object list.
+    flat = Metrics.flat(arr_np, idx_np, tenant_dags)
+    attach = getattr(stack, "attach_metrics", None)
+    if attach is not None and attach(flat):
+        metrics = flat
+        pending = flat._cols.pending
+        requests = None
+    else:
+        metrics = Metrics()
+        pending = None
+        requests = metrics.requests
     n = len(times)
-    requests = metrics.requests
     submit = stack.submit
 
-    def pump(i: int) -> None:
-        # fire arrival i, then lazily schedule arrival i+1: the event heap
-        # holds at most one pending arrival instead of the whole trace
-        now = env.now()
-        req = Request(dag=dags[i], arrival_time=now)
-        requests.append(req)
-        submit(req, now)
-        i += 1
-        if i < n:
-            env.call_at(times[i], pump, i)
+    # arrival i fires exactly at times[i] (the event heap is driven by the
+    # same float), so the pump reads the clock off the trace instead of
+    # calling env.now() per arrival
+    if pending is not None:
+        def pump(i: int) -> None:
+            # fire arrival i, then lazily schedule arrival i+1: the event
+            # heap holds one pending arrival instead of the whole trace
+            now = times[i]
+            req = Request(dag=dags[i], arrival_time=now)
+            req.m_idx = i
+            pending[i] = req
+            submit(req, now)
+            i += 1
+            if i < n:
+                env.call_at(times[i], pump, i)
+    else:
+        def pump(i: int) -> None:
+            now = times[i]
+            req = Request(dag=dags[i], arrival_time=now)
+            requests.append(req)
+            submit(req, now)
+            i += 1
+            if i < n:
+                env.call_at(times[i], pump, i)
 
     if n:
         env.call_at(times[0], pump, 0)
@@ -490,26 +559,78 @@ class SweepResult:
         return [ExperimentResult.from_dict(r["result"]) for r in self.rows]
 
 
-def run_sweep(base: Experiment, axes: Mapping[str, Sequence[Any]],
-              keep_sim: bool = False) -> SweepResult:
-    """Cartesian sweep over ``axes`` (axis name → values; names follow
-    ``_override``'s dotted-path rules) starting from ``base``.  With
-    ``keep_sim`` the live per-cell results (including ``.sim``) are retained
-    on ``SweepResult.experiment_results`` for bespoke analysis."""
+def _expand_cells(base: Experiment, axes: Mapping[str, Sequence[Any]]
+                  ) -> List[Tuple[Dict[str, Any], Experiment]]:
+    """The sweep grid in cartesian-product order (first axis slowest):
+    [(cell dict, fully-overridden Experiment), ...]."""
     names = list(axes)
-    rows: List[Dict[str, Any]] = []
-    objs: List[ExperimentResult] = []
+    cells: List[Tuple[Dict[str, Any], Experiment]] = []
     for combo in itertools.product(*(list(axes[k]) for k in names)):
         exp = base
         cell: Dict[str, Any] = {}
         for k, v in zip(names, combo):
             exp = _override(exp, k, v)
             cell[k] = v
-        res = simulate(exp)
-        rows.append({"cell": cell, "result": res.to_dict()})
-        if keep_sim:
-            objs.append(res)
-        else:
-            res.sim = None
+        cells.append((cell, exp))
+    return cells
+
+
+def _run_cell(exp: Experiment) -> Dict[str, Any]:
+    """Worker-process entry point: one fresh simulation, serialized through
+    the lossless ``to_dict`` round-trip (the live ``sim`` handle never
+    crosses the process boundary)."""
+    return simulate(exp).detach_sim().to_dict()
+
+
+def run_sweep(base: Experiment, axes: Mapping[str, Sequence[Any]],
+              keep_sim: bool = False, workers: int = 1) -> SweepResult:
+    """Cartesian sweep over ``axes`` (axis name → values; names follow
+    ``_override``'s dotted-path rules) starting from ``base``.
+
+    ``workers=N`` (N > 1) farms the cells to a spawn-context process pool.
+    Every cell is an independent fresh simulation with per-cell seeding, so
+    rows come back in the same deterministic cartesian order with payloads
+    identical to sequential execution (``wall_s``, the one wall-clock
+    timing field, is the only value that can differ between runs at all —
+    parallel or not).  Parallel execution requires the per-cell
+    ``Experiment``s to pickle: use *named* workload factories and *named*
+    backends; a base experiment carrying live objects (a shared
+    ``ExecutionBackend`` instance, a spec with closure hooks) falls back to
+    sequential execution with a warning.  ``keep_sim=True`` retains the
+    live per-cell results (including ``.sim``) on
+    ``SweepResult.experiment_results`` for bespoke analysis and therefore
+    always runs sequentially in-process."""
+    cells = _expand_cells(base, axes)
+    rows: List[Dict[str, Any]] = []
+    objs: List[ExperimentResult] = []
+    use_pool = workers > 1 and not keep_sim and len(cells) > 1
+    if use_pool:
+        import pickle
+        try:
+            pickle.dumps([exp for _, exp in cells])
+        except Exception as e:
+            import warnings
+            warnings.warn(
+                f"run_sweep(workers={workers}): cells are not picklable "
+                f"({e!r}); falling back to sequential execution",
+                RuntimeWarning, stacklevel=2)
+            use_pool = False
+    if use_pool:
+        import multiprocessing
+        ctx = multiprocessing.get_context("spawn")
+        with ctx.Pool(min(workers, len(cells))) as pool:
+            results = pool.map(_run_cell, [exp for _, exp in cells])
+        rows = [{"cell": cell, "result": d}
+                for (cell, _), d in zip(cells, results)]
+    else:
+        for cell, exp in cells:
+            res = simulate(exp)
+            rows.append({"cell": cell, "result": res.to_dict()})
+            if keep_sim:
+                objs.append(res)
+            else:
+                # explicit detach: frees the event loop/metrics columns and
+                # keeps the appended row the single serializable source
+                res.detach_sim()
     return SweepResult(axes={k: list(v) for k, v in axes.items()}, rows=rows,
                        experiment_results=objs if keep_sim else None)

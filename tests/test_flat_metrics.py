@@ -1,0 +1,129 @@
+"""Flat (column-recording) metrics plane (PR 5): the simulate pump records
+into numpy columns, yet every statistic and the compatibility ``requests``
+view must match the legacy per-object accounting bit-for-bit."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.types import DagSpec, FunctionSpec, Request
+from repro.sim import Experiment, Metrics, simulate
+from repro.sim.metrics import summarize
+
+
+def _run(stack="archipelago", warmup=0.0, **wl):
+    wl = dict(dict(duration=2.5, scale=0.04, dags_per_class=2), **wl)
+    return simulate(Experiment(stack=stack, workload_factory="paper_workload_1",
+                               workload_kwargs=wl, warmup=warmup, drain=4.0))
+
+
+def _legacy_copy(m):
+    """Rebuild a legacy object-mode Metrics from the flat one's
+    compatibility view."""
+    return Metrics(requests=list(m.requests),
+                   queuing_delays=list(m.queuing_delays),
+                   queuing_delay_times=list(m.queuing_delay_times))
+
+
+@pytest.mark.parametrize("stack", ["archipelago", "fifo", "sparrow", "pull"])
+def test_simulate_uses_flat_mode_for_every_builtin_stack(stack):
+    res = _run(stack=stack)
+    assert res.sim.metrics.is_flat
+    assert res.n_completed > 0
+
+
+def test_flat_statistics_match_legacy_object_scan():
+    m = _run().sim.metrics
+    leg = _legacy_copy(m)
+    assert m.n_requests == len(leg.requests)
+    assert m.n_completed == len(leg.completed)
+    assert list(m.sorted_latencies()) == leg.sorted_latencies()
+    assert m.latency_pct(99) == leg.latency_pct(99)
+    assert m.deadline_met_frac() == leg.deadline_met_frac()
+    assert m.cold_start_count() == leg.cold_start_count()
+    assert m.cold_start_frac() == leg.cold_start_frac()
+    assert summarize("x", m) == summarize("x", leg)
+
+
+def test_flat_after_warmup_matches_legacy_filtering():
+    m = _run(warmup=0.0).sim.metrics
+    w = m.after_warmup(1.0)
+    leg = _legacy_copy(m).after_warmup(1.0)
+    assert w.is_flat                        # zero-copy view, same columns
+    assert w._cols is m._cols
+    assert w.n_requests == len(leg.requests)
+    assert w.n_completed == len(leg.completed)
+    assert list(w.sorted_latencies()) == leg.sorted_latencies()
+    assert w.deadline_met_frac() == leg.deadline_met_frac()
+    assert list(w.queuing_delays) == leg.queuing_delays
+    assert list(w.queuing_delay_times) == leg.queuing_delay_times
+    assert all(t >= 1.0 for t in w.queuing_delay_times)
+
+
+def test_flat_by_class_matches_legacy_views():
+    m = _run().sim.metrics
+    flat_cls = m.by_class()
+    leg_cls = _legacy_copy(m).by_class()
+    assert set(flat_cls) == set(leg_cls)
+    for name in flat_cls:
+        f, l = flat_cls[name], leg_cls[name]
+        assert f.n_requests == len(l.requests)
+        assert f.n_completed == len(l.completed)
+        assert list(f.sorted_latencies()) == l.sorted_latencies()
+        assert f.cold_start_count() == l.cold_start_count()
+
+
+def test_compatibility_requests_view_is_bit_identical():
+    """Materialized Request objects must carry the exact recorded floats
+    (the equivalence fingerprints hash float bits off this view)."""
+    m = _run().sim.metrics
+    reqs = m.requests
+    arr = m._cols.arrival
+    assert len(reqs) == len(arr)
+    for i, r in enumerate(reqs):
+        assert isinstance(r, Request)
+        assert r.arrival_time == arr[i]     # exact float round-trip
+        assert r.completion_time is None or isinstance(r.completion_time,
+                                                       float)
+    # arrival order is non-decreasing (the column is the sorted trace)
+    ts = [r.arrival_time for r in reqs]
+    assert ts == sorted(ts)
+
+
+def test_incomplete_requests_stay_live_and_exact():
+    """Requests still in flight at the end of the run come back as the
+    actual live objects (accurate partial state), and completed rows free
+    their objects."""
+    dag = DagSpec("slow-0", (FunctionSpec("slow-0/f", 5.0),), (),
+                  deadline=10.0)
+    from repro.sim.workload import ConstantRate, WorkloadSpec
+    spec = WorkloadSpec([(dag, ConstantRate(2.0))], duration=1.0)
+    res = simulate(Experiment(workload=spec, drain=0.5))  # exec outlives run
+    m = res.sim.metrics
+    assert m.n_completed == 0
+    assert len(m._cols.pending) == m.n_requests > 0
+    for r in m.requests:
+        assert r.completion_time is None
+        assert math.isnan(np.float64("nan")) or True
+    assert math.isnan(m.deadline_met_frac())
+
+
+def test_completed_requests_release_objects():
+    res = _run()
+    m = res.sim.metrics
+    assert len(m._cols.pending) == 0        # everything drained
+    assert m.n_completed == m.n_requests
+
+
+def test_legacy_constructor_unchanged():
+    """Direct Metrics construction (tests, fig_fault) keeps full object-mode
+    semantics including post-append mutation visibility."""
+    dag = DagSpec("d-0", (FunctionSpec("d-0/f", 0.1),), (), deadline=1.0)
+    m = Metrics()
+    assert not m.is_flat
+    r = Request(dag=dag, arrival_time=0.0)
+    m.requests.append(r)
+    assert m.n_completed == 0
+    r.completion_time = 0.2
+    assert m.n_completed == 1
+    assert m.latency_pct(50) == pytest.approx(0.2)
