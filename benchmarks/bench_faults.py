@@ -1,0 +1,237 @@
+"""Chaos benchmark: fault plans as a sweep axis (docs/FAULTS.md).
+
+Two tracked tiers, mirroring ``bench_sim_throughput``:
+
+* ``std`` — a chaos sweep on the 200-worker cluster (8 SGSs x 25): crash
+  storms, sustained Poisson crash rates, and SGS fail-stop x scheduler
+  stacks (archipelago / fifo / sparrow).  ``faults`` is a literal
+  ``run_sweep`` axis — each cell is one ``FaultPlan``.
+* ``xl`` — one 2,000-worker (80 SGSs x 25) cell under a composite plan
+  firing every built-in fault shape at staggered times (crash storm at
+  T/4, SGS fail-stop at 2T/4, mass eviction at 3T/4, a control-plane
+  stall between), reporting deadline-met and per-fault time-to-recovery.
+
+Reported per cell: deadline-met fraction, completion accounting
+(completed == arrivals — retries re-drive every lost execution), retry
+count, and the windowed recovery report (baseline deadline-met, worst
+post-fault window, time until back within tolerance — ``Metrics.window``
+zero-copy views; see docs/FAULTS.md "Recovery metrics").
+
+Results go to ``BENCH_faults.json`` at the repo root (tracked); ``--smoke``
+runs trimmed std cells only and writes ``BENCH_faults.partial.json``
+(gitignored) so CI never clobbers the tracked trajectory.
+
+Run:
+    python -m benchmarks.bench_faults [--smoke] [--tier std|xl|all]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+from pathlib import Path
+from typing import Dict, Optional
+
+try:
+    import repro  # noqa: F401
+except ImportError:                                     # pragma: no cover
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core.cluster import ClusterConfig
+from repro.core.fault import (FaultPlan, control_plane_delay, mass_eviction,
+                              sgs_failstop, worker_crash)
+from repro.sim.experiment import Experiment, run_sweep, simulate
+
+CLUSTERS = {
+    "std": dict(n_sgs=8, workers_per_sgs=25, cores_per_worker=20,
+                pool_mem_mb=65536.0),
+    # 2,000 workers: 80 rack-sized SGS pools of 25 machines
+    "xl": dict(n_sgs=80, workers_per_sgs=25, cores_per_worker=20,
+               pool_mem_mb=65536.0),
+}
+
+# see bench_sim_throughput: the routing tier scales with the cluster
+XL_PARAMS = {"n_lbs": 16}
+
+STACKS = ["archipelago", "fifo", "sparrow"]
+
+
+def std_plans(duration: float) -> Dict[str, Optional[FaultPlan]]:
+    """The std-tier chaos axis: one plan per fault shape plus the no-fault
+    baseline every chaos cell is compared against."""
+    t1 = round(duration / 3.0, 3)
+    return {
+        "none": None,
+        # 10 workers (5% of the pool) fail-stop at once
+        "crash_storm": FaultPlan(
+            events=(worker_crash(k=10, at=t1),), seed=0, name="crash_storm"),
+        # sustained attrition: ~1 crash every 2 s for the whole run
+        "crash_rate": FaultPlan(
+            events=(worker_crash(k=1, rate=0.5, start=1.0),), seed=0,
+            name="crash_rate"),
+        # one scheduler process dies; replacement restores from the store
+        # (recorded-but-skipped on the flat baseline stacks)
+        "sgs_failstop": FaultPlan(
+            events=(sgs_failstop(at=t1),), seed=0, name="sgs_failstop"),
+    }
+
+
+def xl_plan(duration: float) -> FaultPlan:
+    """Every built-in fault shape, staggered so each recovery window is
+    attributable to one fault."""
+    q = duration / 4.0
+    return FaultPlan(
+        events=(worker_crash(k=20, at=round(q, 3)),
+                sgs_failstop(at=round(2 * q, 3)),
+                control_plane_delay(at=round(2.5 * q, 3), stall=0.05),
+                mass_eviction(at=round(3 * q, 3), frac=0.5)),
+        seed=0, name="composite")
+
+
+def _cell_row(name: str, tier: str, stack: str, plan_label: str,
+              rd: Dict, wall_s: float) -> Dict:
+    """Compact tracked row: accounting + recovery, not the full result."""
+    return {
+        "tier": tier,
+        "stack": stack,
+        "plan": plan_label,
+        "wall_s": round(wall_s, 3),
+        "n_requests": rd["n_requests_total"],
+        "n_completed_total": rd["n_completed_total"],
+        "all_completed": rd["n_completed_total"] == rd["n_requests_total"],
+        "deadline_met_frac": rd["deadline_met_frac"],
+        "n_retries": rd["n_retries"],
+        "fault_events": rd["fault_events"],
+        "recovery": rd["recovery"],
+    }
+
+
+def run_std(duration: float, scale: float, workers: int) -> Dict[str, Dict]:
+    plans = std_plans(duration)
+    base = Experiment(workload_factory="paper_workload_1",
+                      workload_kwargs=dict(duration=duration, scale=scale),
+                      cluster=ClusterConfig(**CLUSTERS["std"]),
+                      drain=5.0, seed=0)
+    t0 = time.perf_counter()
+    sweep = run_sweep(base, {"stack": STACKS,
+                             "faults": list(plans.values())},
+                      workers=workers)
+    wall = time.perf_counter() - t0
+    labels = list(plans)
+    rows: Dict[str, Dict] = {}
+    per_cell = wall / max(1, len(sweep))
+    for row in sweep:
+        stack = row["cell"]["stack"]
+        plan = row["cell"]["faults"]
+        label = labels[list(plans.values()).index(plan)]
+        r = row["result"]
+        # full-trace accounting: every arrival must complete (the window
+        # metrics in `recovery` are where the dip shows up)
+        rd = {"n_requests_total": r["n_requests_total"],
+              "n_completed_total": r["n_completed"],
+              "deadline_met_frac": r["deadline_met_frac"],
+              "n_retries": r["n_retries"],
+              "fault_events": r["fault_events"],
+              "recovery": r["recovery"]}
+        name = f"std_{stack}_{label}"
+        rows[name] = _cell_row(name, "std", stack, label, rd, per_cell)
+        print(f"{name}: met={rd['deadline_met_frac']} "
+              f"retries={rd['n_retries']} "
+              f"completed={rd['n_completed_total']}/"
+              f"{rd['n_requests_total']}", flush=True)
+    return rows
+
+
+def run_xl(duration: float, scale: float) -> Dict[str, Dict]:
+    plan = xl_plan(duration)
+    exp = Experiment(stack="archipelago",
+                     workload_factory="paper_workload_1",
+                     workload_kwargs=dict(duration=duration, scale=scale,
+                                          dags_per_class=20),
+                     cluster=ClusterConfig(**CLUSTERS["xl"]),
+                     params=dict(XL_PARAMS), drain=5.0, seed=0,
+                     faults=plan)
+    t0 = time.perf_counter()
+    res = simulate(exp)
+    wall = time.perf_counter() - t0
+    rd = {"n_requests_total": res.n_requests_total,
+          "n_completed_total": res.n_completed,
+          "deadline_met_frac": res.deadline_met_frac,
+          "n_retries": res.n_retries,
+          "fault_events": res.fault_events,
+          "recovery": res.recovery}
+    name = "xl_composite_chaos"
+    row = _cell_row(name, "xl", "archipelago", plan.name, rd, wall)
+    print(f"{name}: {row['wall_s']}s met={row['deadline_met_frac']} "
+          f"retries={row['n_retries']} "
+          f"completed={row['n_completed_total']}/{row['n_requests']}",
+          flush=True)
+    for ev in res.recovery.get("events", []):
+        print(f"  {ev['kind']}@{ev['t']}: "
+              f"recovery_s={ev.get('recovery_s')} "
+              f"dip={ev.get('dip_met')}", flush=True)
+    return {name: row}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="trimmed std cells only (CI); writes "
+                         "BENCH_faults.partial.json so the tracked "
+                         "full-run file is never clobbered")
+    ap.add_argument("--tier", choices=["std", "xl", "all"], default="all")
+    ap.add_argument("--workers", type=int, default=4,
+                    help="run_sweep process-pool width for the std sweep "
+                         "(rows are byte-identical at any width)")
+    ap.add_argument("--out", default="")
+    args = ap.parse_args()
+
+    repo_root = Path(__file__).resolve().parent.parent
+    default_name = ("BENCH_faults.partial.json" if args.smoke
+                    else "BENCH_faults.json")
+    out_path = Path(args.out) if args.out else (repo_root / default_name)
+
+    tiers = ["std", "xl"] if args.tier == "all" else [args.tier]
+    if args.smoke and args.tier == "all":
+        tiers = ["std"]
+
+    runs: Dict[str, Dict] = {}
+    if "std" in tiers:
+        if args.smoke:
+            runs.update(run_std(duration=6.0, scale=0.25,
+                                workers=args.workers))
+        else:
+            runs.update(run_std(duration=20.0, scale=1.0,
+                                workers=args.workers))
+    if "xl" in tiers:
+        if args.smoke:
+            runs.update(run_xl(duration=4.0, scale=2.0))
+        else:
+            runs.update(run_xl(duration=40.0, scale=10.0))
+
+    payload = {
+        "schema": 1,
+        "bench": "faults",
+        "smoke": bool(args.smoke),
+        "tiers": tiers,
+        "clusters": {t: CLUSTERS[t] for t in tiers},
+        "python": sys.version.split()[0],
+        "runs": runs,
+    }
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {out_path}")
+
+    # hard accounting gate: chaos must never lose a request
+    lost = {n: r for n, r in runs.items() if not r["all_completed"]}
+    if lost:
+        print(f"ACCOUNTING FAILURE: incomplete requests in {sorted(lost)}",
+              file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,16 +1,35 @@
 """§6.1 fault tolerance: worker fail-stop mid-run — deadline adherence
 before/after, and whether the queuing-delay signal drives recovery
-scale-out.  Fault injection rides ``simulate``'s ``timed_calls`` hook;
-control-plane decision costs are zeroed to match the original direct-route
+scale-out.  Injection is a declarative ``FaultPlan`` (docs/FAULTS.md); the
+home-SGS targeting is a custom ``@register_fault`` handler (the registry
+recipe); pre/post windows are zero-copy ``Metrics.window`` views.
+Control-plane decision costs are zeroed to match the original direct-route
 driver."""
 from __future__ import annotations
 
 from repro.core import ClusterConfig
-from repro.core.fault import fail_worker
+from repro.core.fault import FaultEvent, FaultPlan, fail_worker, register_fault
 from repro.core.types import DagSpec, FunctionSpec
-from repro.sim import ConstantRate, Experiment, Metrics, WorkloadSpec, simulate
+from repro.sim import ConstantRate, Experiment, WorkloadSpec, simulate
 
 from .common import emit, record_experiment
+
+
+@register_fault("home_worker_crash")
+def _home_worker_crash(ctx, dag_id: str = "d", k: int = 2) -> None:
+    """Kill ``k`` workers of the SGS the ring homes ``dag_id`` on — the
+    worst-case blast radius for a single-DAG workload (a random crash would
+    usually hit an idle rack)."""
+    lbs = ctx.stack.lbs
+    home = lbs.sgss[lbs.ring.lookup(dag_id)]
+    n_retry = 0
+    killed = []
+    for w in list(home.workers[:k]):
+        n_retry += fail_worker(home, w.worker_id)
+        killed.append(w.worker_id)
+    ctx.injector.n_retries += n_retry
+    ctx.record("home_worker_crash", sgs=home.sgs_id, killed=killed,
+               n_retry=n_retry)
 
 
 def run(duration: float = 20.0) -> None:
@@ -19,29 +38,29 @@ def run(duration: float = 20.0) -> None:
     spec = WorkloadSpec([(dag, ConstantRate(80.0))], duration)
     t_fail = duration / 3.0
 
-    def inject(env, stack):
-        home = stack.lbs.sgss[stack.lbs.ring.lookup("d")]
-        for w in list(home.workers[:2]):
-            fail_worker(home, w.worker_id)
-
+    plan = FaultPlan(events=(FaultEvent("home_worker_crash", at=t_fail,
+                                        kwargs=(("dag_id", "d"), ("k", 2))),),
+                     name="home_crash")
     res = simulate(
         Experiment(workload=spec, name="fault", drain=3.0,
                    cluster=ClusterConfig(n_sgs=3, workers_per_sgs=3,
                                          cores_per_worker=4),
-                   lb_cost=0.0, sgs_cost=0.0, params={"n_lbs": 1}),
-        timed_calls=[(t_fail, inject)])
+                   lb_cost=0.0, sgs_cost=0.0, params={"n_lbs": 1},
+                   faults=plan))
     record_experiment("fault", res)
 
     metrics = res.sim.metrics
-    pre = Metrics(requests=[r for r in metrics.requests
-                            if 2.0 <= r.arrival_time < t_fail])
-    post = Metrics(requests=[r for r in metrics.requests
-                             if r.arrival_time >= t_fail + 2.0])
+    pre = metrics.window(2.0, t_fail)
+    post = metrics.window(t_fail + 2.0, float("inf"))
     emit("fault_pre_failure_deadlines_met", 0.0,
          f"{pre.deadline_met_frac()*100:.2f}%")
     emit("fault_post_failure_deadlines_met", 0.0,
          f"{post.deadline_met_frac()*100:.2f}%")
     emit("fault_all_requests_completed", 0.0,
-         str(len(metrics.completed) == len(metrics.requests)))
+         str(metrics.n_completed == metrics.n_requests))
+    emit("fault_n_retries", 0.0, str(res.n_retries))
+    rec = res.recovery["events"][0]
+    emit("fault_time_to_recovery", 0.0,
+         f"{rec['recovery_s']}s (baseline met={rec['baseline_met']})")
     emit("fault_recovery_scale_out", 0.0,
          f"n_active={res.sim.lbs.n_active('d')} (>=2 expected)")

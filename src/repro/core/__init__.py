@@ -13,6 +13,8 @@ Public API:
     register_backend, ExecutionBackend    -- pluggable execution backends:
                                              modeled / stub / jax
                                              (docs/SERVING.md)
+    FaultPlan, register_fault, fail_sgs   -- declarative chaos injection +
+                                             §6.1 failover (docs/FAULTS.md)
 """
 from .types import (DagSpec, FunctionSpec, Invocation, Request, Sandbox,
                     SandboxState)
@@ -27,8 +29,12 @@ from .backends import (BatchCoalescer, BatchedJaxBackend, CompletionQueue,
                        StubBackend, StubBatchedBackend, available_backends,
                        get_backend, register_backend)
 from .stacks import (Stack, available_stacks, get_stack, register_stack)
-from .fault import (StateStore, checkpoint_lbs, checkpoint_sgs, fail_worker,
-                    restore_lbs, restore_sgs)
+from .fault import (FaultContext, FaultEvent, FaultInjector, FaultPlan,
+                    StateStore, available_faults, checkpoint_lbs,
+                    checkpoint_sgs, control_plane_delay, fail_sgs,
+                    fail_worker, get_fault, mass_eviction, recovery_summary,
+                    register_fault, restore_lbs, restore_sgs, sgs_failstop,
+                    time_to_recovery, worker_crash)
 
 __all__ = [
     "DagSpec", "FunctionSpec", "Invocation", "Request", "Sandbox",
@@ -41,5 +47,9 @@ __all__ = [
     "JaxBackend", "BatchedJaxBackend", "BatchCoalescer", "CompletionQueue",
     "available_backends", "get_backend", "register_backend",
     "StateStore", "checkpoint_lbs", "checkpoint_sgs", "fail_worker",
-    "restore_lbs", "restore_sgs",
+    "restore_lbs", "restore_sgs", "fail_sgs",
+    "FaultPlan", "FaultEvent", "FaultInjector", "FaultContext",
+    "worker_crash", "sgs_failstop", "mass_eviction", "control_plane_delay",
+    "register_fault", "get_fault", "available_faults",
+    "time_to_recovery", "recovery_summary",
 ]

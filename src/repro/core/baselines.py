@@ -35,6 +35,12 @@ class CentralizedFIFO:
         self.execute = execute
         self._queue: Deque[Invocation] = deque()
         self._completed_fns: Dict[int, set] = {}
+        # fault tolerance (§6.1): in-flight registrations + failed-worker
+        # view, same shape as SemiGlobalScheduler (worker_id -> {inv_id ->
+        # Invocation}); completions validate against it so a worker crash
+        # never fires stale state mutations (core.fault.fail_worker)
+        self._inflight: Dict[int, Dict[int, Invocation]] = {}
+        self._dead_workers: set = set()
         self.n_cold_starts = 0
         self.n_warm_hits = 0
         self.queuing_delays: List[float] = []
@@ -99,6 +105,10 @@ class CentralizedFIFO:
             self.n_warm_hits += 1
             sbx.state = SandboxState.BUSY
             sbx.last_used = now
+        inflight = self._inflight.get(w.worker_id)
+        if inflight is None:
+            inflight = self._inflight[w.worker_id] = {}
+        inflight[inv.inv_id] = inv
         if self.backend_submit is not None:
             # async seam: dispatch returns immediately; the backend fires
             # the completion callback (possibly after batching)
@@ -123,6 +133,11 @@ class CentralizedFIFO:
             w.remove_sandbox(min(idle, key=lambda s: s.last_used))
 
     def _complete(self, inv: Invocation, w: Worker, sbx: Sandbox) -> None:
+        # inflight-generation guard (see SemiGlobalScheduler._complete):
+        # drops stale completions from dead workers / retried invocations
+        inflight = self._inflight.get(w.worker_id)
+        if inflight is None or inflight.pop(inv.inv_id, None) is None:
+            return      # fail-stop: execution lost, the retry re-drives it
         now = self.env.now()
         w.busy_cores -= 1
         sbx.state = SandboxState.WARM
@@ -173,6 +188,9 @@ class SparrowScheduler:
         self._wqueues: Dict[int, Deque[Invocation]] = {
             w.worker_id: deque() for w in workers}
         self._completed_fns: Dict[int, set] = {}
+        # fault tolerance: see CentralizedFIFO (same registration shape)
+        self._inflight: Dict[int, Dict[int, Invocation]] = {}
+        self._dead_workers: set = set()
         self.n_cold_starts = 0
         self.n_warm_hits = 0
         self.queuing_delays: List[float] = []
@@ -221,6 +239,10 @@ class SparrowScheduler:
             else:
                 self.n_warm_hits += 1
                 sbx.state = SandboxState.BUSY
+            inflight = self._inflight.get(w.worker_id)
+            if inflight is None:
+                inflight = self._inflight[w.worker_id] = {}
+            inflight[inv.inv_id] = inv
             if self.backend_submit is not None:
                 def done(exec_s: float, inv=inv, w=w, sbx=sbx) -> None:
                     self._complete(inv, w, sbx)
@@ -231,6 +253,10 @@ class SparrowScheduler:
             self.env.call_after(setup + exec_s, self._complete, inv, w, sbx)
 
     def _complete(self, inv: Invocation, w: Worker, sbx: Sandbox) -> None:
+        # inflight-generation guard (see SemiGlobalScheduler._complete)
+        inflight = self._inflight.get(w.worker_id)
+        if inflight is None or inflight.pop(inv.inv_id, None) is None:
+            return      # fail-stop: execution lost, the retry re-drives it
         now = self.env.now()
         w.busy_cores -= 1
         sbx.state = SandboxState.WARM

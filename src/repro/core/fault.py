@@ -1,23 +1,35 @@
-"""Fault tolerance (§6.1).
+"""Fault tolerance (§6.1) and declarative chaos injection.
 
 Fail-stop model with an immediate failure detector:
 
-* **Worker failures** — the owning SGS updates its cluster view (the worker
-  leaves the pool, its sandboxes are gone); invocations that were executing
-  there are re-enqueued (retry).  Recovery pressure is handled by the
-  existing machinery: lost capacity raises queuing delay, the LBS observes
-  it and scales the affected DAGs out; even placement means surviving
-  workers still hold proactive sandboxes.
+* **Worker failures** — the owning scheduler updates its cluster view (the
+  worker leaves the pool, its sandboxes are gone); invocations that were
+  executing there are re-enqueued (retry).  Recovery pressure is handled by
+  the existing machinery: lost capacity raises queuing delay, the LBS
+  observes it and scales the affected DAGs out; even placement means
+  surviving workers still hold proactive sandboxes.
 * **SGS / LB failures** — all state an SGS or the LB needs to resume
   (estimator state, sandbox demand targets, per-DAG SGS mappings) is kept
   in a reliable external ``StateStore``; a replacement instance restores
-  from it and continues.
+  from it and continues (``fail_sgs``).
+
+Chaos injection is declarative: a :class:`FaultPlan` is a tuple of typed,
+seeded :class:`FaultEvent`\\ s carried on ``Experiment.faults`` as a
+sweepable axis.  ``simulate`` compiles the plan through a
+:class:`FaultInjector` into plain ``env.call_at`` events — a run without a
+plan never touches any of this (pay-for-what-you-use; the zero-fault
+equivalence goldens stay decision-identical).  New fault shapes register
+with :func:`register_fault`, mirroring the stack/backend registries
+(docs/FAULTS.md).
 """
 from __future__ import annotations
 
 import copy
-from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional
+import heapq
+import random
+from dataclasses import dataclass
+from typing import (Any, Callable, Dict, List, Mapping, Optional, Sequence,
+                    Tuple)
 
 from .lbs import LoadBalancer
 from .sgs import SemiGlobalScheduler
@@ -66,6 +78,11 @@ def restore_sgs(sgs: SemiGlobalScheduler, store: StateStore,
     for fn_name, d in demand.items():
         spec = sgs.sandboxes.fn_specs.get(fn_name)
         if spec is not None and d > 0:
+            # hold the restored demand as a floor for ramp_window (same
+            # mechanism as LBS preallocation): the fresh estimator has seen
+            # no arrivals yet, so without the floor the next estimation tick
+            # would soft-evict the pool the checkpoint just rebuilt
+            sgs._demand_floor[fn_name] = (d, now + sgs.cfg.ramp_window)
             sgs.sandboxes.set_demand(spec, d, now)
     sgs._ensure_ticking()
 
@@ -97,12 +114,18 @@ def restore_lbs(lbs: LoadBalancer, store: StateStore, now: float) -> None:
 # ---------------------------------------------------------------------------
 
 
-def fail_worker(sgs: SemiGlobalScheduler, worker_id: int) -> int:
-    """Fail-stop one worker: remove it from the SGS's cluster view, drop its
-    sandboxes, and re-enqueue invocations that were running on it.  Returns
-    the number of re-enqueued invocations."""
-    import heapq
+def fail_worker(scheduler: Any, worker_id: int) -> int:
+    """Fail-stop one worker: remove it from the scheduler's cluster view,
+    drop its sandboxes, and re-enqueue invocations that were running on it.
+    Works for SGS instances and the flat baselines (CentralizedFIFO /
+    Sparrow / pull), which share the ``_inflight``/``_dead_workers``
+    registration shape.  Returns the number of re-enqueued invocations."""
+    if isinstance(scheduler, SemiGlobalScheduler):
+        return _fail_worker_sgs(scheduler, worker_id)
+    return _fail_worker_flat(scheduler, worker_id)
 
+
+def _fail_worker_sgs(sgs: SemiGlobalScheduler, worker_id: int) -> int:
     w = next((w for w in sgs.workers if w.worker_id == worker_id), None)
     if w is None:
         return 0
@@ -113,7 +136,8 @@ def fail_worker(sgs: SemiGlobalScheduler, worker_id: int) -> int:
     # removes from the manager's pool view and every per-function index
     sgs.sandboxes.remove_worker(w)
     # retry in-flight invocations: the completion callbacks for this worker
-    # become no-ops because the request is re-driven from the queue
+    # become no-ops (the inflight registration is gone) and the request is
+    # re-driven from the queue
     now = sgs.env.now()
     n_retry = 0
     for inv in list(sgs._inflight.get(worker_id, {}).values()):
@@ -125,3 +149,486 @@ def fail_worker(sgs: SemiGlobalScheduler, worker_id: int) -> int:
     sgs._inflight.pop(worker_id, None)
     sgs._dispatch()
     return n_retry
+
+
+def _fail_worker_flat(sched: Any, worker_id: int) -> int:
+    """Fail-stop for the flat baselines.  Sparrow additionally loses the
+    dead worker's local queue; those invocations are re-placed too."""
+    w = next((w for w in sched.workers if w.worker_id == worker_id), None)
+    if w is None:
+        return 0
+    sched.workers.remove(w)
+    sched._dead_workers.add(worker_id)
+    now = sched.env.now()
+    retries: List[Invocation] = []
+    for inv in list(sched._inflight.pop(worker_id, {}).values()):
+        retries.append(Invocation(request=inv.request, fn=inv.fn,
+                                  ready_time=now))
+    wq = getattr(sched, "_wqueues", None)
+    if wq is not None:                  # Sparrow: drain the lost local queue
+        for inv in wq.pop(worker_id, ()):
+            retries.append(Invocation(request=inv.request, fn=inv.fn,
+                                      ready_time=now))
+    place = getattr(sched, "_place", None)
+    if place is not None:
+        for retry in retries:
+            place(retry)
+    else:                               # FIFO-shaped: back of the queue
+        sched._queue.extend(retries)
+        sched._dispatch()
+    return len(retries)
+
+
+# ---------------------------------------------------------------------------
+# SGS fail-stop + StateStore-backed failover
+# ---------------------------------------------------------------------------
+
+
+def fail_sgs(lbs: LoadBalancer, sgs_id: int, store: StateStore, env: Any,
+             ) -> Tuple[Optional[SemiGlobalScheduler], int]:
+    """Fail-stop one SGS and bring up a replacement restored from the
+    reliable store (§6.1): "a replacement instance restores from it and
+    continues".
+
+    Only the scheduler *process* dies — the worker pool (a rack) survives:
+    warm sandboxes stay resident and executions already running there keep
+    running (their completions forward to the replacement through the
+    victim's ``_successor`` pointer).  What dies with the process is the
+    SRSF queue — re-enqueued into the replacement as retries, modeling the
+    LBS re-submitting un-acked work — and the demand estimator, rebuilt
+    from the checkpointed targets and held as a floor for ``ramp_window``.
+    Returns ``(replacement, n_retry)``; ``(None, 0)`` if the id is unknown
+    or already failed over."""
+    victim = lbs.sgss.get(sgs_id)
+    if victim is None or victim._successor is not None:
+        return None, 0
+    now = env.now()
+    replacement = SemiGlobalScheduler(
+        sgs_id, victim.workers, env, config=victim.cfg,
+        execute=victim.execute, backend_submit=victim.backend_submit)
+    # The replacement adopts a pool that is already warm: eagerly rebuild
+    # the per-function indices so the fused hot-path transitions (which
+    # assume the index exists) are safe for sandboxes created pre-failure.
+    mgr = replacement.sandboxes
+    for w in victim.workers:
+        for fn_name in w._buckets:
+            mgr._ensure_fn(fn_name)
+    # Executions on surviving workers keep running: adopt the in-flight
+    # registrations (by reference — the victim's bound callbacks forward
+    # here via _successor and pop from this same dict).
+    replacement._inflight = victim._inflight
+    replacement._dead_workers = victim._dead_workers
+    # Metric streams continue across the failover (same id, same pool).
+    replacement.queuing_delays = victim.queuing_delays
+    replacement.queuing_delay_times = victim.queuing_delay_times
+    replacement.completed_requests = victim.completed_requests
+    replacement.n_cold_starts = victim.n_cold_starts
+    replacement.n_warm_hits = victim.n_warm_hits
+    replacement.on_complete = victim.on_complete
+    # Soft state from the store: served DAGs, fn specs, demand targets.
+    restore_sgs(replacement, store, now)
+    # The dead scheduler's queue: re-submitted by the LBS on failover.
+    n_retry = 0
+    for _, _, _, inv in victim._queue:
+        retry = Invocation(request=inv.request, fn=inv.fn, ready_time=now)
+        k0, k1, k2 = retry.priority_key()
+        heapq.heappush(replacement._queue, (k0, k1, k2, retry))
+        n_retry += 1
+    victim._queue = []
+    victim._successor = replacement
+    lbs.replace_sgs(replacement)
+    replacement._dispatch()
+    return replacement, n_retry
+
+
+# ---------------------------------------------------------------------------
+# Declarative fault plans
+# ---------------------------------------------------------------------------
+
+
+def _freeze_kwargs(kw: Mapping[str, Any]) -> Tuple[Tuple[str, Any], ...]:
+    return tuple(sorted(kw.items()))
+
+
+@dataclass(frozen=True)
+class FaultEvent:
+    """One declarative fault: a registered kind plus its schedule.
+
+    Schedule is either ``at`` (fire once at that simulated time) or
+    ``rate`` (a seeded Poisson process of occurrences per second over
+    ``[start, end)``; ``end=None`` means the run horizon).  ``kwargs`` are
+    the handler's arguments, stored as a sorted tuple of pairs so events
+    hash, pickle (``run_sweep`` workers) and compare cleanly."""
+    kind: str
+    at: Optional[float] = None
+    rate: Optional[float] = None
+    start: float = 0.0
+    end: Optional[float] = None
+    kwargs: Tuple[Tuple[str, Any], ...] = ()
+
+    def arg_dict(self) -> Dict[str, Any]:
+        return dict(self.kwargs)
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {"kind": self.kind, "at": self.at, "rate": self.rate,
+                "start": self.start, "end": self.end,
+                "kwargs": dict(self.kwargs)}
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "FaultEvent":
+        return cls(kind=d["kind"], at=d.get("at"), rate=d.get("rate"),
+                   start=d.get("start", 0.0), end=d.get("end"),
+                   kwargs=_freeze_kwargs(d.get("kwargs", {})))
+
+
+@dataclass(frozen=True)
+class FaultPlan:
+    """A seeded, declarative chaos schedule — the sweepable ``faults=``
+    axis on ``Experiment``.  Frozen (hashable, picklable) so plans can sit
+    in sweep axes and ship to ``run_sweep`` worker processes."""
+    events: Tuple[FaultEvent, ...] = ()
+    seed: int = 0
+    name: str = ""
+    # §6.1 periodic StateStore checkpoint cadence, used when the plan
+    # contains sgs_failstop events: a fail-stop victim cannot checkpoint at
+    # the failure instant, so the replacement restores state up to this
+    # many seconds stale.
+    checkpoint_interval: float = 0.25
+
+    def __post_init__(self):
+        object.__setattr__(self, "events", tuple(self.events))
+
+    def label(self) -> str:
+        if self.name:
+            return self.name
+        if not self.events:
+            return "none"
+        return "+".join(ev.kind for ev in self.events)
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {"events": [ev.to_dict() for ev in self.events],
+                "seed": self.seed, "name": self.name,
+                "checkpoint_interval": self.checkpoint_interval}
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "FaultPlan":
+        return cls(events=tuple(FaultEvent.from_dict(e)
+                                for e in d.get("events", [])),
+                   seed=d.get("seed", 0), name=d.get("name", ""),
+                   checkpoint_interval=d.get("checkpoint_interval", 0.25))
+
+
+# -- event constructors ------------------------------------------------------
+
+
+def worker_crash(k: int = 1, at: Optional[float] = None,
+                 rate: Optional[float] = None, start: float = 0.0,
+                 end: Optional[float] = None, sgs: Optional[int] = None,
+                 spare: int = 1) -> FaultEvent:
+    """Fail-stop ``k`` workers per occurrence, uniformly over pools that
+    would keep at least ``spare`` workers.  Exactly one of ``at``
+    (one-shot) / ``rate`` (Poisson occurrences per second) is required;
+    ``sgs`` narrows the blast radius to one scheduler's pool."""
+    if (at is None) == (rate is None):
+        raise ValueError("worker_crash needs exactly one of at= / rate=")
+    return FaultEvent("worker_crash", at=at, rate=rate, start=start, end=end,
+                      kwargs=_freeze_kwargs(
+                          {"k": k, "sgs": sgs, "spare": spare}))
+
+
+def sgs_failstop(at: float, sgs: Optional[int] = None) -> FaultEvent:
+    """Kill one SGS at ``at``; a replacement restores from the StateStore
+    and the LBS re-routes (no-op on stacks without an SGS tier).  ``sgs``
+    None picks a victim with the plan's seeded RNG."""
+    return FaultEvent("sgs_failstop", at=at,
+                      kwargs=_freeze_kwargs({"sgs": sgs}))
+
+
+def mass_eviction(at: float, frac: float = 1.0,
+                  sgs: Optional[int] = None) -> FaultEvent:
+    """Cold-boot storm: evict a fraction of all idle sandboxes at ``at``.
+    Demand targets survive, so proactive allocation immediately rebuilds
+    the pool — a setup-work avalanche (Dirigent's lifecycle-churn regime)."""
+    return FaultEvent("mass_eviction", at=at,
+                      kwargs=_freeze_kwargs({"frac": frac, "sgs": sgs}))
+
+
+def control_plane_delay(at: Optional[float] = None,
+                        rate: Optional[float] = None, stall: float = 0.05,
+                        target: str = "both", start: float = 0.0,
+                        end: Optional[float] = None) -> FaultEvent:
+    """Control-plane latency spike: LBS/SGS decision servers stall for
+    ``stall`` seconds (GC pause, leader re-election).  ``target`` is
+    ``"lbs"``, ``"sgs"`` or ``"both"``."""
+    if (at is None) == (rate is None):
+        raise ValueError(
+            "control_plane_delay needs exactly one of at= / rate=")
+    return FaultEvent("control_plane_delay", at=at, rate=rate, start=start,
+                      end=end,
+                      kwargs=_freeze_kwargs(
+                          {"stall": stall, "target": target}))
+
+
+# -- fault registry (mirrors stacks/backends) --------------------------------
+
+FaultHandler = Callable[..., None]      # handler(ctx, **kwargs)
+
+_FAULTS: Dict[str, FaultHandler] = {}
+
+
+def register_fault(name: str) -> Callable[[FaultHandler], FaultHandler]:
+    """Decorator registering a fault handler under ``name``.  Handlers take
+    a :class:`FaultContext` plus the event's kwargs; new fault shapes are
+    one decorated function (docs/FAULTS.md)."""
+    def deco(fn: FaultHandler) -> FaultHandler:
+        if name in _FAULTS:
+            raise ValueError(f"fault {name!r} is already registered")
+        _FAULTS[name] = fn
+        return fn
+    return deco
+
+
+def get_fault(name: str) -> FaultHandler:
+    try:
+        return _FAULTS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown fault {name!r}; registered faults: "
+            f"{', '.join(sorted(_FAULTS))}") from None
+
+
+def available_faults() -> List[str]:
+    return sorted(_FAULTS)
+
+
+# -- injection ---------------------------------------------------------------
+
+
+@dataclass
+class FaultContext:
+    """What a fault handler gets to work with at fire time."""
+    env: Any
+    stack: Any
+    rng: random.Random
+    injector: "FaultInjector"
+
+    def schedulers(self, sgs: Optional[int] = None) -> List[Any]:
+        """Live scheduler instances: the SGS tier (optionally one id) for
+        archipelago-shaped stacks, else the single flat scheduler."""
+        lbs = getattr(self.stack, "lbs", None)
+        if lbs is not None:
+            if sgs is not None:
+                s = lbs.sgss.get(sgs)
+                return [s] if s is not None else []
+            return [lbs.sgss[sid] for sid in sorted(lbs.sgss)]
+        sched = getattr(self.stack, "scheduler", None)
+        return [sched] if sched is not None else []
+
+    def record(self, kind: str, **info: Any) -> None:
+        self.injector.record(kind, self.env.now(), **info)
+
+
+class FaultInjector:
+    """Compiles a :class:`FaultPlan` into plain event-loop callbacks.
+
+    ``simulate`` constructs one when ``Experiment.faults`` is set and calls
+    :meth:`install` after the stack is built — occurrence times are
+    expanded (seeded, deterministic) and scheduled with ``env.call_at``; if
+    the plan kills SGSs, a periodic §6.1 checkpoint hook persists the
+    doomed instances' soft state to the injector's StateStore so failover
+    has something to restore from."""
+
+    def __init__(self, plan: FaultPlan):
+        self.plan = plan
+        self.rng = random.Random(plan.seed)
+        self.store = StateStore()
+        self.fault_events: List[Dict[str, Any]] = []
+        self.n_retries = 0
+
+    def record(self, kind: str, t: float, **info: Any) -> None:
+        self.fault_events.append(
+            {"kind": kind, "t": round(float(t), 6), **info})
+
+    def occurrences(self, ev: FaultEvent, horizon: float) -> List[float]:
+        """Fire times for one event: ``at`` verbatim, ``rate`` as a seeded
+        Poisson process over [start, min(end, horizon))."""
+        if ev.at is not None:
+            return [float(ev.at)]
+        if not ev.rate or ev.rate <= 0.0:
+            return []
+        end = horizon if ev.end is None else min(ev.end, horizon)
+        out: List[float] = []
+        t = ev.start
+        while True:
+            t += self.rng.expovariate(ev.rate)
+            if t >= end:
+                return out
+            out.append(t)
+
+    def install(self, env: Any, stack: Any, horizon: float) -> None:
+        ctx = FaultContext(env=env, stack=stack, rng=self.rng, injector=self)
+        lbs = getattr(stack, "lbs", None)
+        doomed: set = set()
+        for ev in self.plan.events:
+            handler = get_fault(ev.kind)       # fail fast on unknown kinds
+            kwargs = ev.arg_dict()
+            for t in self.occurrences(ev, horizon):
+                kw = dict(kwargs)
+                if ev.kind == "sgs_failstop" and lbs is not None and lbs.sgss:
+                    if kw.get("sgs") is None:  # seeded victim choice, fixed
+                        ids = sorted(lbs.sgss)  # at install so checkpoints
+                        kw["sgs"] = ids[self.rng.randrange(len(ids))]  # cover it
+                    doomed.add(kw["sgs"])
+                env.call_at(t, self._fire, ctx, handler, kw)
+        if doomed and lbs is not None:
+            # Periodic checkpoints, scoped to the instances this plan will
+            # kill: checkpointing all 80 xl-tier SGSs every 250 ms would
+            # deep-copy DAG specs the run never restores.
+            interval = max(1e-3, self.plan.checkpoint_interval)
+            self._checkpoint(lbs, doomed)               # t=0 baseline
+            env.every(interval, lambda: self._checkpoint(lbs, doomed),
+                      until=horizon)
+
+    @staticmethod
+    def _fire(ctx: "FaultContext", handler: FaultHandler,
+              kw: Dict[str, Any]) -> None:
+        handler(ctx, **kw)
+
+    def _checkpoint(self, lbs: LoadBalancer, doomed: set) -> None:
+        for sid in sorted(doomed):
+            s = lbs.sgss.get(sid)
+            if s is not None and s._successor is None:
+                checkpoint_sgs(s, self.store)
+        checkpoint_lbs(lbs, self.store)
+
+
+# -- built-in handlers -------------------------------------------------------
+
+
+@register_fault("worker_crash")
+def _worker_crash(ctx: FaultContext, k: int = 1, sgs: Optional[int] = None,
+                  spare: int = 1, **_: Any) -> None:
+    scheds = ctx.schedulers(sgs)
+    killed: List[int] = []
+    n_retry = 0
+    keep = max(1, spare)        # never take a pool to zero workers
+    for _i in range(int(k)):
+        eligible = [(s, w) for s in scheds if len(s.workers) > keep
+                    for w in s.workers]
+        if not eligible:
+            break
+        s, w = eligible[ctx.rng.randrange(len(eligible))]
+        n_retry += fail_worker(s, w.worker_id)
+        killed.append(w.worker_id)
+    ctx.injector.n_retries += n_retry
+    ctx.record("worker_crash", killed=killed, n_retry=n_retry)
+
+
+@register_fault("sgs_failstop")
+def _sgs_failstop(ctx: FaultContext, sgs: Optional[int] = None,
+                  **_: Any) -> None:
+    lbs = getattr(ctx.stack, "lbs", None)
+    if lbs is None or sgs is None or sgs not in lbs.sgss:
+        ctx.record("sgs_failstop", sgs=sgs, skipped=True)
+        return
+    replacement, n_retry = fail_sgs(lbs, sgs, ctx.injector.store, ctx.env)
+    ctx.injector.n_retries += n_retry
+    ctx.record("sgs_failstop", sgs=sgs, n_retry=n_retry,
+               restored=replacement is not None)
+
+
+@register_fault("mass_eviction")
+def _mass_eviction(ctx: FaultContext, frac: float = 1.0,
+                   sgs: Optional[int] = None, **_: Any) -> None:
+    n_evicted = 0
+    for sched in ctx.schedulers(sgs):
+        for w in sched.workers:
+            for s in w.sandboxes:       # fresh list: safe to remove during
+                if s.state is SandboxState.BUSY:
+                    continue            # executing: kill the worker instead
+                if frac >= 1.0 or ctx.rng.random() < frac:
+                    w.remove_sandbox(s)
+                    n_evicted += 1
+    ctx.record("mass_eviction", frac=frac, n_evicted=n_evicted)
+
+
+@register_fault("control_plane_delay")
+def _control_plane_delay(ctx: FaultContext, stall: float = 0.05,
+                         target: str = "both", **_: Any) -> None:
+    # Modeled by advancing the M/D/1 decision-service clocks' busy_until:
+    # decisions arriving behind the spike queue exactly as they would
+    # behind a blocked single-threaded decision loop.  Data plane untouched.
+    now = ctx.env.now()
+    stack = ctx.stack
+    n_clocks = 0
+    clocks: List[Any] = []
+    if target in ("lbs", "both"):
+        clocks.extend(getattr(stack, "_lb_clocks", ()) or ())
+    if target in ("sgs", "both"):
+        sgs_clocks = getattr(stack, "_sgs_clocks", None)
+        if sgs_clocks:
+            clocks.extend(sgs_clocks.values())
+        c = getattr(stack, "_clock", None)     # flat stacks: one clock
+        if c is not None:
+            clocks.append(c)
+    for c in clocks:
+        c.busy_until = max(c.busy_until, now) + stall
+        n_clocks += 1
+    ctx.record("control_plane_delay", stall=stall, target=target,
+               n_clocks=n_clocks)
+
+
+# ---------------------------------------------------------------------------
+# Recovery metrics
+# ---------------------------------------------------------------------------
+
+
+def time_to_recovery(metrics: Any, t_fault: float, horizon: float,
+                     window: float = 0.5, tolerance: float = 0.05,
+                     baseline_windows: int = 4) -> Optional[Dict[str, Any]]:
+    """Windowed time-to-deadline-recovery after a fault at ``t_fault``.
+
+    baseline = deadline-met over the ``baseline_windows * window`` seconds
+    before the fault; recovery = end of the first post-fault window whose
+    deadline-met is back within ``tolerance`` of baseline.  Windows use the
+    zero-copy ``Metrics.window`` views.  Returns ``{"baseline_met",
+    "dip_met", "recovery_s"}`` (``recovery_s`` None if the run ends
+    unrecovered; ``dip_met`` is the worst post-fault window) or None when
+    there is no pre-fault signal to compare against."""
+    t0 = max(0.0, t_fault - baseline_windows * window)
+    base = metrics.window(t0, t_fault).deadline_met_frac()
+    if base != base:        # NaN: nothing completed pre-fault
+        return None
+    target = base - tolerance
+    dip: Optional[float] = None
+    recovery_s: Optional[float] = None
+    t = t_fault
+    while t < horizon:
+        m = metrics.window(t, min(t + window, horizon)).deadline_met_frac()
+        if m == m:          # skip empty windows
+            dip = m if dip is None else min(dip, m)
+            if m >= target:
+                recovery_s = (t + window) - t_fault
+                break
+        t += window
+    out = {"baseline_met": round(base, 6),
+           "recovery_s": None if recovery_s is None else round(recovery_s, 6)}
+    out["dip_met"] = None if dip is None else round(dip, 6)
+    return out
+
+
+def recovery_summary(metrics: Any, injector: FaultInjector, horizon: float,
+                     window: float = 0.5,
+                     tolerance: float = 0.05) -> Dict[str, Any]:
+    """Per-fired-fault recovery report for ``ExperimentResult.recovery``."""
+    events: List[Dict[str, Any]] = []
+    for rec in injector.fault_events:
+        t = rec.get("t")
+        if t is None:
+            continue
+        entry: Dict[str, Any] = {"kind": rec["kind"], "t": t}
+        r = time_to_recovery(metrics, t, horizon, window, tolerance)
+        if r is not None:
+            entry.update(r)
+        events.append(entry)
+    return {"window_s": window, "tolerance": tolerance, "events": events}

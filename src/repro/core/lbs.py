@@ -295,6 +295,25 @@ class LoadBalancer:
         st.removed.append(sid)
         st.n_scale_ins += 1
 
+    # -------------------------------------------------------------- failover
+    def replace_sgs(self, new_sgs: SemiGlobalScheduler) -> None:
+        """SGS failover rewiring (§6.1, ``core.fault.fail_sgs``): swap the
+        live instance behind an existing ``sgs_id``.  The consistent-hash
+        ring and the per-DAG active/removed lists key on the id, so routing
+        re-routes to the replacement with no ring churn — the paper's
+        "a replacement instance restores from the store and continues".
+        Per-SGS queuing-delay state from the dead instance is dropped (its
+        queue died with it); sandbox counts are kept — they describe the
+        surviving worker pool, not the dead scheduler process."""
+        sid = new_sgs.sgs_id
+        self.sgss[sid] = new_sgs
+        new_sgs.report = self.report
+        for st in self._dag_state.values():
+            if st.pending:
+                st.pending = [p for p in st.pending if p[0] != sid]
+            st.qdelay_ewma.pop(sid, None)
+            st.qdelay_samples.pop(sid, None)
+
     # --------------------------------------------------------------- queries
     def n_active(self, dag_id: str) -> int:
         st = self._dag_state.get(dag_id)

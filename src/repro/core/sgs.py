@@ -108,6 +108,12 @@ class SemiGlobalScheduler:
         # old per-worker list but with O(1) completion removal)
         self._inflight: Dict[int, Dict[int, Invocation]] = {}
         self._dead_workers: Set[int] = set()
+        # SGS fail-stop (§6.1, core.fault.fail_sgs): when this instance is
+        # killed and replaced, deferred callbacks already bound to it
+        # (submit_request from routed-but-unfired arrivals, _complete from
+        # executions still running on surviving workers) forward to the
+        # replacement instead of mutating dead state
+        self._successor: Optional["SemiGlobalScheduler"] = None
         # incremental pool-wide free-core count: _dispatch's work-conserving
         # loop gate is O(1) instead of an O(W) any() per queue pop
         self._free_cores = sum(w.cores - w.busy_cores for w in workers)
@@ -128,6 +134,10 @@ class SemiGlobalScheduler:
     # ---------------------------------------------------------------- intake
     def submit_request(self, req: Request) -> None:
         """Entry point from the LBS. Enqueues the DAG's root invocations."""
+        succ = self._successor
+        if succ is not None:        # failed over: the replacement serves it
+            succ.submit_request(req)
+            return
         now = self.env.now()
         req.sgs_id = self.sgs_id
         dag = req.dag
@@ -434,12 +444,22 @@ class SemiGlobalScheduler:
         return done
 
     def _complete(self, inv: Invocation, w: Worker, sbx: Sandbox) -> None:
+        succ = self._successor
+        if succ is not None:        # failed over: completions continue there
+            succ._complete(inv, w, sbx)
+            return
         now = self.env.now()
-        if w.worker_id in self._dead_workers:
-            return      # fail-stop: this execution was lost and retried
+        # Inflight-generation guard: a completion is only valid if *this*
+        # invocation is still registered in flight on *this* worker.  Drops
+        # stale ``done()`` callbacks from the async backend seam for (a)
+        # workers that died after submission (fail_worker popped the whole
+        # per-worker dict) and (b) invocations that were re-enqueued as
+        # retries (the retry is a fresh Invocation with its own inv_id, so a
+        # late original can never double-complete it).  On the healthy path
+        # every completion pops its own registration — decision-identical.
         inflight = self._inflight.get(w.worker_id)
-        if inflight is not None:
-            inflight.pop(inv.inv_id, None)
+        if inflight is None or inflight.pop(inv.inv_id, None) is None:
+            return      # fail-stop: this execution was lost and retried
         w.busy_cores -= 1
         self._free_cores += 1
         # fused BUSY->WARM transition (every completion takes it).

@@ -38,6 +38,7 @@ from typing import (Any, Callable, Dict, List, Mapping, Optional, Sequence,
 
 from ..core.backends import ExecutionBackend, resolve_backend
 from ..core.cluster import ClusterConfig
+from ..core.fault import FaultInjector, FaultPlan, recovery_summary
 from ..core.lbs import LBSConfig, LoadBalancer
 from ..core.sgs import SGSConfig
 from ..core.stacks import (LB_DECISION_COST, SGS_DECISION_COST, Stack,
@@ -123,6 +124,9 @@ class SimResult:
     # ...): backend.counters() accumulates across sweep cells when one
     # instance is shared, so the per-run view is a before/after difference
     backend_counters: Dict[str, int] = field(default_factory=dict)
+    # the FaultInjector when the experiment carried a FaultPlan (fired
+    # events, retry counters, the §6.1 StateStore) — None on fault-free runs
+    injector: Optional[FaultInjector] = None
 
 
 @dataclass
@@ -158,6 +162,10 @@ class Experiment:
     warmup: float = 0.0            # steady-state window start (metrics only)
     drain: float = 5.0             # extra simulated time after last arrival
     workload_method: str = "numpy"
+    # declarative chaos schedule (core.fault, docs/FAULTS.md): compiled into
+    # the event loop by ``simulate``; None (the default) adds nothing to the
+    # run, so zero-fault experiments stay decision-identical
+    faults: Optional[FaultPlan] = None
     name: str = ""
 
     def resolve_workload(self) -> WorkloadSpec:
@@ -265,6 +273,14 @@ class ExperimentResult:
     # batched backends add n_batches / n_batched_invocations / n_batch_slots
     # / max_batch_occupancy (see docs/SERVING.md "Batched serving")
     backend_counters: Dict[str, int] = field(default_factory=dict)
+    # chaos-run fields (empty/zero on fault-free runs): fired fault events
+    # ({"kind", "t", ...} per occurrence), total retried invocations, and
+    # the per-fault windowed recovery report ({"window_s", "tolerance",
+    # "events": [{"kind", "t", "baseline_met", "dip_met", "recovery_s"}]})
+    # — see docs/FAULTS.md "Recovery metrics"
+    fault_events: List[Dict[str, Any]] = field(default_factory=list)
+    n_retries: int = 0
+    recovery: Dict[str, Any] = field(default_factory=dict)
     sim: Optional[SimResult] = field(default=None, repr=False, compare=False)
 
     def to_dict(self) -> Dict[str, Any]:
@@ -273,6 +289,8 @@ class ExperimentResult:
         d["latency_percentiles"] = dict(self.latency_percentiles)
         d["queuing_percentiles"] = dict(self.queuing_percentiles)
         d["backend_counters"] = dict(self.backend_counters)
+        d["fault_events"] = [dict(e) for e in self.fault_events]
+        d["recovery"] = dict(self.recovery)
         d["per_class"] = {k: v.to_dict()
                           for k, v in sorted(self.per_class.items())}
         return d
@@ -313,6 +331,16 @@ def _build_result(exp: Experiment, spec: WorkloadSpec, sim: SimResult,
             p99=pcts["p99"],
             deadline_met_frac=_none_if_nan(cm.deadline_met_frac()),
             cold_starts=cm.cold_start_count())
+    fault_events: List[Dict[str, Any]] = []
+    n_retries = 0
+    recovery: Dict[str, Any] = {}
+    if sim.injector is not None:
+        fault_events = list(sim.injector.fault_events)
+        n_retries = sim.injector.n_retries
+        # recovery windows are absolute-time views over the whole trace
+        # (the pre-fault baseline may predate the warmup cutoff)
+        recovery = recovery_summary(sim.metrics, sim.injector,
+                                    spec.duration + exp.drain)
     return ExperimentResult(
         name=exp.label(),
         stack=exp.stack,
@@ -333,6 +361,9 @@ def _build_result(exp: Experiment, spec: WorkloadSpec, sim: SimResult,
         wall_s=round(wall_s, 4),
         backend=exp.backend_name(),
         backend_counters=dict(sim.backend_counters),
+        fault_events=fault_events,
+        n_retries=n_retries,
+        recovery=recovery,
         sim=sim)
 
 
@@ -483,6 +514,10 @@ def _run_experiment(exp: Experiment,
         env.every(interval, lambda fn=fn: fn(env, stack), until=horizon)
     for t, fn in timed_calls:
         env.call_at(t, fn, env, stack)
+    injector: Optional[FaultInjector] = None
+    if exp.faults is not None and exp.faults.events:
+        injector = FaultInjector(exp.faults)
+        injector.install(env, stack, horizon)
 
     env.run_until(horizon)
     stack.collect(metrics)
@@ -493,7 +528,8 @@ def _run_experiment(exp: Experiment,
     sim = SimResult(metrics=metrics, env=env,
                     lbs=getattr(stack, "lbs", None),
                     scheduler=getattr(stack, "scheduler", None),
-                    backend=backend, backend_counters=counters)
+                    backend=backend, backend_counters=counters,
+                    injector=injector)
     return spec, sim, stack, wall
 
 
@@ -551,7 +587,17 @@ class SweepResult:
         return len(self.rows)
 
     def to_dict(self) -> Dict[str, Any]:
-        return {"schema": 1, "axes": self.axes, "rows": self.rows}
+        # axis/cell values may be rich objects (e.g. FaultPlan): serialize
+        # through their own to_dict so sweep JSONs stay self-contained
+        def val(v: Any) -> Any:
+            to_d = getattr(v, "to_dict", None)
+            return to_d() if callable(to_d) else v
+
+        return {"schema": 1,
+                "axes": {k: [val(v) for v in vs]
+                         for k, vs in self.axes.items()},
+                "rows": [{"cell": {k: val(v) for k, v in r["cell"].items()},
+                          "result": r["result"]} for r in self.rows]}
 
     def results(self) -> List[ExperimentResult]:
         if self.experiment_results is not None:

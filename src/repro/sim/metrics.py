@@ -188,7 +188,8 @@ class Metrics:
     mode; ``Metrics.flat(...)`` builds the column-recording mode."""
 
     __slots__ = ("_requests", "_qd", "_qt", "_lat_cache", "_cols", "_lo",
-                 "_warm_t", "_cls", "_qchunks", "_qcache", "_comp_cache")
+                 "_hi", "_warm_t", "_qt_hi", "_cls", "_qchunks", "_qcache",
+                 "_comp_cache")
 
     def __init__(self, requests: Optional[List[Request]] = None,
                  queuing_delays: Optional[List[float]] = None,
@@ -204,7 +205,9 @@ class Metrics:
         self._lat_cache: Optional[Tuple[Tuple[int, int], List[float]]] = None
         self._cols: Optional[_FlatColumns] = None
         self._lo = 0                    # arrival-row cutoff (warmup views)
+        self._hi: Optional[int] = None  # arrival-row upper cutoff (windows)
         self._warm_t = 0.0              # queuing-sample timestamp cutoff
+        self._qt_hi = float("inf")      # queuing-sample upper timestamp
         self._cls: Optional[int] = None  # class-id restriction (by_class)
         self._qchunks: List[Tuple[Sequence[float], Sequence[float]]] = []
         self._qcache = None             # (n_chunks, delays, times)
@@ -220,12 +223,15 @@ class Metrics:
         m._cols = _FlatColumns(arrival, dag_idx, dags)
         return m
 
-    def _view(self, lo: int, warm_t: float,
-              cls_id: Optional[int]) -> "Metrics":
+    def _view(self, lo: int, warm_t: float, cls_id: Optional[int],
+              hi: Optional[int] = None,
+              qt_hi: float = float("inf")) -> "Metrics":
         v = Metrics()
         v._cols = self._cols
         v._lo = lo
+        v._hi = hi
         v._warm_t = warm_t
+        v._qt_hi = qt_hi
         v._cls = cls_id
         v._qchunks = self._qchunks
         return v
@@ -272,8 +278,8 @@ class Metrics:
             else:
                 d = np.empty(0)
                 t = np.empty(0)
-            if self._warm_t > 0.0:
-                keep = t >= self._warm_t
+            if self._warm_t > 0.0 or self._qt_hi != float("inf"):
+                keep = (t >= self._warm_t) & (t < self._qt_hi)
                 d = d[keep]
                 t = t[keep]
             self._qcache = (key, d, t)
@@ -286,8 +292,10 @@ class Metrics:
         key = len(c.comp)
         if self._comp_cache is None or self._comp_cache[0] != key:
             ci, ct, cc, cs, cq = c.finalized()
-            if self._lo > 0:
+            if self._lo > 0 or self._hi is not None:
                 keep = ci >= self._lo
+                if self._hi is not None:
+                    keep &= ci < self._hi
                 ci, ct, cc, cs, cq = (ci[keep], ct[keep], cc[keep],
                                       cs[keep], cq[keep])
             if self._cls is not None:
@@ -300,20 +308,22 @@ class Metrics:
     def _n_rows(self) -> int:
         """Requests in this view's window (flat mode)."""
         c = self._cols
+        hi = c.n if self._hi is None else min(self._hi, c.n)
         if self._cls is None:
-            return c.n - self._lo
-        if c.n == self._lo:
+            return max(0, hi - self._lo)
+        if hi <= self._lo:
             return 0
-        return int((c.dag_class_id[c.dag_idx[self._lo:]]
+        return int((c.dag_class_id[c.dag_idx[self._lo:hi]]
                     == self._cls).sum())
 
     def _pending_in_window(self) -> List[Request]:
         c = self._cols
         lo, cid = self._lo, self._cls
+        hi = c.n if self._hi is None else self._hi
         out = []
         for i, r in c.pending.items():
-            if i >= lo and (cid is None
-                            or c.dag_class_id[c.dag_idx[i]] == cid):
+            if lo <= i < hi and (cid is None
+                                 or c.dag_class_id[c.dag_idx[i]] == cid):
                 out.append(r)
         return out
 
@@ -327,11 +337,11 @@ class Metrics:
         if self._cols is None:
             return self._requests
         reqs = self._cols.materialize()
-        if self._lo > 0:
-            reqs = reqs[self._lo:]
+        if self._lo > 0 or self._hi is not None:
+            reqs = reqs[self._lo:self._hi]
         if self._cls is not None:
             c = self._cols
-            cid_of = c.dag_class_id[c.dag_idx[self._lo:]].tolist()
+            cid_of = c.dag_class_id[c.dag_idx[self._lo:self._hi]].tolist()
             reqs = [r for r, k in zip(reqs, cid_of) if k == self._cls]
         return reqs
 
@@ -399,7 +409,8 @@ class Metrics:
         if self._cols is not None:
             lo = int(np.searchsorted(self._cols.arrival, warmup, "left"))
             return self._view(max(self._lo, lo),
-                              max(self._warm_t, warmup), self._cls)
+                              max(self._warm_t, warmup), self._cls,
+                              self._hi, self._qt_hi)
         reqs = [r for r in self._requests if r.arrival_time >= warmup]
         if len(self._qt) == len(self._qd):
             kept = [(t, d) for t, d in zip(self._qt, self._qd)
@@ -407,6 +418,35 @@ class Metrics:
             times = [t for t, _ in kept]
             delays = [d for _, d in kept]
         else:           # timestamps unavailable: keep the old behavior
+            times = []
+            delays = list(self._qd)
+        return Metrics(requests=reqs, queuing_delays=delays,
+                       queuing_delay_times=times)
+
+    def window(self, t0: float, t1: float) -> "Metrics":
+        """Time-window view over arrivals in ``[t0, t1)`` (recovery metrics:
+        deadline-met/latency before vs. after a fault).  Queuing-delay
+        samples are filtered by dispatch timestamp the same way.
+
+        Flat mode is a zero-copy view: two ``searchsorted`` cuts into the
+        time-sorted arrival column, composed with any prior
+        ``after_warmup``/``window`` restriction.  Object mode copies the
+        filtered lists (legacy semantics)."""
+        if self._cols is not None:
+            arr = self._cols.arrival
+            lo = int(np.searchsorted(arr, t0, "left"))
+            hi = int(np.searchsorted(arr, t1, "left"))
+            prev_hi = self._cols.n if self._hi is None else self._hi
+            return self._view(max(self._lo, lo),
+                              max(self._warm_t, t0), self._cls,
+                              min(prev_hi, hi), min(self._qt_hi, t1))
+        reqs = [r for r in self._requests if t0 <= r.arrival_time < t1]
+        if len(self._qt) == len(self._qd):
+            kept = [(t, d) for t, d in zip(self._qt, self._qd)
+                    if t0 <= t < t1]
+            times = [t for t, _ in kept]
+            delays = [d for _, d in kept]
+        else:           # timestamps unavailable: keep every sample
             times = []
             delays = list(self._qd)
         return Metrics(requests=reqs, queuing_delays=delays,
@@ -472,15 +512,17 @@ class Metrics:
         if self._cols is not None:
             c = self._cols
             out: Dict[str, Metrics] = {}
-            if c.n == self._lo:
+            hi = c.n if self._hi is None else min(self._hi, c.n)
+            if hi <= self._lo:
                 present = []
             else:
                 present = np.unique(
-                    c.dag_class_id[c.dag_idx[self._lo:]]).tolist()
+                    c.dag_class_id[c.dag_idx[self._lo:hi]]).tolist()
             for cid in present:
                 if self._cls is not None and cid != self._cls:
                     continue
-                v = self._view(self._lo, self._warm_t, cid)
+                v = self._view(self._lo, self._warm_t, cid,
+                               self._hi, self._qt_hi)
                 v._qchunks = []     # class views carry no queuing samples
                 out[c.class_names[cid]] = v
             return out

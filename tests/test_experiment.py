@@ -118,6 +118,27 @@ def test_result_json_round_trip_is_lossless():
     assert back == res
 
 
+def test_chaos_result_fields_round_trip_losslessly():
+    """fault_events / n_retries / recovery survive the JSON round-trip and
+    default to empty on fault-free runs."""
+    from repro.core.fault import FaultPlan, worker_crash
+
+    plain = simulate(_tiny_exp())
+    assert plain.fault_events == [] and plain.n_retries == 0
+    assert plain.recovery == {}
+
+    res = simulate(_tiny_exp(faults=FaultPlan(
+        events=(worker_crash(k=1, at=1.0),), seed=2)))
+    assert res.fault_events and res.fault_events[0]["kind"] == "worker_crash"
+    assert isinstance(res.n_retries, int)
+    assert res.recovery["events"][0]["kind"] == "worker_crash"
+    d = res.detach_sim().to_dict()
+    back = ExperimentResult.from_dict(json.loads(json.dumps(d)))
+    assert back.to_dict() == d
+    assert back.fault_events == res.fault_events
+    assert back.recovery == res.recovery
+
+
 def test_result_handles_zero_completions():
     dag_spec = WorkloadSpec([], duration=1.0)
     res = simulate(Experiment(workload=dag_spec, cluster=SMALL))

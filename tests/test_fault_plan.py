@@ -1,0 +1,268 @@
+"""Declarative chaos plans (docs/FAULTS.md): the @register_fault registry,
+seeded occurrence expansion, the sweepable ``faults=`` axis, zero-fault
+pay-for-what-you-use, and Metrics.window recovery views."""
+import json
+
+import pytest
+
+from repro.core import ClusterConfig
+from repro.core.fault import (FaultEvent, FaultInjector, FaultPlan,
+                              available_faults, control_plane_delay,
+                              get_fault, mass_eviction, register_fault,
+                              sgs_failstop, worker_crash)
+from repro.sim import Experiment, run_sweep, simulate
+
+SMALL = ClusterConfig(n_sgs=2, workers_per_sgs=3, cores_per_worker=4,
+                      pool_mem_mb=2048.0)
+
+
+def _exp(**kw):
+    base = dict(workload_factory="paper_workload_1",
+                workload_kwargs=dict(duration=4.0, scale=0.03,
+                                     dags_per_class=1),
+                cluster=SMALL, drain=3.0)
+    base.update(kw)
+    return Experiment(**base)
+
+
+def _crash_plan(**kw):
+    kw.setdefault("at", 1.5)
+    return FaultPlan(events=(worker_crash(k=1, **kw),), seed=3)
+
+
+# -- registry ----------------------------------------------------------------
+
+
+def test_builtin_faults_registered():
+    assert {"worker_crash", "sgs_failstop", "mass_eviction",
+            "control_plane_delay"} <= set(available_faults())
+
+
+def test_unknown_fault_error_lists_registered():
+    with pytest.raises(ValueError, match="worker_crash"):
+        get_fault("nope")
+
+
+def test_duplicate_fault_registration_rejected():
+    with pytest.raises(ValueError, match="already registered"):
+        register_fault("worker_crash")(lambda ctx: None)
+
+
+def test_custom_fault_runs_through_plan():
+    fired = []
+
+    @register_fault("test_noop_fault")
+    def _noop(ctx, tag="x"):
+        fired.append((ctx.env.now(), tag))
+        ctx.record("test_noop_fault", tag=tag)
+
+    try:
+        plan = FaultPlan(events=(FaultEvent("test_noop_fault", at=1.0,
+                                            kwargs=(("tag", "y"),)),))
+        res = simulate(_exp(faults=plan))
+        assert fired == [(1.0, "y")]
+        assert res.fault_events == [{"kind": "test_noop_fault", "t": 1.0,
+                                     "tag": "y"}]
+    finally:
+        from repro.core import fault as fault_mod
+        del fault_mod._FAULTS["test_noop_fault"]
+
+
+# -- event constructors / plan serialization ---------------------------------
+
+
+def test_worker_crash_needs_exactly_one_schedule():
+    with pytest.raises(ValueError, match="at= / rate="):
+        worker_crash(k=1)
+    with pytest.raises(ValueError, match="at= / rate="):
+        worker_crash(k=1, at=1.0, rate=2.0)
+
+
+def test_fault_plan_json_round_trip():
+    plan = FaultPlan(events=(worker_crash(k=2, rate=0.5, start=1.0, end=9.0),
+                             sgs_failstop(at=3.0, sgs=1),
+                             mass_eviction(at=4.0, frac=0.25),
+                             control_plane_delay(at=5.0, stall=0.1,
+                                                 target="lbs")),
+                     seed=11, name="storm", checkpoint_interval=0.5)
+    back = FaultPlan.from_dict(json.loads(json.dumps(plan.to_dict())))
+    assert back == plan
+    assert back.label() == "storm"
+    assert FaultPlan(events=(sgs_failstop(at=1.0),)).label() == "sgs_failstop"
+
+
+def test_occurrence_expansion_is_seeded_and_bounded():
+    ev = worker_crash(k=1, rate=2.0, start=1.0, end=6.0)
+    a = FaultInjector(FaultPlan(seed=5)).occurrences(ev, horizon=10.0)
+    b = FaultInjector(FaultPlan(seed=5)).occurrences(ev, horizon=10.0)
+    c = FaultInjector(FaultPlan(seed=6)).occurrences(ev, horizon=10.0)
+    assert a == b                       # same seed, same Poisson draws
+    assert a != c
+    assert all(1.0 < t < 6.0 for t in a)
+    # one-shot events fire verbatim; rate events clamp to the horizon
+    assert FaultInjector(FaultPlan()).occurrences(
+        worker_crash(at=2.5), horizon=10.0) == [2.5]
+    late = worker_crash(k=1, rate=2.0, start=1.0)
+    assert all(t < 3.0 for t in
+               FaultInjector(FaultPlan(seed=5)).occurrences(late, 3.0))
+
+
+# -- pay-for-what-you-use ----------------------------------------------------
+
+
+def test_empty_plan_is_decision_identical_to_no_plan():
+    r_none = simulate(_exp())
+    r_empty = simulate(_exp(faults=FaultPlan()))
+    a = r_none.detach_sim().to_dict()
+    b = r_empty.detach_sim().to_dict()
+    a.pop("wall_s"), b.pop("wall_s")
+    assert a == b
+    assert b["fault_events"] == [] and b["n_retries"] == 0
+    assert b["recovery"] == {}
+
+
+# -- the sweepable axis ------------------------------------------------------
+
+
+def test_faults_is_a_sweep_axis_with_serializable_cells():
+    sweep = run_sweep(_exp(), {"faults": [None, _crash_plan()],
+                               "seed": [0, 1]})
+    assert len(sweep) == 4
+    # chaos cells report events, zero-fault cells report none
+    for row in sweep:
+        has_plan = row["cell"]["faults"] is not None
+        assert bool(row["result"]["fault_events"]) == has_plan
+    # FaultPlan cell values serialize through their own to_dict
+    d = json.loads(json.dumps(sweep.to_dict()))
+    assert d["rows"][2]["cell"]["faults"]["events"][0]["kind"] == \
+        "worker_crash"
+
+
+def test_chaos_sweep_rows_byte_identical_across_workers():
+    """Identical seeds + identical FaultPlan give byte-identical rows
+    whether cells run sequentially or in a spawn pool (satellite: chaos
+    determinism under run_sweep(workers=N))."""
+    axes = {"faults": [_crash_plan(), FaultPlan(
+        events=(worker_crash(k=1, rate=1.0),), seed=9)],
+        "seed": [0, 1]}
+    seq = run_sweep(_exp(), axes, workers=1)
+    par = run_sweep(_exp(), axes, workers=2)
+
+    def strip(rows):
+        out = []
+        for r in rows:
+            d = json.loads(json.dumps({"cell": {k: getattr(v, "to_dict",
+                                                           lambda: v)()
+                                                for k, v in r["cell"].items()},
+                                       "result": dict(r["result"])}))
+            d["result"].pop("wall_s")
+            out.append(d)
+        return out
+
+    assert json.dumps(strip(seq.rows)) == json.dumps(strip(par.rows))
+
+
+# -- built-in fault shapes through simulate ----------------------------------
+
+
+def test_worker_crash_rate_all_requests_accounted_for():
+    """Nonzero fault rate on every stack: no hangs, every arrival either
+    completes (retries re-drive lost executions) — completed == arrivals."""
+    plan = FaultPlan(events=(worker_crash(k=1, rate=1.0),), seed=2)
+    for stack in ("archipelago", "fifo", "sparrow"):
+        res = simulate(_exp(stack=stack, faults=plan, drain=6.0))
+        assert res.fault_events, stack
+        m = res.sim.metrics
+        assert m.n_completed == m.n_requests, stack
+
+
+def test_worker_crash_never_kills_last_worker():
+    tiny = ClusterConfig(n_sgs=1, workers_per_sgs=2, cores_per_worker=4,
+                         pool_mem_mb=2048.0)
+    plan = FaultPlan(events=(worker_crash(k=8, at=1.0),), seed=0)
+    res = simulate(_exp(cluster=tiny, faults=plan))
+    killed = res.fault_events[0]["killed"]
+    assert len(killed) == 1             # spare=1 leaves one worker alive
+    (sgs,) = res.sim.lbs.sgss.values()
+    assert len(sgs.workers) == 1
+    # the survivor keeps completing on half capacity (no hang, no crash)
+    assert res.sim.metrics.n_completed > 0
+
+
+def test_mass_eviction_triggers_cold_boot_storm():
+    no_fault = simulate(_exp())
+    storm = simulate(_exp(faults=FaultPlan(
+        events=(mass_eviction(at=2.0, frac=1.0),))))
+    ev = storm.fault_events[0]
+    assert ev["kind"] == "mass_eviction" and ev["n_evicted"] > 0
+    # re-building the evicted pool costs extra setups
+    assert storm.cold_start_count >= no_fault.cold_start_count
+    assert storm.sim.metrics.n_completed == storm.sim.metrics.n_requests
+
+
+def test_control_plane_delay_stalls_decisions():
+    base = dict(lb_cost=2e-4, sgs_cost=2e-4)
+    calm = simulate(_exp(**base))
+    spiky = simulate(_exp(faults=FaultPlan(
+        events=(control_plane_delay(at=1.0, stall=0.5),)), **base))
+    assert spiky.fault_events[0]["n_clocks"] > 0
+    assert spiky.queuing_percentiles["p99"] >= calm.queuing_percentiles["p99"]
+    assert spiky.sim.metrics.n_completed == spiky.sim.metrics.n_requests
+
+
+def test_sgs_failstop_skips_flat_stacks():
+    res = simulate(_exp(stack="fifo", faults=FaultPlan(
+        events=(sgs_failstop(at=1.0),))))
+    assert res.fault_events[0].get("skipped") is True
+    assert res.n_retries == 0
+
+
+# -- Metrics.window ----------------------------------------------------------
+
+
+def test_metrics_window_partitions_flat_trace():
+    res = simulate(_exp())
+    m = res.sim.metrics
+    full = m.window(0.0, float("inf"))
+    assert (full.n_requests, full.n_completed) == \
+        (m.n_requests, m.n_completed)
+    assert full.deadline_met_frac() == m.deadline_met_frac()
+    edges = [0.0, 1.0, 2.5, 4.0, float("inf")]
+    parts = [m.window(a, b) for a, b in zip(edges, edges[1:])]
+    assert sum(p.n_requests for p in parts) == m.n_requests
+    assert sum(p.n_completed for p in parts) == m.n_completed
+    arr = m._cols.arrival
+    for (a, b), p in zip(zip(edges, edges[1:]), parts):
+        assert p.n_requests == int(((arr >= a) & (arr < b)).sum())
+        assert all(a <= t < b for t in p.queuing_delay_times)
+
+
+def test_metrics_window_legacy_object_mode():
+    from repro.core.types import Request
+    from repro.sim import Metrics
+    from repro.sim.metrics import percentile  # noqa: F401  (import check)
+    dag = None
+    from repro.core.types import DagSpec, FunctionSpec
+    dag = DagSpec("d", (FunctionSpec("d/f", 0.1),), (), deadline=1.0)
+
+    def req(arrival, completion):
+        r = Request(dag=dag, arrival_time=arrival)
+        r.completion_time = completion
+        return r
+
+    m = Metrics(requests=[req(0.5, 0.7), req(1.5, 1.9), req(3.0, None)],
+                queuing_delays=[0.1, 0.2, 0.3],
+                queuing_delay_times=[0.6, 1.6, 3.1])
+    w = m.window(1.0, 3.0)
+    assert [r.arrival_time for r in w.requests] == [1.5]
+    assert w.queuing_delays == [0.2]
+    assert w.n_completed == 1
+
+
+def test_metrics_window_composes_with_warmup():
+    res = simulate(_exp(warmup=1.0))
+    m = res.sim.metrics
+    a = m.after_warmup(1.0).window(0.0, 3.0)
+    b = m.window(1.0, 3.0)
+    assert a.n_requests == b.n_requests
+    assert a.n_completed == b.n_completed

@@ -1,13 +1,16 @@
-"""Fault-tolerance tests (§6.1): worker fail-stop, SGS/LB state recovery."""
+"""Fault-tolerance tests (§6.1): worker fail-stop, SGS/LB state recovery,
+async-seam crash safety, and end-to-end SGS failover (docs/FAULTS.md)."""
 import pytest
 
 from repro.core import (ClusterConfig, Request, SGSConfig,
                         SemiGlobalScheduler, Worker)
 from repro.core.cluster import build_cluster
-from repro.core.fault import (StateStore, checkpoint_lbs, checkpoint_sgs,
-                              fail_worker, restore_lbs, restore_sgs)
+from repro.core.fault import (FaultPlan, StateStore, checkpoint_lbs,
+                              checkpoint_sgs, fail_sgs, fail_worker,
+                              restore_lbs, restore_sgs, sgs_failstop,
+                              worker_crash)
 from repro.core.types import DagSpec, FunctionSpec
-from repro.sim import ConstantRate, WorkloadSpec
+from repro.sim import ConstantRate, Experiment, WorkloadSpec, simulate
 from repro.sim.engine import SimEnv
 
 
@@ -96,6 +99,57 @@ def test_sgs_state_recovery_from_store():
         assert sgs2.sandboxes.total_sandboxes("d/f") == old_demand
 
 
+def test_async_backend_completion_on_dead_worker_is_dropped():
+    """Satellite regression: under the async execution seam a completion
+    scheduled via ``submit()`` on a worker that later dies must neither
+    mutate scheduler/worker state nor double-complete the retried
+    invocation (guarded by the inflight registration)."""
+    env = SimEnv()
+    workers = [Worker(worker_id=i, cores=2, pool_mem_mb=4096)
+               for i in range(3)]
+
+    def submit(inv, done, setup=0.0):       # async seam: completion later
+        env.call_after(setup + 0.1, done, 0.1)
+
+    sgs = SemiGlobalScheduler(0, workers, env, backend_submit=submit)
+    dag = _dag()
+    reqs = [Request(dag=dag, arrival_time=0.0) for _ in range(4)]
+    for r in reqs:
+        sgs.submit_request(r)
+    env.run_until(0.05)                     # all executions in flight
+    victim = next(w for w in sgs.workers if w.busy_cores > 0)
+    busy_at_death = victim.busy_cores
+    assert fail_worker(sgs, victim.worker_id) > 0
+    env.run_until(5.0)                      # stale done()s fire en route
+    # stale completions for the dead worker were dropped, not applied
+    assert victim.busy_cores == busy_at_death
+    # every request completed exactly once through the retries
+    assert len(sgs.completed_requests) == len(reqs)
+    assert all(r.completion_time is not None for r in reqs)
+    assert all(w.busy_cores == 0 for w in sgs.workers)
+    assert sgs._free_cores == sum(w.cores for w in sgs.workers)
+
+
+def test_stub_backend_crash_storm_accounting():
+    """Same regression end-to-end: the ``stub`` backend (the real-execution
+    code path) under a crash storm keeps all requests accounted for and the
+    core ledgers consistent."""
+    res = simulate(Experiment(
+        stack="archipelago", backend="stub",
+        workload_factory="paper_workload_1",
+        workload_kwargs=dict(duration=4.0, scale=0.03, dags_per_class=1),
+        cluster=ClusterConfig(n_sgs=2, workers_per_sgs=3,
+                              cores_per_worker=4, pool_mem_mb=2048.0),
+        drain=6.0,
+        faults=FaultPlan(events=(worker_crash(k=1, at=1.0),
+                                 worker_crash(k=1, at=2.0)), seed=4)))
+    assert res.n_retries >= 0 and len(res.fault_events) == 2
+    m = res.sim.metrics
+    assert m.n_completed == m.n_requests
+    for sgs in res.sim.lbs.sgss.values():
+        assert all(w.busy_cores == 0 for w in sgs.workers)
+
+
 def test_lbs_mapping_recovery_from_store():
     env = SimEnv()
     cc = ClusterConfig(n_sgs=4, workers_per_sgs=2, cores_per_worker=4)
@@ -110,3 +164,140 @@ def test_lbs_mapping_recovery_from_store():
     st2 = lbs2._state(dag, 0.0)         # re-register the DAG
     restore_lbs(lbs2, store, 0.0)
     assert lbs2._dag_state["d"].active == st.active
+
+
+def test_restore_lbs_drops_mappings_to_dead_sgss():
+    env = SimEnv()
+    big = build_cluster(env, ClusterConfig(n_sgs=4, workers_per_sgs=2,
+                                           cores_per_worker=4))
+    dag = _dag()
+    st = big._state(dag, 0.0)
+    for _ in range(3):
+        big._scale_out(st, 0.0)
+    store = StateStore()
+    checkpoint_lbs(big, store)
+    assert len(st.active) >= 3
+
+    # the replacement cluster only has SGSs 0 and 1: mappings to the dead
+    # ids must be filtered, not restored blind
+    small = build_cluster(env, ClusterConfig(n_sgs=2, workers_per_sgs=2,
+                                             cores_per_worker=4))
+    small._state(dag, 0.0)
+    restore_lbs(small, store, 0.0)
+    st2 = small._dag_state["d"]
+    assert set(st2.active) <= set(small.sgss)
+    assert set(st2.removed) <= set(small.sgss)
+
+
+def test_checkpoint_restore_round_trip_reproduces_soft_state():
+    """Property-style round-trip: checkpoint → fresh SGS (same pool shape)
+    → restore reproduces demand targets, fn specs and the DAG registry,
+    and holds the demand as a floor so the fresh estimator cannot
+    immediately soft-evict the restored pool."""
+    env = SimEnv()
+    workers = [Worker(worker_id=i, cores=4, pool_mem_mb=4096)
+               for i in range(3)]
+    sgs = SemiGlobalScheduler(0, workers, env)
+    dags = [_dag(f"d{i}", exec_time=0.05 * (i + 1)) for i in range(3)]
+    for t in range(6):
+        for d in dags:
+            env.call_at(0.2 * t, lambda d=d: sgs.submit_request(
+                Request(dag=d, arrival_time=env.now())))
+    env.run_until(2.0)                  # estimator ticks, demand set
+    store = StateStore()
+    checkpoint_sgs(sgs, store)
+
+    w2 = [Worker(worker_id=10 + i, cores=4, pool_mem_mb=4096)
+          for i in range(3)]
+    sgs2 = SemiGlobalScheduler(0, w2, env)
+    restore_sgs(sgs2, store, env.now())
+    assert sgs2._dags == sgs._dags
+    assert sgs2.sandboxes.fn_specs == sgs.sandboxes.fn_specs
+    for fn, d in sgs.sandboxes.demand_map.items():
+        assert sgs2.sandboxes.demand_map.get(fn) == d
+        if d > 0:
+            assert sgs2.sandboxes.total_sandboxes(fn) == d
+            floor, expiry = sgs2._demand_floor[fn]
+            assert floor == d and expiry > env.now()
+
+
+# -- end-to-end SGS failover (§6.1) ------------------------------------------
+
+
+def _failover_exp(**kw):
+    base = dict(stack="archipelago", workload_factory="paper_workload_1",
+                workload_kwargs=dict(duration=8.0, scale=0.05,
+                                     dags_per_class=2),
+                cluster=ClusterConfig(n_sgs=3, workers_per_sgs=4,
+                                      cores_per_worker=8,
+                                      pool_mem_mb=8192.0),
+                drain=5.0, seed=1)
+    base.update(kw)
+    return Experiment(**base)
+
+
+def test_sgs_failstop_end_to_end_failover():
+    """Acceptance: kill an SGS mid-run; the replacement restores from the
+    StateStore, the LBS re-routes, all pre-failure requests complete, and
+    post-recovery deadline-met stays within 5 points of the no-fault run."""
+    t_fail = 4.0
+    healthy = simulate(_failover_exp())
+    chaos = simulate(_failover_exp(faults=FaultPlan(
+        events=(sgs_failstop(at=t_fail),), seed=0)))
+
+    ev = chaos.fault_events[0]
+    assert ev["kind"] == "sgs_failstop" and ev["restored"]
+    sid = ev["sgs"]
+    lbs = chaos.sim.lbs
+    replacement = lbs.sgss[sid]
+    assert replacement._successor is None       # live instance
+    # the ring still routes this id — to the replacement object
+    assert replacement is not None and replacement.sgs_id == sid
+
+    # every request (pre- and post-failure) completes
+    m = chaos.sim.metrics
+    assert m.n_completed == m.n_requests == healthy.sim.metrics.n_requests
+    pre = m.window(0.0, t_fail)
+    assert pre.n_completed == pre.n_requests
+
+    # post-recovery deadline-met within 5 points of the no-fault run
+    after = m.window(t_fail + 1.0, float("inf")).deadline_met_frac()
+    baseline = healthy.sim.metrics.window(
+        t_fail + 1.0, float("inf")).deadline_met_frac()
+    assert after == pytest.approx(baseline, abs=0.05)
+    # the recovery report covers the event
+    assert chaos.recovery["events"][0]["kind"] == "sgs_failstop"
+
+
+def test_fail_sgs_requeues_and_forwards_completions():
+    """Direct fail_sgs: queued work is retried on the replacement and
+    in-flight completions on surviving workers forward through the dead
+    instance's successor pointer."""
+    env = SimEnv()
+    lbs = build_cluster(env, ClusterConfig(n_sgs=2, workers_per_sgs=2,
+                                           cores_per_worker=2))
+    dag = _dag(exec_time=0.2)
+    sid = lbs.ring.lookup("d")
+    home = lbs.sgss[sid]
+    reqs = [Request(dag=dag, arrival_time=0.0) for _ in range(10)]
+    for r in reqs:
+        env.call_at(0.0, lambda r=r: lbs.route(r, env.now()))
+    env.run_until(0.05)             # 4 cores busy, 6 invocations queued
+    assert home._queue
+    store = StateStore()
+    checkpoint_sgs(home, store)
+    checkpoint_lbs(lbs, store)
+
+    replacement, n_retry = fail_sgs(lbs, sid, store, env)
+    assert replacement is not None and n_retry > 0
+    assert lbs.sgss[sid] is replacement
+    assert home._successor is replacement
+    # unknown ids are a no-op (killing the *replacement* again is allowed —
+    # repeated fail-stops of the same rack's scheduler are a valid plan)
+    assert fail_sgs(lbs, 999, store, env) == (None, 0)
+
+    env.run_until(10.0)
+    assert all(r.completion_time is not None for r in reqs)
+    # completions (including pre-failure in-flight ones) landed once each
+    assert len(replacement.completed_requests) == len(reqs)
+    assert all(w.busy_cores == 0 for w in replacement.workers)
