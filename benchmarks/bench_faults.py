@@ -39,6 +39,7 @@ try:
 except ImportError:                                     # pragma: no cover
     sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+from repro.core.autoscale import AutoscaleConfig, scaling_summary
 from repro.core.cluster import ClusterConfig
 from repro.core.fault import (FaultPlan, control_plane_delay, mass_eviction,
                               sgs_failstop, worker_crash)
@@ -52,8 +53,9 @@ CLUSTERS = {
                pool_mem_mb=65536.0),
 }
 
-# see bench_sim_throughput: the routing tier scales with the cluster
-XL_PARAMS = {"n_lbs": 16}
+# see bench_sim_throughput: the routing tier sizes itself under load
+# (core.autoscale) instead of a hand-tuned n_lbs
+XL_AUTOSCALE = AutoscaleConfig()
 
 STACKS = ["archipelago", "fifo", "sparrow"]
 
@@ -151,7 +153,7 @@ def run_xl(duration: float, scale: float) -> Dict[str, Dict]:
                      workload_kwargs=dict(duration=duration, scale=scale,
                                           dags_per_class=20),
                      cluster=ClusterConfig(**CLUSTERS["xl"]),
-                     params=dict(XL_PARAMS), drain=5.0, seed=0,
+                     autoscale=XL_AUTOSCALE, drain=5.0, seed=0,
                      faults=plan)
     t0 = time.perf_counter()
     res = simulate(exp)
@@ -164,6 +166,8 @@ def run_xl(duration: float, scale: float) -> Dict[str, Dict]:
           "recovery": res.recovery}
     name = "xl_composite_chaos"
     row = _cell_row(name, "xl", "archipelago", plan.name, rd, wall)
+    row["autoscale"] = XL_AUTOSCALE.to_dict()
+    row["scaling"] = scaling_summary(res.scaling_events)
     print(f"{name}: {row['wall_s']}s met={row['deadline_met_frac']} "
           f"retries={row['n_retries']} "
           f"completed={row['n_completed_total']}/{row['n_requests']}",

@@ -1,0 +1,226 @@
+"""Traffic-scenario benchmark: realistic arrival shapes x scheduler stacks
+(docs/SCENARIOS.md).
+
+Two tracked tiers, mirroring ``bench_sim_throughput`` / ``bench_faults``:
+
+* ``std`` — the scenario matrix on the 200-worker cluster (8 SGSs x 25):
+  every built-in traffic shape (steady / diurnal / flash_crowd /
+  tenant_churn / zipf_mix) x scheduler stacks (archipelago / sparrow /
+  pull).  ``traffic`` is a literal ``run_sweep`` axis — each cell is one
+  registered scenario applied to ``paper_workload_1``.
+* ``xl`` — 2,000 workers (80 SGSs x 25), 80+ tenants, >= 1 M simulated
+  requests per cell, under the two scenarios that actually stress the
+  control plane: a flash crowd (burst routing load) and tenant churn
+  (DAGs joining/leaving the consistent-hash ring mid-run).  The LBS
+  replica pool is elastic (``Experiment.autoscale``) — no hand-tuned
+  ``n_lbs`` anywhere in this file.
+
+Reported per cell: deadline-met fraction, end-to-end latency percentiles
+(the CDF the paper plots), completion accounting (completed == arrivals),
+and the control-plane scaling digest (LBS replica peak/final, SGS per-DAG
+scale events) from ``ExperimentResult.scaling_events``.
+
+Results go to ``BENCH_scenarios.json`` at the repo root (tracked);
+``--smoke`` runs trimmed std cells only and writes
+``BENCH_scenarios.partial.json`` (gitignored) so CI never clobbers the
+tracked matrix.
+
+Run:
+    python -m benchmarks.bench_scenarios [--smoke] [--tier std|xl|all]
+                                         [--workers N]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+from pathlib import Path
+from typing import Dict, List
+
+try:
+    import repro  # noqa: F401
+except ImportError:                                     # pragma: no cover
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core.autoscale import AutoscaleConfig, scaling_summary
+from repro.core.cluster import ClusterConfig
+from repro.sim.experiment import Experiment, run_sweep, simulate
+
+CLUSTERS = {
+    "std": dict(n_sgs=8, workers_per_sgs=25, cores_per_worker=20,
+                pool_mem_mb=65536.0),
+    # 2,000 workers: 80 rack-sized SGS pools of 25 machines
+    "xl": dict(n_sgs=80, workers_per_sgs=25, cores_per_worker=20,
+               pool_mem_mb=65536.0),
+}
+
+STACKS = ["archipelago", "sparrow", "pull"]
+TRAFFICS = ["steady", "diurnal", "flash_crowd", "tenant_churn", "zipf_mix"]
+
+# the xl routing tier sizes itself from observed decision-clock load
+XL_AUTOSCALE = AutoscaleConfig()
+
+# the two xl cells: the shapes that exercise the elastic control plane
+XL_TRAFFICS = ["flash_crowd", "tenant_churn"]
+
+
+def _cell_row(tier: str, stack: str, traffic: str, rd: Dict,
+              wall_s: float) -> Dict:
+    """Compact tracked row: deadline adherence + latency CDF + accounting
+    + the control-plane scaling digest."""
+    return {
+        "tier": tier,
+        "stack": stack,
+        "traffic": traffic,
+        "wall_s": round(wall_s, 3),
+        "n_requests": rd["n_requests_total"],
+        "n_completed_total": rd["n_completed_total"],
+        "all_completed": rd["n_completed_total"] == rd["n_requests_total"],
+        "deadline_met_frac": rd["deadline_met_frac"],
+        "latency_percentiles": rd["latency_percentiles"],
+        "scaling": scaling_summary(rd["scaling_events"]),
+    }
+
+
+def run_std(duration: float, scale: float, workers: int,
+            stacks: List[str] = None,
+            traffics: List[str] = None) -> Dict[str, Dict]:
+    stacks = stacks or STACKS
+    traffics = traffics or TRAFFICS
+    base = Experiment(workload_factory="paper_workload_1",
+                      workload_kwargs=dict(duration=duration, scale=scale),
+                      cluster=ClusterConfig(**CLUSTERS["std"]),
+                      drain=5.0, seed=0)
+    t0 = time.perf_counter()
+    sweep = run_sweep(base, {"stack": stacks, "traffic": traffics},
+                      workers=workers)
+    wall = time.perf_counter() - t0
+    rows: Dict[str, Dict] = {}
+    per_cell = wall / max(1, len(sweep))
+    for row in sweep:
+        stack = row["cell"]["stack"]
+        traffic = row["cell"]["traffic"]
+        r = row["result"]
+        rd = {"n_requests_total": r["n_requests_total"],
+              "n_completed_total": r["n_completed"],
+              "deadline_met_frac": r["deadline_met_frac"],
+              "latency_percentiles": r["latency_percentiles"],
+              "scaling_events": r["scaling_events"]}
+        name = f"std_{stack}_{traffic}"
+        rows[name] = _cell_row("std", stack, traffic, rd, per_cell)
+        print(f"{name}: met={rd['deadline_met_frac']} "
+              f"p99={rd['latency_percentiles']['p99']} "
+              f"completed={rd['n_completed_total']}/"
+              f"{rd['n_requests_total']}", flush=True)
+    return rows
+
+
+def run_xl(duration: float, scale: float) -> Dict[str, Dict]:
+    rows: Dict[str, Dict] = {}
+    for traffic in XL_TRAFFICS:
+        exp = Experiment(stack="archipelago",
+                         workload_factory="paper_workload_1",
+                         workload_kwargs=dict(duration=duration, scale=scale,
+                                              dags_per_class=20),
+                         cluster=ClusterConfig(**CLUSTERS["xl"]),
+                         autoscale=XL_AUTOSCALE, traffic=traffic,
+                         drain=5.0, seed=0)
+        t0 = time.perf_counter()
+        res = simulate(exp)
+        wall = time.perf_counter() - t0
+        rd = {"n_requests_total": res.n_requests_total,
+              "n_completed_total": res.n_completed,
+              "deadline_met_frac": res.deadline_met_frac,
+              "latency_percentiles": res.to_dict()["latency_percentiles"],
+              "scaling_events": res.scaling_events}
+        name = f"xl_{traffic}"
+        row = _cell_row("xl", "archipelago", traffic, rd, wall)
+        row["autoscale"] = XL_AUTOSCALE.to_dict()
+        rows[name] = row
+        s = row["scaling"]
+        print(f"{name}: {row['wall_s']}s met={row['deadline_met_frac']} "
+              f"completed={row['n_completed_total']}/{row['n_requests']} "
+              f"lbs_peak={s.get('lbs_peak_replicas')} "
+              f"sgs_outs={s.get('sgs_scale_outs')}", flush=True)
+    return rows
+
+
+def run(duration: float = 20.0) -> None:
+    """``benchmarks.run`` entry point: the std matrix at reduced width,
+    emitted as figure rows (full matrices live in BENCH_scenarios.json)."""
+    from .common import emit
+    rows = run_std(duration=duration, scale=0.5, workers=1,
+                   stacks=["archipelago", "sparrow"],
+                   traffics=["steady", "flash_crowd", "tenant_churn"])
+    for name, r in rows.items():
+        emit(f"scenarios_{r['stack']}_{r['traffic']}_met", 0.0,
+             f"{r['deadline_met_frac']*100:.2f}% "
+             f"(p99={r['latency_percentiles']['p99']})")
+    emit("scenarios_all_completed", 0.0,
+         str(all(r["all_completed"] for r in rows.values())))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="trimmed std matrix only (CI); writes "
+                         "BENCH_scenarios.partial.json so the tracked "
+                         "full-run file is never clobbered")
+    ap.add_argument("--tier", choices=["std", "xl", "all"], default="all")
+    ap.add_argument("--workers", type=int, default=4,
+                    help="run_sweep process-pool width for the std matrix "
+                         "(rows are byte-identical at any width)")
+    ap.add_argument("--out", default="")
+    args = ap.parse_args()
+
+    repo_root = Path(__file__).resolve().parent.parent
+    default_name = ("BENCH_scenarios.partial.json" if args.smoke
+                    else "BENCH_scenarios.json")
+    out_path = Path(args.out) if args.out else (repo_root / default_name)
+
+    tiers = ["std", "xl"] if args.tier == "all" else [args.tier]
+    if args.smoke and args.tier == "all":
+        tiers = ["std"]
+
+    runs: Dict[str, Dict] = {}
+    if "std" in tiers:
+        if args.smoke:
+            runs.update(run_std(duration=6.0, scale=0.25,
+                                workers=args.workers))
+        else:
+            runs.update(run_std(duration=20.0, scale=1.0,
+                                workers=args.workers))
+    if "xl" in tiers:
+        if args.smoke:
+            runs.update(run_xl(duration=4.0, scale=2.0))
+        else:
+            runs.update(run_xl(duration=40.0, scale=10.0))
+
+    payload = {
+        "schema": 1,
+        "bench": "scenarios",
+        "smoke": bool(args.smoke),
+        "tiers": tiers,
+        "clusters": {t: CLUSTERS[t] for t in tiers},
+        "stacks": STACKS,
+        "traffics": TRAFFICS,
+        "python": sys.version.split()[0],
+        "runs": runs,
+    }
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {out_path}")
+
+    # hard accounting gate: no scenario may lose a request
+    lost = {n: r for n, r in runs.items() if not r["all_completed"]}
+    if lost:
+        print(f"ACCOUNTING FAILURE: incomplete requests in {sorted(lost)}",
+              file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -42,6 +42,7 @@ try:
 except ImportError:                                     # pragma: no cover
     sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+from repro.core.autoscale import AutoscaleConfig, scaling_summary
 from repro.core.cluster import ClusterConfig
 from repro.sim.experiment import Experiment, simulate
 
@@ -68,9 +69,11 @@ BASELINE_BEFORE = {
 
 # The LBS is "a scalable service" (§5): at the xl tier's ~26 k rps the
 # default 4 replicas (190 us per decision ~ 21 k rps capacity) would
-# themselves saturate, so the scenario provisions 16 (~31% utilization) —
-# scaling the routing tier with the cluster, exactly as the paper argues.
-XL_PARAMS = {"n_lbs": 16}
+# themselves saturate.  The replica pool is elastic now (core.autoscale):
+# the controller observes decision-clock utilization and sizes the tier
+# itself — no hand-tuned n_lbs — exactly as the paper argues the LBS
+# should scale with the cluster.
+XL_AUTOSCALE = AutoscaleConfig()
 
 # (name, workload factory, workload kwargs, experiment params) per tier;
 # std names are the PR-1 trajectory keys and must not change.
@@ -88,9 +91,9 @@ SCENARIOS = {
     # consistent-hash LBS tier actually spreads load over the 80 SGSs
     "xl": [
         ("xl_wl1_scale10", "paper_workload_1",
-         dict(duration=40.0, scale=10.0, dags_per_class=20), XL_PARAMS),
+         dict(duration=40.0, scale=10.0, dags_per_class=20), {}),
         ("xl_wl2_scale10", "paper_workload_2",
-         dict(duration=40.0, scale=10.0, dags_per_class=20), XL_PARAMS),
+         dict(duration=40.0, scale=10.0, dags_per_class=20), {}),
     ],
 }
 
@@ -102,13 +105,14 @@ QUICK_SCENARIOS = {
     # trimmed 2,000-worker cell: full cluster + tenant fan-out, short trace
     "xl": [
         ("xl_wl1_quick", "paper_workload_1",
-         dict(duration=4.0, scale=2.0, dags_per_class=20), XL_PARAMS),
+         dict(duration=4.0, scale=2.0, dags_per_class=20), {}),
     ],
 }
 
 
 def run_one(name: str, tier: str, factory: str, kw: dict, params: dict,
-            repeats: int = 1) -> dict:
+            repeats: int = 1,
+            autoscale: AutoscaleConfig = None) -> dict:
     cluster = ClusterConfig(**CLUSTERS[tier])
     # timeit-style best-of-N: on a noisy shared machine the minimum wall
     # time is the informative statistic (every run does identical
@@ -125,7 +129,7 @@ def run_one(name: str, tier: str, factory: str, kw: dict, params: dict,
                                       workload_factory=factory,
                                       workload_kwargs=kw, name=name,
                                       cluster=cluster, params=dict(params),
-                                      seed=0))
+                                      autoscale=autoscale, seed=0))
             wall = min(wall, time.perf_counter() - t0)
         finally:
             gc.enable()
@@ -144,6 +148,9 @@ def run_one(name: str, tier: str, factory: str, kw: dict, params: dict,
         "peak_rss_mb": round(
             resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024.0, 1),
     }
+    if autoscale is not None:
+        row["autoscale"] = autoscale.to_dict()
+        row["scaling"] = scaling_summary(res.scaling_events)
     before = BASELINE_BEFORE.get(name)
     if before:
         row["speedup_vs_before"] = round(
@@ -193,8 +200,10 @@ def main() -> None:
     runs = {}
     for tier in tiers:
         for name, make, kw, params in table[tier]:
-            runs[name] = run_one(name, tier, make, kw, params,
-                                 repeats=repeats)
+            runs[name] = run_one(
+                name, tier, make, kw, params, repeats=repeats,
+                # the xl routing tier sizes itself (no hand-tuned n_lbs)
+                autoscale=XL_AUTOSCALE if tier == "xl" else None)
 
     payload = {
         "schema": 2,

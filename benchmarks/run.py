@@ -37,6 +37,7 @@ BENCH_SPECS: Dict[str, Tuple[str, Optional[float], Optional[float]]] = {
     "fig13": ("fig13_sgs_size", 10.0, 20.0),
     "scaleout": ("fig_scaleout_gradual", 14.0, 30.0),
     "fault": ("fig_fault", 12.0, 20.0),
+    "scenarios": ("bench_scenarios", 6.0, 20.0),
     "overheads": ("tbl_overheads", 500, 2000),
     "roofline": ("roofline_table", None, None),
 }

@@ -15,6 +15,8 @@ Public API:
                                              (docs/SERVING.md)
     FaultPlan, register_fault, fail_sgs   -- declarative chaos injection +
                                              §6.1 failover (docs/FAULTS.md)
+    AutoscaleConfig, LBSReplicaAutoscaler -- elastic LBS replica pool
+                                             (docs/SCENARIOS.md)
 """
 from .types import (DagSpec, FunctionSpec, Invocation, Request, Sandbox,
                     SandboxState)
@@ -29,6 +31,8 @@ from .backends import (BatchCoalescer, BatchedJaxBackend, CompletionQueue,
                        StubBackend, StubBatchedBackend, available_backends,
                        get_backend, register_backend)
 from .stacks import (Stack, available_stacks, get_stack, register_stack)
+from .autoscale import (AutoscaleConfig, LBSReplicaAutoscaler, ScalingEvent,
+                        scaling_summary)
 from .fault import (FaultContext, FaultEvent, FaultInjector, FaultPlan,
                     StateStore, available_faults, checkpoint_lbs,
                     checkpoint_sgs, control_plane_delay, fail_sgs,
@@ -52,4 +56,6 @@ __all__ = [
     "worker_crash", "sgs_failstop", "mass_eviction", "control_plane_delay",
     "register_fault", "get_fault", "available_faults",
     "time_to_recovery", "recovery_summary",
+    "AutoscaleConfig", "ScalingEvent", "LBSReplicaAutoscaler",
+    "scaling_summary",
 ]

@@ -14,6 +14,7 @@ import random
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
+from .autoscale import ScalingEvent
 from .sgs import SemiGlobalScheduler
 from .types import DagSpec, Request
 
@@ -23,7 +24,13 @@ def _hash(key: str) -> int:
 
 
 class ConsistentHashRing:
-    """Classic Karger ring [31] with virtual nodes."""
+    """Classic Karger ring [31] with virtual nodes.
+
+    Membership is dynamic: :meth:`add_node`/:meth:`remove_node` re-shard
+    incrementally, so when the SGS set changes (control-plane elasticity,
+    failover replacement pools) only the key range owned by the affected
+    node's vnodes moves — roughly ``1/n`` of lookups for one of ``n``
+    nodes — and every other key keeps its owner."""
 
     def __init__(self, ids: List[int], vnodes: int = 50):
         if not ids:
@@ -31,6 +38,7 @@ class ConsistentHashRing:
             # ZeroDivisionError from `% len(self._points)`
             raise ValueError(
                 "ConsistentHashRing needs at least one SGS id")
+        self._vnodes = vnodes
         self._points: List[int] = []
         self._owner: Dict[int, int] = {}
         for sid in ids:
@@ -40,6 +48,9 @@ class ConsistentHashRing:
                 self._owner[h] = sid
         self._points.sort()
         self._ids = sorted(set(ids))
+
+    def ids(self) -> List[int]:
+        return list(self._ids)
 
     def lookup(self, key: str) -> int:
         h = _hash(key)
@@ -54,6 +65,35 @@ class ConsistentHashRing:
         start = ids.index(first)
         return [ids[(start + k) % len(ids)] for k in range(len(ids))]
 
+    # ------------------------------------------------------------ re-sharding
+    def add_node(self, sid: int) -> None:
+        """Insert one SGS id's vnodes (no-op if already present): only keys
+        that hash between a new vnode and its predecessor move to ``sid``."""
+        if sid in self._ids:
+            return
+        for v in range(self._vnodes):
+            h = _hash(f"sgs-{sid}-vn{v}")
+            if h in self._owner:        # 64-bit collision: keep the incumbent
+                continue
+            bisect.insort(self._points, h)
+            self._owner[h] = sid
+        bisect.insort(self._ids, sid)
+
+    def remove_node(self, sid: int) -> None:
+        """Drop one SGS id's vnodes: its key range redistributes to the ring
+        successors; all other keys keep their owner.  Removing the last id
+        raises (an empty ring cannot route)."""
+        if sid not in self._ids:
+            raise ValueError(f"unknown SGS id {sid}")
+        if len(self._ids) == 1:
+            raise ValueError(
+                "ConsistentHashRing needs at least one SGS id")
+        owner = self._owner
+        self._points = [p for p in self._points if owner[p] != sid]
+        for h in [h for h, o in owner.items() if o == sid]:
+            del owner[h]
+        self._ids.remove(sid)
+
 
 @dataclass
 class LBSConfig:
@@ -67,6 +107,10 @@ class LBSConfig:
     gradual: bool = True                # False -> instant scale-out ablation
     sandbox_aware: bool = False         # handled via lottery tickets
     seed: int = 0
+    # churn damping for the per-DAG SGS set (defaults are decision-neutral:
+    # 0.0 / None reproduce the historical behavior exactly)
+    scale_out_cooldown: float = 0.0     # min seconds between per-DAG adds
+    max_sgs_per_dag: Optional[int] = None   # hard cap on a DAG's active set
 
 
 @dataclass
@@ -88,6 +132,7 @@ class _DagState:
     # every multi-SGS draw)
     slack_floor: float = 1.0
     last_decision: float = 0.0
+    last_scale_out: float = -1e18       # for LBSConfig.scale_out_cooldown
     below_sit_streak: int = 0
     n_scale_outs: int = 0
     n_scale_ins: int = 0
@@ -110,6 +155,10 @@ class LoadBalancer:
             s.report = self.report
         # history for benchmarks: (time, dag_id, n_active)
         self.scale_events: List[tuple] = []
+        # typed mirror of the same decisions (core.autoscale.ScalingEvent):
+        # merged with the LBS replica autoscaler's events into
+        # ExperimentResult.scaling_events
+        self.scaling_log: List[ScalingEvent] = []
 
     # ----------------------------------------------------------------- route
     def select(self, req: Request, now: float) -> SemiGlobalScheduler:
@@ -249,8 +298,14 @@ class LoadBalancer:
             metric = self.scaling_metric(st)
             if metric > self.cfg.scale_out_threshold:
                 st.below_sit_streak = 0
+                if (self.cfg.scale_out_cooldown > 0.0
+                        and now - st.last_scale_out
+                        < self.cfg.scale_out_cooldown):
+                    continue    # cooling down: keep observing
                 if not self._scale_out(st, now):
                     continue    # already at max SGSs: keep observing
+                st.last_scale_out = now
+                action = "scale_out"
             elif metric < self.cfg.scale_in_threshold and len(st.active) > 1:
                 # oscillation damping: require several consecutive quiet
                 # decisions before dissociating an SGS (§5.2.2 "well below")
@@ -260,6 +315,7 @@ class LoadBalancer:
                     continue
                 st.below_sit_streak = 0
                 self._scale_in(st, now)
+                action = "scale_in"
             else:
                 st.below_sit_streak = 0
                 continue
@@ -268,9 +324,18 @@ class LoadBalancer:
             st.qdelay_samples = {sid: 0 for sid in st.active}
             st.qdelay_ewma = {}
             st.last_decision = now
-            self.scale_events.append((now, st.dag.dag_id, len(st.active)))
+            n_active = len(st.active)
+            self.scale_events.append((now, st.dag.dag_id, n_active))
+            delta = 1 if action == "scale_out" else -1
+            self.scaling_log.append(ScalingEvent(
+                t=round(now, 6), component="sgs", action=action,
+                n_before=n_active - delta, n_after=n_active,
+                metric=round(metric, 6), detail={"dag_id": st.dag.dag_id}))
 
     def _scale_out(self, st: _DagState, now: float) -> bool:
+        cap = self.cfg.max_sgs_per_dag
+        if cap is not None and len(st.active) >= cap:
+            return False
         for sid in self.ring.successors(st.dag.dag_id):
             if sid not in st.active:
                 if sid in st.removed:
@@ -294,6 +359,45 @@ class LoadBalancer:
         sid = st.active.pop()
         st.removed.append(sid)
         st.n_scale_ins += 1
+
+    # ----------------------------------------------------- SGS-set elasticity
+    def add_sgs(self, sgs: SemiGlobalScheduler) -> None:
+        """Join a new SGS into the live control plane: wire its piggyback
+        channel and re-shard the consistent-hash ring incrementally (only
+        the new node's key range moves, so existing per-DAG active sets are
+        untouched — new DAGs and future scale-outs see the larger set)."""
+        if sgs.sgs_id in self.sgss:
+            raise ValueError(f"SGS id {sgs.sgs_id} already present")
+        self.sgss[sgs.sgs_id] = sgs
+        sgs.report = self.report
+        self.ring.add_node(sgs.sgs_id)
+
+    def remove_sgs(self, sgs_id: int) -> None:
+        """Retire one SGS from the control plane: drop its ring vnodes (its
+        key range redistributes minimally) and scrub it from every DAG's
+        active/removed sets and piggyback state.  A DAG whose entire active
+        set was the retiree is re-homed through the post-removal ring, like
+        a fresh DAG.  Removing the last SGS raises."""
+        if sgs_id not in self.sgss:
+            raise ValueError(f"unknown SGS id {sgs_id}")
+        if len(self.sgss) == 1:
+            raise ValueError("cannot remove the last SGS")
+        self.ring.remove_node(sgs_id)
+        del self.sgss[sgs_id]
+        for dag_id, st in self._dag_state.items():
+            if st.pending:
+                st.pending = [p for p in st.pending if p[0] != sgs_id]
+            if sgs_id in st.removed:
+                st.removed.remove(sgs_id)
+            if sgs_id in st.active:
+                st.active.remove(sgs_id)
+                if not st.active:
+                    home = self.ring.lookup(dag_id)
+                    st.active.append(home)
+                    st.sandbox_count.setdefault(home, 1)
+            st.qdelay_ewma.pop(sgs_id, None)
+            st.qdelay_samples.pop(sgs_id, None)
+            st.sandbox_count.pop(sgs_id, None)
 
     # -------------------------------------------------------------- failover
     def replace_sgs(self, new_sgs: SemiGlobalScheduler) -> None:

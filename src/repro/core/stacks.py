@@ -144,11 +144,17 @@ def available_stacks() -> List[str]:
 class ArchipelagoStack:
     """Full paper stack: scalable LBS tier → semi-global schedulers (§4-§5).
 
-    ``params``: ``n_lbs`` (parallel LB replicas, default 4).
+    ``params``: ``n_lbs`` (parallel LB replicas, default 4; with
+    ``Experiment.autoscale`` set it is only the *initial* pool size —
+    default ``min_replicas`` — and the LBS replica autoscaler grows/shrinks
+    the pool from observed decision-clock utilization, ``core.autoscale``).
     """
+
+    PARAMS = frozenset({"n_lbs"})
 
     lbs: Optional[LoadBalancer] = None
     scheduler: object = None
+    _autoscaler = None
 
     def build(self, env, exp: "Experiment", spec: "WorkloadSpec",
               backend: ExecutionBackend) -> None:
@@ -158,11 +164,21 @@ class ArchipelagoStack:
         self.lbs = build_cluster(env, exp.cluster, exp.sgs, exp.lbs,
                                  execute=backend.execute,
                                  backend_submit=backend.submit)
-        n_lb = max(1, int(exp.params.get("n_lbs", 4)))
+        auto = getattr(exp, "autoscale", None)
+        if auto is not None:
+            n_lb = int(exp.params.get("n_lbs", auto.min_replicas))
+            n_lb = max(1, max(auto.min_replicas,
+                              min(n_lb, auto.max_replicas)))
+        else:
+            n_lb = max(1, int(exp.params.get("n_lbs", 4)))
         self._n_lb = n_lb
         self._lb_clocks = [_ServiceClock() for _ in range(n_lb)]
         self._sgs_clocks = {sid: _ServiceClock() for sid in self.lbs.sgss}
         self._arrival_no = 0
+        if auto is not None:
+            from .autoscale import LBSReplicaAutoscaler
+            self._autoscaler = LBSReplicaAutoscaler(
+                self._lb_clocks, exp.lb_cost, auto, make_clock=_ServiceClock)
         if type(self).submit is ArchipelagoStack.submit:
             # hot path: close over locals so the pump pays zero attribute
             # lookups per arrival (same constants as the pre-registry driver)
@@ -171,27 +187,58 @@ class ArchipelagoStack:
             call_at = env.call_at
             lb_cost = exp.lb_cost
             sgs_cost = exp.sgs_cost
-            # round-robin over the LB replicas without a counter/modulo
-            next_lb_clock = itertools.cycle(self._lb_clocks).__next__
+            if auto is None:
+                # static pool: round-robin over the LB replicas without a
+                # counter/modulo.  This closure is the historical hot path —
+                # byte-identical decisions to the equivalence goldens.
+                next_lb_clock = itertools.cycle(self._lb_clocks).__next__
 
-            def submit(req: Request, now: float) -> None:
-                # hop 1: LBS routing decision (a scalable service: many
-                # LBs).  Both clock acquires are hand-inlined M/D/1 waits
-                # (identical arithmetic to _ServiceClock.acquire).
-                c = next_lb_clock()
-                t = c.busy_until
-                if now > t:
-                    t = now
-                c.busy_until = t_routed = t + lb_cost
-                sgs = select(req, now)
-                # hop 2: SGS scheduling decision, serialized per SGS
-                c = sgs_clocks[sgs.sgs_id]
-                t = c.busy_until
-                if t_routed > t:
-                    t = t_routed
-                c.busy_until = t_sched = \
-                    t + sgs_cost * req.dag._n_fns
-                call_at(t_sched, sgs.submit_request, req)
+                def submit(req: Request, now: float) -> None:
+                    # hop 1: LBS routing decision (a scalable service: many
+                    # LBs).  Both clock acquires are hand-inlined M/D/1
+                    # waits (identical arithmetic to _ServiceClock.acquire).
+                    c = next_lb_clock()
+                    t = c.busy_until
+                    if now > t:
+                        t = now
+                    c.busy_until = t_routed = t + lb_cost
+                    sgs = select(req, now)
+                    # hop 2: SGS scheduling decision, serialized per SGS
+                    c = sgs_clocks[sgs.sgs_id]
+                    t = c.busy_until
+                    if t_routed > t:
+                        t = t_routed
+                    c.busy_until = t_sched = \
+                        t + sgs_cost * req.dag._n_fns
+                    call_at(t_sched, sgs.submit_request, req)
+            else:
+                # elastic pool: the autoscaler grows/shrinks `clocks` in
+                # place between arrivals, so round-robin with a cursor that
+                # re-reads the live length, and count routed requests for
+                # the utilization signal
+                clocks = self._lb_clocks
+                scaler = self._autoscaler
+                cursor = [0]
+
+                def submit(req: Request, now: float) -> None:
+                    i = cursor[0]
+                    if i >= len(clocks):
+                        i = 0
+                    cursor[0] = i + 1
+                    c = clocks[i]
+                    t = c.busy_until
+                    if now > t:
+                        t = now
+                    c.busy_until = t_routed = t + lb_cost
+                    scaler.n_routed += 1
+                    sgs = select(req, now)
+                    c = sgs_clocks[sgs.sgs_id]
+                    t = c.busy_until
+                    if t_routed > t:
+                        t = t_routed
+                    c.busy_until = t_sched = \
+                        t + sgs_cost * req.dag._n_fns
+                    call_at(t_sched, sgs.submit_request, req)
 
             self.submit = submit
 
@@ -211,9 +258,26 @@ class ArchipelagoStack:
         # periodic scaling pass (the LBS's background loop, §5.2)
         lbs = self.lbs
         env = self.env
+        horizon = self.spec.duration + self.exp.drain
         env.every(lbs.cfg.decision_interval / 5.0,
                   lambda: lbs.check_scaling(env.now()),
-                  until=self.spec.duration + self.exp.drain)
+                  until=horizon)
+        scaler = self._autoscaler
+        if scaler is not None:
+            # the LBS replica controller's observation/decision loop
+            env.every(scaler.cfg.interval,
+                      lambda: scaler.tick(env.now()), until=horizon)
+
+    def scaling_events(self) -> List[dict]:
+        """Typed control-plane scaling decisions this run made — LBS
+        replica-pool actions (autoscaler) merged with per-DAG SGS set
+        actions (``LoadBalancer.scaling_log``) in time order, as plain
+        JSON-ready dicts for ``ExperimentResult.scaling_events``."""
+        events = list(getattr(self.lbs, "scaling_log", ()))
+        if self._autoscaler is not None:
+            events.extend(self._autoscaler.events)
+        events.sort(key=lambda e: (e.t, e.component))
+        return [e.to_dict() for e in events]
 
     def attach_metrics(self, metrics: "Metrics") -> bool:
         rec = metrics.completion_recorder()
@@ -311,6 +375,8 @@ class CentralizedFIFOStack(FlatWorkerStack):
     ``params``: ``keepalive`` (seconds, default 900).
     """
 
+    PARAMS = frozenset({"keepalive"})
+
     def make_scheduler(self, workers, env, exp):
         return CentralizedFIFO(
             workers, env, keepalive=float(exp.params.get("keepalive", 900.0)))
@@ -324,6 +390,8 @@ class SparrowStack(FlatWorkerStack):
 
     ``params``: ``probes`` (default 2).
     """
+
+    PARAMS = frozenset({"probes"})
 
     def make_scheduler(self, workers, env, exp):
         return SparrowScheduler(workers, env,
@@ -397,6 +465,8 @@ class PullStack(FlatWorkerStack):
 
     ``params``: ``keepalive`` (default 900), ``scan_limit`` (default 16).
     """
+
+    PARAMS = frozenset({"keepalive", "scan_limit"})
 
     def make_scheduler(self, workers, env, exp):
         return PullScheduler(

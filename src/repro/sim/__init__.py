@@ -1,10 +1,13 @@
 """Discrete-event simulation substrate: reproduces the paper's CloudLab
 evaluation (74 machines, Workloads 1 & 2, classes C1-C4) on a laptop."""
 from .engine import SimEnv
-from .workload import (ArrivalProcess, ConstantRate, OnOffRate, PoissonResampled,
-                       Sinusoidal, WorkloadSpec, make_paper_dag,
+from .workload import (ArrivalProcess, BurstRate, ConstantRate, DiurnalRate,
+                       OnOffRate, PoissonResampled, ScaledRate, Sinusoidal,
+                       WindowedRate, WorkloadSpec, make_paper_dag,
                        paper_workload_1, paper_workload_2)
 from .metrics import Metrics, summarize
+from .traffic import (TrafficSpec, apply_traffic, available_traffic,
+                      get_traffic, register_traffic, scenario)
 from .experiment import (ClassStats, Experiment, ExperimentResult, SimResult,
                          SweepResult, available_workloads,
                          get_workload_factory, register_workload, run_sweep,
@@ -14,7 +17,10 @@ from .runner import run_archipelago, run_baseline, run_sparrow
 __all__ = [
     "SimEnv", "ArrivalProcess", "ConstantRate", "OnOffRate",
     "PoissonResampled", "Sinusoidal", "WorkloadSpec", "make_paper_dag",
+    "ScaledRate", "DiurnalRate", "BurstRate", "WindowedRate",
     "paper_workload_1", "paper_workload_2", "Metrics", "summarize",
+    "TrafficSpec", "scenario", "apply_traffic",
+    "register_traffic", "get_traffic", "available_traffic",
     "ClassStats", "Experiment", "ExperimentResult", "SimResult",
     "SweepResult", "run_sweep", "simulate",
     "register_workload", "get_workload_factory", "available_workloads",

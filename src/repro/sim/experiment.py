@@ -36,6 +36,7 @@ from dataclasses import dataclass, field
 from typing import (Any, Callable, Dict, List, Mapping, Optional, Sequence,
                     Tuple, Union)
 
+from ..core.autoscale import AutoscaleConfig
 from ..core.backends import ExecutionBackend, resolve_backend
 from ..core.cluster import ClusterConfig
 from ..core.fault import FaultInjector, FaultPlan, recovery_summary
@@ -46,6 +47,7 @@ from ..core.stacks import (LB_DECISION_COST, SGS_DECISION_COST, Stack,
 from ..core.types import DagSpec, Request
 from .engine import SimEnv
 from .metrics import Metrics, percentile
+from .traffic import TrafficSpec, apply_traffic
 from .workload import WorkloadSpec, paper_workload_1, paper_workload_2
 
 __all__ = [
@@ -166,18 +168,31 @@ class Experiment:
     # the event loop by ``simulate``; None (the default) adds nothing to the
     # run, so zero-fault experiments stay decision-identical
     faults: Optional[FaultPlan] = None
+    # declarative traffic scenario (sim.traffic, docs/SCENARIOS.md): a
+    # registered name or TrafficSpec applied to the resolved workload —
+    # None (the default) leaves the workload untouched, so scenario-free
+    # experiments stay decision-identical
+    traffic: Union[str, TrafficSpec, None] = None
+    # elastic control plane (core.autoscale, docs/SCENARIOS.md): when set,
+    # the archipelago stack's LBS replica pool autoscales from observed
+    # decision-clock utilization instead of the static params["n_lbs"]
+    autoscale: Optional[AutoscaleConfig] = None
     name: str = ""
 
     def resolve_workload(self) -> WorkloadSpec:
-        if self.workload is not None:
-            return self.workload
-        f = self.workload_factory
-        if isinstance(f, str):
-            f = get_workload_factory(f)
-        if f is None:
-            raise ValueError(
-                "Experiment needs either `workload` or `workload_factory`")
-        return f(**self.workload_kwargs)
+        spec = self.workload
+        if spec is None:
+            f = self.workload_factory
+            if isinstance(f, str):
+                f = get_workload_factory(f)
+            if f is None:
+                raise ValueError(
+                    "Experiment needs either `workload` or "
+                    "`workload_factory`")
+            spec = f(**self.workload_kwargs)
+        if self.traffic is not None:
+            spec = apply_traffic(spec, self.traffic)
+        return spec
 
     def backend_name(self) -> str:
         return self.backend if isinstance(self.backend, str) \
@@ -190,7 +205,10 @@ class Experiment:
               if isinstance(self.workload_factory, str) else "custom")
         b = self.backend_name()
         tail = "" if b == "modeled" else f"/{b}"
-        return f"{self.stack}/{wl}/seed{self.seed}{tail}"
+        t = self.traffic
+        scen = "" if t is None else \
+            f"+{t if isinstance(t, str) else t.label()}"
+        return f"{self.stack}/{wl}/seed{self.seed}{tail}{scen}"
 
 
 # ---------------------------------------------------------------------------
@@ -281,6 +299,11 @@ class ExperimentResult:
     fault_events: List[Dict[str, Any]] = field(default_factory=list)
     n_retries: int = 0
     recovery: Dict[str, Any] = field(default_factory=dict)
+    # typed control-plane scaling decisions in time order (LBS replica pool
+    # + per-DAG SGS set; ``core.autoscale.ScalingEvent.to_dict`` shape:
+    # {"t", "component", "action", "n_before", "n_after", "metric",
+    # "detail"}) — see docs/SCENARIOS.md "Reading scaling_events"
+    scaling_events: List[Dict[str, Any]] = field(default_factory=list)
     sim: Optional[SimResult] = field(default=None, repr=False, compare=False)
 
     def to_dict(self) -> Dict[str, Any]:
@@ -291,6 +314,7 @@ class ExperimentResult:
         d["backend_counters"] = dict(self.backend_counters)
         d["fault_events"] = [dict(e) for e in self.fault_events]
         d["recovery"] = dict(self.recovery)
+        d["scaling_events"] = [dict(e) for e in self.scaling_events]
         d["per_class"] = {k: v.to_dict()
                           for k, v in sorted(self.per_class.items())}
         return d
@@ -315,7 +339,9 @@ class ExperimentResult:
 
 
 def _build_result(exp: Experiment, spec: WorkloadSpec, sim: SimResult,
-                  warm_hits: int, wall_s: float) -> ExperimentResult:
+                  warm_hits: int, wall_s: float,
+                  scaling_events: Optional[List[Dict[str, Any]]] = None
+                  ) -> ExperimentResult:
     # one code path for both metrics modes: flat (column) metrics serve
     # ``latencies``/``n_requests``/``by_class`` as vectorized views, the
     # legacy object mode scans its request list exactly as before
@@ -364,6 +390,7 @@ def _build_result(exp: Experiment, spec: WorkloadSpec, sim: SimResult,
         fault_events=fault_events,
         n_retries=n_retries,
         recovery=recovery,
+        scaling_events=list(scaling_events or []),
         sim=sim)
 
 
@@ -412,6 +439,23 @@ def _arrival_columns(spec: WorkloadSpec, seed: int, method: str
     return ts.tolist(), dags, ts, idx_arr, tenant_dags
 
 
+def _validate_params(exp: Experiment, stack_cls: type) -> None:
+    """Reject unknown ``Experiment.params`` keys for stacks that declare a
+    ``PARAMS`` frozenset (every built-in does) — a typo like
+    ``params={"n_lb": 4}`` silently no-ops otherwise.  Custom stacks
+    without the attribute skip validation (back-compat); the error style
+    matches the stack/backend registry lookups."""
+    allowed = getattr(stack_cls, "PARAMS", None)
+    if allowed is None or not exp.params:
+        return
+    unknown = sorted(k for k in exp.params if k not in allowed)
+    if unknown:
+        raise ValueError(
+            f"unknown param(s) {', '.join(map(repr, unknown))} for stack "
+            f"{exp.stack!r}; known params: "
+            f"{', '.join(sorted(allowed)) or '(none)'}")
+
+
 Hook = Callable[[SimEnv, Stack], None]
 
 
@@ -429,7 +473,9 @@ def simulate(exp: Experiment, *,
     """
     exp_spec, sim, stack, wall = _run_experiment(exp, hooks, timed_calls)
     warm_hits = stack.counters().get("warm_hits", 0)
-    return _build_result(exp, exp_spec, sim, warm_hits, wall)
+    sev = getattr(stack, "scaling_events", None)
+    scaling = sev() if callable(sev) else []
+    return _build_result(exp, exp_spec, sim, warm_hits, wall, scaling)
 
 
 def _run_experiment(exp: Experiment,
@@ -447,12 +493,14 @@ def _run_experiment(exp: Experiment,
     hook (serving prewarm — the §3 "initial DAG upload") runs after the
     stack is built but before any arrival fires.
     """
+    stack_cls = get_stack(exp.stack)
+    _validate_params(exp, stack_cls)
     spec = exp.resolve_workload()
     backend = resolve_backend(exp.backend, exp.backend_kwargs)
     spec = backend.build(exp, spec)
     env = SimEnv()
     backend.bind(env)
-    stack: Stack = get_stack(exp.stack)()
+    stack: Stack = stack_cls()
     stack.build(env, exp, spec, backend)
     pre_pump = getattr(spec, "pre_pump", None)
     if pre_pump is not None:
@@ -557,7 +605,8 @@ def _override(exp: Experiment, path: str, value: Any) -> Experiment:
         d = dict(getattr(exp, head))
         d[rest] = value
         return dataclasses.replace(exp, **{head: d})
-    defaults = {"cluster": ClusterConfig, "sgs": SGSConfig, "lbs": LBSConfig}
+    defaults = {"cluster": ClusterConfig, "sgs": SGSConfig, "lbs": LBSConfig,
+                "autoscale": AutoscaleConfig}
     if head not in defaults:
         raise ValueError(f"cannot sweep over {path!r}")
     sub = getattr(exp, head) or defaults[head]()

@@ -197,6 +197,128 @@ class PoissonResampled(ArrivalProcess):
 
 
 # ---------------------------------------------------------------------------
+# Composable rate modulators (traffic scenarios, repro.sim.traffic)
+# ---------------------------------------------------------------------------
+#
+# Each wraps a base ArrivalProcess and reshapes its rate function with a
+# deterministic envelope, keeping the full vectorized interface (``rate`` /
+# ``rate_array`` / ``max_rate``) so the Lewis-Shedler thinning generator
+# stays exact.  All are plain dataclasses: picklable (run_sweep workers) and
+# freely nestable (e.g. DiurnalRate over BurstRate over ConstantRate).
+
+
+@dataclass
+class ScaledRate(ArrivalProcess):
+    """``factor x`` the base process's instantaneous rate (Zipf-skewed
+    multi-tenant mixes reweight tenants with this)."""
+
+    base: ArrivalProcess
+    factor: float
+
+    def rate(self, t: float) -> float:
+        return self.factor * self.base.rate(t)
+
+    def rate_array(self, ts: "np.ndarray") -> "np.ndarray":
+        return self.factor * self.base.rate_array(ts)
+
+    def max_rate(self, t_end: float) -> float:
+        return max(0.0, self.factor) * self.base.max_rate(t_end)
+
+
+@dataclass
+class DiurnalRate(ArrivalProcess):
+    """Day-cycle envelope: ``base.rate(t) * (1 + depth*sin(2pi t/period +
+    phase))``.  ``depth`` in [0, 1) keeps the rate non-negative; the default
+    phase starts the run at the trough so one ``period`` spans
+    trough → peak → trough (a compressed diurnal day)."""
+
+    base: ArrivalProcess
+    period: float
+    depth: float = 0.6
+    phase: float = -math.pi / 2.0
+
+    def _env(self, t: float) -> float:
+        return 1.0 + self.depth * math.sin(
+            2.0 * math.pi * t / self.period + self.phase)
+
+    def rate(self, t: float) -> float:
+        return self.base.rate(t) * self._env(t)
+
+    def rate_array(self, ts: "np.ndarray") -> "np.ndarray":
+        env = 1.0 + self.depth * np.sin(
+            2.0 * math.pi * ts / self.period + self.phase)
+        return self.base.rate_array(ts) * env
+
+    def max_rate(self, t_end: float) -> float:
+        return self.base.max_rate(t_end) * (1.0 + abs(self.depth))
+
+
+@dataclass
+class BurstRate(ArrivalProcess):
+    """Flash-crowd envelope: rate is amplified ``amplify``x inside
+    ``[at, at + duration)`` with linear ``ramp``-second edges (crowds build
+    and disperse; a square wave would be a step discontinuity in the
+    thinning envelope)."""
+
+    base: ArrivalProcess
+    at: float
+    duration: float
+    amplify: float = 8.0
+    ramp: float = 0.0
+
+    def _env(self, t: float) -> float:
+        if t < self.at or t >= self.at + self.duration:
+            return 1.0
+        m = 1.0
+        if self.ramp > 0.0:
+            m = min(1.0, (t - self.at) / self.ramp,
+                    (self.at + self.duration - t) / self.ramp)
+        return 1.0 + (self.amplify - 1.0) * m
+
+    def rate(self, t: float) -> float:
+        return self.base.rate(t) * self._env(t)
+
+    def rate_array(self, ts: "np.ndarray") -> "np.ndarray":
+        inside = (ts >= self.at) & (ts < self.at + self.duration)
+        if self.ramp > 0.0:
+            m = np.minimum(1.0, np.minimum(
+                (ts - self.at) / self.ramp,
+                (self.at + self.duration - ts) / self.ramp))
+        else:
+            m = 1.0
+        env = np.where(inside, 1.0 + (self.amplify - 1.0) * m, 1.0)
+        return self.base.rate_array(ts) * env
+
+    def max_rate(self, t_end: float) -> float:
+        peak = max(1.0, self.amplify) if t_end > self.at else 1.0
+        return self.base.max_rate(t_end) * peak
+
+
+@dataclass
+class WindowedRate(ArrivalProcess):
+    """Tenant lifetime window: the base rate inside ``[start, end)``, zero
+    outside (tenants arriving and departing mid-run)."""
+
+    base: ArrivalProcess
+    start: float = 0.0
+    end: Optional[float] = None
+
+    def rate(self, t: float) -> float:
+        if t < self.start or (self.end is not None and t >= self.end):
+            return 0.0
+        return self.base.rate(t)
+
+    def rate_array(self, ts: "np.ndarray") -> "np.ndarray":
+        alive = ts >= self.start
+        if self.end is not None:
+            alive &= ts < self.end
+        return np.where(alive, self.base.rate_array(ts), 0.0)
+
+    def max_rate(self, t_end: float) -> float:
+        return self.base.max_rate(t_end)
+
+
+# ---------------------------------------------------------------------------
 # Paper DAG classes
 # ---------------------------------------------------------------------------
 

@@ -1,0 +1,239 @@
+"""Elastic control plane: LBS replica autoscaler control law, typed
+scaling events, and end-to-end integration via ``Experiment.autoscale``
+(docs/SCENARIOS.md)."""
+import json
+
+import pytest
+
+from repro.core import (AutoscaleConfig, LBSReplicaAutoscaler, ScalingEvent,
+                        scaling_summary)
+from repro.core.cluster import ClusterConfig
+from repro.core.stacks import _ServiceClock
+from repro.sim import Experiment, ExperimentResult, run_sweep, simulate
+
+
+CFG = AutoscaleConfig(min_replicas=1, max_replicas=8, interval=0.1,
+                      target_utilization=0.6, scale_in_utilization=0.25,
+                      cooldown=0.2, scale_in_patience=2)
+
+
+def _scaler(n=1, cfg=CFG, lb_cost=190e-6):
+    clocks = [_ServiceClock() for _ in range(n)]
+    return LBSReplicaAutoscaler(clocks, lb_cost, cfg,
+                                make_clock=_ServiceClock), clocks
+
+
+def _drive(scaler, now, n_routed):
+    scaler.n_routed = n_routed
+    scaler.tick(now)
+
+
+# -- control law -------------------------------------------------------------
+
+
+def test_scale_out_to_target_sizing():
+    scaler, clocks = _scaler(n=1)
+    # 4000 decisions in 0.1s on 1 clock at 190us each: util = 7.6
+    _drive(scaler, now=0.1, n_routed=4000)
+    # ceil(1 * 7.6 / 0.6) = 13, clamped to max_replicas=8
+    assert len(clocks) == 8
+    (ev,) = scaler.events
+    assert ev.action == "scale_out" and ev.component == "lbs"
+    assert ev.n_before == 1 and ev.n_after == 8
+    assert ev.metric == pytest.approx(7.6)
+
+
+def test_fresh_replicas_start_idle_at_now():
+    scaler, clocks = _scaler(n=1)
+    clocks[0].busy_until = 5.0
+    _drive(scaler, now=0.1, n_routed=4000)
+    assert all(c.busy_until == 0.1 for c in clocks[1:])
+
+
+def test_backlog_alone_triggers_scale_out():
+    scaler, clocks = _scaler(n=2)
+    clocks[0].busy_until = 1.0          # 0.9s of formed queue
+    _drive(scaler, now=0.1, n_routed=0)  # zero utilization
+    assert len(clocks) == 3
+    assert scaler.events[0].detail["backlog_s"] == pytest.approx(0.9)
+
+
+def test_scale_in_needs_patience_and_cooldown():
+    scaler, clocks = _scaler(n=4)
+    # quiet window 1: patience not yet met -> no change
+    _drive(scaler, now=0.1, n_routed=0)
+    assert len(clocks) == 4
+    # quiet window 2: patience met -> retire exactly one
+    _drive(scaler, now=0.2, n_routed=0)
+    assert len(clocks) == 3
+    assert scaler.events[-1].action == "scale_in"
+    # patience resets after an action: quiet window 1 of the next round
+    _drive(scaler, now=0.3, n_routed=0)
+    assert len(clocks) == 3
+    _drive(scaler, now=0.4, n_routed=0)
+    assert len(clocks) == 2
+
+
+def test_scale_in_retires_most_idle_clock():
+    scaler, clocks = _scaler(n=3)
+    clocks[0].busy_until = -1.0
+    clocks[1].busy_until = -5.0         # most idle
+    clocks[2].busy_until = -2.0
+    keep = (clocks[0], clocks[2])
+    _drive(scaler, now=10.0, n_routed=0)
+    _drive(scaler, now=11.0, n_routed=0)
+    assert tuple(clocks) == keep
+
+
+def test_busy_window_resets_patience():
+    scaler, clocks = _scaler(n=3)
+    _drive(scaler, now=0.1, n_routed=0)            # quiet 1
+    _drive(scaler, now=0.2, n_routed=800)          # busy (util ~0.5): reset
+    _drive(scaler, now=0.3, n_routed=0)            # quiet 1 again
+    assert len(clocks) == 3
+    _drive(scaler, now=0.4, n_routed=0)            # quiet 2: shrink
+    assert len(clocks) == 2
+
+
+def test_never_below_min_or_above_max():
+    scaler, clocks = _scaler(n=1)
+    for i in range(20):
+        _drive(scaler, now=0.1 * (i + 1), n_routed=10000)
+    assert len(clocks) == CFG.max_replicas
+    scaler2, clocks2 = _scaler(n=CFG.min_replicas)
+    for i in range(20):
+        _drive(scaler2, now=0.1 * (i + 1), n_routed=0)
+    assert len(clocks2) == CFG.min_replicas
+
+
+# -- ring re-sharding (deterministic complement to test_properties.py) -------
+
+
+def test_ring_resharding_deterministic():
+    from repro.core import ConsistentHashRing
+    ids = [0, 1, 2, 3]
+    ring = ConsistentHashRing(ids)
+    keys = [f"dag-{i}" for i in range(300)]
+    before = {k: ring.lookup(k) for k in keys}
+    ring.add_node(9)
+    moved = [k for k in keys if ring.lookup(k) != before[k]]
+    assert moved and all(ring.lookup(k) == 9 for k in moved)
+    assert len(moved) / len(keys) <= 4.0 / 5.0
+    ring.remove_node(9)
+    assert all(ring.lookup(k) == before[k] for k in keys)
+    succ = ring.successors("dag-0")
+    assert sorted(succ) == ids and len(succ) == len(set(succ))
+    with pytest.raises(ValueError, match="unknown SGS id"):
+        ring.remove_node(42)
+
+
+# -- events / config serialization -------------------------------------------
+
+
+def test_config_and_event_roundtrip():
+    cfg = AutoscaleConfig(max_replicas=32, interval=0.05)
+    assert AutoscaleConfig.from_dict(
+        json.loads(json.dumps(cfg.to_dict()))) == cfg
+    ev = ScalingEvent(t=1.5, component="lbs", action="scale_out",
+                      n_before=2, n_after=4, metric=0.9,
+                      detail={"backlog_s": 0.2})
+    assert ScalingEvent.from_dict(
+        json.loads(json.dumps(ev.to_dict()))) == ev
+
+
+def test_scaling_summary_digest():
+    events = [
+        {"component": "lbs", "action": "scale_out", "n_after": 6},
+        {"component": "lbs", "action": "scale_in", "n_after": 5},
+        {"component": "sgs", "action": "scale_out", "n_after": 2},
+    ]
+    s = scaling_summary(events)
+    assert s["n_events"] == 3
+    assert s["lbs_scale_outs"] == 1 and s["lbs_scale_ins"] == 1
+    assert s["sgs_scale_outs"] == 1 and s["sgs_scale_ins"] == 0
+    assert s["lbs_peak_replicas"] == 6 and s["lbs_final_replicas"] == 5
+
+
+# -- Experiment integration --------------------------------------------------
+
+
+def _exp(**kw):
+    base = dict(
+        stack="archipelago",
+        workload_factory="paper_workload_1",
+        workload_kwargs={"duration": 4.0, "scale": 0.05, "dags_per_class": 2},
+        cluster=ClusterConfig(n_sgs=2, workers_per_sgs=4),
+        drain=3.0, seed=11)
+    base.update(kw)
+    return Experiment(**base)
+
+
+def test_autoscale_none_is_decision_identical():
+    a = simulate(_exp()).detach_sim().to_dict()
+    b = simulate(_exp(autoscale=None)).detach_sim().to_dict()
+    a.pop("wall_s"), b.pop("wall_s")
+    assert json.dumps(a, sort_keys=True) == json.dumps(b, sort_keys=True)
+
+
+def test_autoscaled_run_completes_and_records_events():
+    # tiny pool + aggressive target so the toy load actually forces growth
+    cfg = AutoscaleConfig(min_replicas=1, max_replicas=16, interval=0.05,
+                          target_utilization=0.005,
+                          scale_in_utilization=0.0001)
+    r = simulate(_exp(traffic="flash_crowd", autoscale=cfg))
+    assert r.n_completed == r.n_requests
+    lbs = [e for e in r.scaling_events if e["component"] == "lbs"]
+    assert lbs and any(e["action"] == "scale_out" for e in lbs)
+    assert scaling_summary(r.scaling_events)["lbs_peak_replicas"] > 1
+    # events survive the lossless result round-trip
+    rt = ExperimentResult.from_dict(json.loads(json.dumps(r.to_dict())))
+    assert rt.scaling_events == r.scaling_events
+
+
+def test_events_are_time_ordered_and_typed():
+    cfg = AutoscaleConfig(min_replicas=1, max_replicas=16, interval=0.05,
+                          target_utilization=0.005)
+    r = simulate(_exp(autoscale=cfg))
+    ts = [e["t"] for e in r.scaling_events]
+    assert ts == sorted(ts)
+    for e in r.scaling_events:
+        assert e["component"] in ("lbs", "sgs")
+        assert e["action"] in ("scale_out", "scale_in")
+        assert e["n_after"] != e["n_before"]
+
+
+def test_sgs_scaling_log_mirrors_legacy_channel():
+    # heavy enough that per-DAG SGS scale-out fires; the typed log must
+    # mirror the legacy (t, dag_id, n_active) tuples one-for-one
+    r = simulate(_exp(workload_kwargs={"duration": 4.0, "scale": 0.3,
+                                       "dags_per_class": 2}))
+    lbs_obj = r.sim.lbs
+    assert lbs_obj is not None
+    legacy = lbs_obj.scale_events
+    typed = lbs_obj.scaling_log
+    assert len(legacy) == len(typed)
+    for (t, dag_id, n_active), ev in zip(legacy, typed):
+        assert ev.t == pytest.approx(t, abs=1e-6)
+        assert ev.detail["dag_id"] == dag_id
+        assert ev.n_after == n_active
+
+
+def test_autoscale_is_sweepable_axis():
+    cfg = AutoscaleConfig(min_replicas=1, max_replicas=4, interval=0.05)
+    rs = run_sweep(_exp(), {"autoscale": [None, cfg]}, workers=1)
+    assert len(rs.rows) == 2
+    d = rs.to_dict()          # AutoscaleConfig serializes via to_dict
+    assert d["rows"][1]["cell"]["autoscale"]["max_replicas"] == 4
+    json.dumps(d)
+
+
+def test_autoscale_dotted_override():
+    cfg = AutoscaleConfig(min_replicas=1, max_replicas=4, interval=0.05)
+    rs = run_sweep(_exp(autoscale=cfg),
+                   {"autoscale.max_replicas": [2, 6]}, workers=1)
+    assert [r["cell"]["autoscale.max_replicas"] for r in rs.rows] == [2, 6]
+
+
+if __name__ == "__main__":
+    import sys
+    sys.exit(pytest.main([__file__, "-q"]))

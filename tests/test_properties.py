@@ -121,6 +121,74 @@ def test_ring_removal_only_moves_affected_keys(ids):
             assert ring_b.lookup(key) == a
 
 
+@given(ids=st.lists(st.integers(0, 1000), min_size=2, max_size=16,
+                    unique=True),
+       new_id=st.integers(1001, 2000))
+@settings(max_examples=40, deadline=None)
+def test_ring_add_node_moves_bounded_fraction(ids, new_id):
+    """Incremental re-sharding: adding one node may only steal keys for
+    itself — no key moves between pre-existing nodes — and the stolen
+    share stays near 1/n (within generous concentration slack)."""
+    ring = ConsistentHashRing(ids)
+    keys = [f"dag-{i}" for i in range(400)]
+    before = {k: ring.lookup(k) for k in keys}
+    ring.add_node(new_id)
+    moved = 0
+    for k in keys:
+        after = ring.lookup(k)
+        if after != before[k]:
+            assert after == new_id
+            moved += 1
+    # expected share is 1/(n+1); vnode placement is random-ish, so allow 4x
+    assert moved / len(keys) <= 4.0 / (len(ids) + 1)
+    assert sorted(ring.ids()) == sorted(ids + [new_id])
+
+
+@given(ids=st.lists(st.integers(0, 1000), min_size=3, max_size=16,
+                    unique=True), data=st.data())
+@settings(max_examples=40, deadline=None)
+def test_ring_remove_node_moves_only_its_keys(ids, data):
+    """In-place removal: only keys owned by the removed node remap, and the
+    mutated ring is indistinguishable from one built without that id."""
+    victim = data.draw(st.sampled_from(ids))
+    ring = ConsistentHashRing(ids)
+    keys = [f"dag-{i}" for i in range(400)]
+    before = {k: ring.lookup(k) for k in keys}
+    ring.remove_node(victim)
+    rebuilt = ConsistentHashRing([i for i in ids if i != victim])
+    for k in keys:
+        after = ring.lookup(k)
+        if before[k] != victim:
+            assert after == before[k]
+        assert after == rebuilt.lookup(k)
+
+
+@given(ids=st.lists(st.integers(0, 1000), min_size=2, max_size=12,
+                    unique=True),
+       new_id=st.integers(1001, 2000), key=st.text(min_size=1, max_size=20))
+@settings(max_examples=40, deadline=None)
+def test_ring_successors_duplicate_free_after_resharding(ids, new_id, key):
+    ring = ConsistentHashRing(ids)
+    ring.add_node(new_id)
+    ring.remove_node(ids[0])
+    succ = ring.successors(key)
+    assert len(succ) == len(set(succ))
+    assert sorted(succ) == sorted(ring.ids())
+
+
+def test_ring_empty_and_remove_to_empty_raise():
+    with pytest.raises(ValueError, match="at least one SGS id"):
+        ConsistentHashRing([])
+    ring = ConsistentHashRing([7])
+    with pytest.raises(ValueError, match="at least one SGS id"):
+        ring.remove_node(7)
+    with pytest.raises(ValueError, match="unknown SGS id"):
+        ring.remove_node(99)
+    ring.add_node(8)
+    ring.remove_node(7)          # fine once a second id exists
+    assert ring.ids() == [8]
+
+
 # -- DAG / slack --------------------------------------------------------------
 
 

@@ -1,0 +1,92 @@
+"""Vectorized/scalar parity for every ArrivalProcess.
+
+``generate_np`` (Lewis-Shedler thinning) evaluates ``rate_array`` while the
+legacy ``generate`` dt-loop evaluates scalar ``rate`` — the two samplers
+agree only if the two rate views are pointwise identical and ``max_rate``
+really dominates.  Covers the original shapes and the traffic-scenario
+modulators (ScaledRate/DiurnalRate/BurstRate/WindowedRate), nested."""
+import math
+import random
+
+import numpy as np
+import pytest
+
+from repro.sim.workload import (BurstRate, ConstantRate, DiurnalRate,
+                                OnOffRate, PoissonResampled, ScaledRate,
+                                Sinusoidal, WindowedRate)
+
+T_END = 12.0
+
+PROCS = [
+    ("constant", ConstantRate(rps=40.0)),
+    ("sinusoidal", Sinusoidal(avg=30.0, amplitude=12.0, period=5.0,
+                              phase=0.7)),
+    ("onoff", OnOffRate(rps=50.0, on_duration=1.5, off_duration=0.75)),
+    ("poisson_resampled", PoissonResampled(rps_range=(10.0, 60.0),
+                                           resample_every=0.8, seed=3)),
+    ("scaled", ScaledRate(ConstantRate(rps=40.0), factor=1.7)),
+    ("diurnal", DiurnalRate(Sinusoidal(avg=30.0, amplitude=10.0, period=4.0),
+                            period=T_END, depth=0.6)),
+    ("burst_square", BurstRate(ConstantRate(rps=25.0), at=4.0, duration=2.0,
+                               amplify=6.0)),
+    ("burst_ramped", BurstRate(OnOffRate(rps=40.0, on_duration=2.0,
+                                         off_duration=1.0),
+                               at=3.0, duration=4.0, amplify=5.0, ramp=0.8)),
+    ("windowed", WindowedRate(ConstantRate(rps=35.0), start=2.0, end=9.0)),
+    ("windowed_open", WindowedRate(ConstantRate(rps=35.0), start=4.0)),
+    ("nested", DiurnalRate(BurstRate(ScaledRate(
+        PoissonResampled(rps_range=(20.0, 50.0), resample_every=1.0, seed=9),
+        factor=0.8), at=5.0, duration=3.0, amplify=4.0, ramp=0.5),
+        period=T_END, depth=0.4)),
+]
+
+
+@pytest.mark.parametrize("name,proc", PROCS, ids=[n for n, _ in PROCS])
+def test_rate_array_matches_scalar_rate_pointwise(name, proc):
+    rng = np.random.default_rng(17)
+    ts = np.sort(rng.uniform(0.0, T_END, 3000))
+    # deliberately include envelope edges and bin boundaries
+    edges = np.array([0.0, 2.0, 3.0, 4.0, 5.0, 8.0, 9.0, 4.0 + 1e-12,
+                      T_END - 1e-9])
+    ts = np.concatenate([ts, edges])
+    vec = proc.rate_array(ts)
+    scalar = np.array([proc.rate(float(t)) for t in ts])
+    np.testing.assert_allclose(vec, scalar, rtol=1e-12, atol=1e-12)
+
+
+@pytest.mark.parametrize("name,proc", PROCS, ids=[n for n, _ in PROCS])
+def test_max_rate_dominates_rate(name, proc):
+    rng = np.random.default_rng(23)
+    ts = rng.uniform(0.0, T_END, 2000)
+    lam_max = proc.max_rate(T_END)
+    assert float(np.max(proc.rate_array(ts))) <= lam_max + 1e-9
+
+
+def test_thinning_matches_legacy_on_burst_shape():
+    """Statistical pin of the vectorized thinning sampler against the legacy
+    dt-loop on a traffic-scenario shape (same rule as
+    test_determinism.py's pin on the original shapes)."""
+    proc = BurstRate(ConstantRate(rps=60.0), at=10.0, duration=8.0,
+                     amplify=5.0, ramp=1.5)
+    t_end = 30.0
+    n_legacy = len(proc.generate(t_end, random.Random(5)))
+    n_numpy = len(proc.generate_np(t_end, np.random.default_rng(5)))
+    assert n_legacy > 0 and n_numpy > 0
+    assert abs(n_legacy - n_numpy) < 5 * math.sqrt(max(n_legacy, n_numpy))
+    # arrivals respect the envelope: the burst window is denser than outside
+    ts = proc.generate_np(t_end, np.random.default_rng(7))
+    in_burst = np.sum((ts >= 10.0) & (ts < 18.0)) / 8.0
+    outside = np.sum((ts < 10.0) | (ts >= 18.0)) / 22.0
+    assert in_burst > 2.0 * outside
+
+
+def test_windowed_rate_emits_nothing_outside_window():
+    proc = WindowedRate(ConstantRate(rps=80.0), start=3.0, end=7.0)
+    ts = proc.generate_np(12.0, np.random.default_rng(11))
+    assert len(ts) > 0
+    assert float(ts.min()) >= 3.0 and float(ts.max()) < 7.0
+
+
+if __name__ == "__main__":
+    import sys
+    sys.exit(pytest.main([__file__, "-q"]))

@@ -1,0 +1,216 @@
+"""Traffic-scenario subsystem: registry semantics, spec round-trips,
+scenario determinism, sweep-axis integration, and the traffic x faults
+cross-axis (docs/SCENARIOS.md)."""
+import json
+import math
+
+import pytest
+
+from repro.core import FaultPlan, sgs_failstop
+from repro.core.cluster import ClusterConfig
+from repro.sim import (Experiment, TrafficSpec, apply_traffic,
+                       available_traffic, get_traffic, paper_workload_1,
+                       register_traffic, run_sweep, scenario, simulate)
+from repro.sim.traffic import _TRAFFIC
+from repro.sim.workload import (BurstRate, DiurnalRate, ScaledRate,
+                                WindowedRate, WorkloadSpec)
+
+
+def _exp(**kw):
+    base = dict(
+        stack="archipelago",
+        workload_factory="paper_workload_1",
+        workload_kwargs={"duration": 4.0, "scale": 0.03, "dags_per_class": 1},
+        cluster=ClusterConfig(n_sgs=2, workers_per_sgs=3),
+        drain=3.0, seed=11)
+    base.update(kw)
+    return Experiment(**base)
+
+
+def _spec(n_per_class=2, duration=8.0):
+    return paper_workload_1(duration=duration, scale=0.05,
+                            dags_per_class=n_per_class)
+
+
+# -- registry ----------------------------------------------------------------
+
+
+def test_builtins_registered():
+    assert {"steady", "diurnal", "flash_crowd", "tenant_churn",
+            "zipf_mix"} <= set(available_traffic())
+
+
+def test_unknown_scenario_lists_registered_names():
+    with pytest.raises(ValueError) as ei:
+        get_traffic("flash_mob")
+    msg = str(ei.value)
+    assert "flash_mob" in msg
+    for name in available_traffic():
+        assert name in msg
+
+
+def test_duplicate_registration_rejected():
+    with pytest.raises(ValueError, match="already registered"):
+        register_traffic("diurnal")(lambda spec, rng: spec)
+
+
+def test_alias_duplicate_leaves_no_partial_registration():
+    before = dict(_TRAFFIC)
+    with pytest.raises(ValueError):
+        # first alias is fresh, second collides: nothing may be inserted
+        register_traffic("totally_new_shape", "diurnal")(
+            lambda spec, rng: spec)
+    assert _TRAFFIC == before
+
+
+# -- TrafficSpec -------------------------------------------------------------
+
+
+def test_trafficspec_roundtrip_and_hashable():
+    ts = scenario("flash_crowd", seed=3, amplify=4.0, frac=0.5)
+    d = json.loads(json.dumps(ts.to_dict()))
+    assert TrafficSpec.from_dict(d) == ts
+    assert hash(ts) == hash(TrafficSpec.from_dict(d))
+
+
+def test_apply_traffic_accepts_bare_string():
+    spec = _spec()
+    out = apply_traffic(spec, "steady")
+    assert [d.dag_id for d, _ in out.tenants] == \
+        [d.dag_id for d, _ in spec.tenants]
+
+
+# -- scenario shapes ---------------------------------------------------------
+
+
+def test_diurnal_wraps_every_tenant():
+    out = apply_traffic(_spec(), "diurnal")
+    assert all(isinstance(p, DiurnalRate) for _, p in out.tenants)
+    # period defaults to the run duration
+    assert all(p.period == out.duration for _, p in out.tenants)
+
+
+def test_flash_crowd_amplifies_seeded_fraction():
+    spec = _spec(n_per_class=3)
+    out = apply_traffic(spec, scenario("flash_crowd", frac=0.5, seed=1))
+    hot = [p for _, p in out.tenants if isinstance(p, BurstRate)]
+    assert len(hot) == round(0.5 * len(spec.tenants))
+    b = hot[0]
+    mid = b.at + 0.5 * b.duration
+    assert b.rate(mid) > b.base.rate(mid)          # amplified inside
+    assert b.rate(b.at - 0.1) == b.base.rate(b.at - 0.1)  # untouched outside
+
+
+def test_tenant_churn_adds_fresh_ids_and_windows():
+    spec = _spec(n_per_class=3)
+    out = apply_traffic(spec, "tenant_churn")
+    old_ids = {d.dag_id for d, _ in spec.tenants}
+    new_ids = {d.dag_id for d, _ in out.tenants} - old_ids
+    assert new_ids and all("join" in i for i in new_ids)
+    joiners = [p for d, p in out.tenants if d.dag_id in new_ids]
+    assert all(isinstance(p, WindowedRate) and p.start > 0.0
+               for p in joiners)
+    leavers = [p for d, p in out.tenants
+               if d.dag_id in old_ids and isinstance(p, WindowedRate)]
+    assert leavers and all(p.end is not None and p.end < out.duration
+                           for p in leavers)
+
+
+def test_zipf_mix_preserves_mean_factor():
+    spec = _spec(n_per_class=3)
+    out = apply_traffic(spec, scenario("zipf_mix", s=1.3))
+    factors = [p.factor for _, p in out.tenants]
+    assert all(isinstance(p, ScaledRate) for _, p in out.tenants)
+    assert math.isclose(sum(factors) / len(factors), 1.0, rel_tol=1e-9)
+    assert max(factors) / min(factors) > 2.0       # actually skewed
+
+
+def test_scenario_seed_is_deterministic_and_independent():
+    spec = _spec(n_per_class=3)
+    pick = lambda seed: {d.dag_id for d, p in apply_traffic(
+        spec, scenario("flash_crowd", seed=seed)).tenants
+        if isinstance(p, BurstRate)}
+    assert pick(5) == pick(5)
+    assert any(pick(s) != pick(5) for s in range(6, 16))
+
+
+# -- Experiment integration --------------------------------------------------
+
+
+def test_traffic_none_is_decision_identical():
+    a = simulate(_exp()).detach_sim().to_dict()
+    b = simulate(_exp(traffic=None)).detach_sim().to_dict()
+    a.pop("wall_s"), b.pop("wall_s")
+    assert json.dumps(a, sort_keys=True) == json.dumps(b, sort_keys=True)
+
+
+def test_steady_matches_traffic_none():
+    a = simulate(_exp()).detach_sim().to_dict()
+    b = simulate(_exp(traffic="steady")).detach_sim().to_dict()
+    for d in (a, b):            # labels differ by design ("+steady" suffix)
+        d.pop("wall_s"), d.pop("name")
+    assert json.dumps(a, sort_keys=True) == json.dumps(b, sort_keys=True)
+
+
+def test_label_carries_scenario():
+    assert simulate(_exp(traffic="diurnal")).name.endswith("+diurnal")
+
+
+def test_traffic_axis_parallel_rows_byte_identical():
+    axes = {"traffic": [None, "diurnal",
+                        scenario("flash_crowd", amplify=4.0)]}
+    seq = run_sweep(_exp(), axes, workers=1)
+    par = run_sweep(_exp(), axes, workers=2)
+
+    def canon(rs):
+        d = rs.to_dict()
+        for r in d["rows"]:
+            r["result"].pop("wall_s", None)
+        return json.dumps(d, sort_keys=True)
+
+    assert canon(seq) == canon(par)
+
+
+def test_every_builtin_scenario_simulates_cleanly():
+    for name in available_traffic():
+        r = simulate(_exp(traffic=name))
+        assert r.n_completed == r.n_requests, name
+        assert r.n_requests > 0, name
+
+
+# -- cross-axis: traffic x faults --------------------------------------------
+
+
+def test_flash_crowd_with_sgs_failstop_loses_nothing():
+    exp = _exp(traffic="flash_crowd",
+               faults=FaultPlan(events=(sgs_failstop(at=2.0),)))
+    r = simulate(exp)
+    assert r.n_requests > 0
+    assert r.n_completed == r.n_requests
+    assert r.recovery and r.recovery["events"]
+    assert r.recovery["events"][0]["kind"] == "sgs_failstop"
+
+
+# -- params validation (satellite 1) -----------------------------------------
+
+
+def test_unknown_param_rejected_with_known_names():
+    with pytest.raises(ValueError) as ei:
+        simulate(_exp(params={"n_lb": 4}))
+    msg = str(ei.value)
+    assert "n_lb" in msg and "n_lbs" in msg and "archipelago" in msg
+
+
+def test_unknown_param_rejected_per_stack():
+    with pytest.raises(ValueError, match="probes"):
+        simulate(_exp(stack="sparrow", params={"n_lbs": 4}))
+
+
+def test_known_params_still_accepted():
+    r = simulate(_exp(params={"n_lbs": 2}))
+    assert r.n_completed == r.n_requests
+
+
+if __name__ == "__main__":
+    import sys
+    sys.exit(pytest.main([__file__, "-q"]))
