@@ -1,6 +1,6 @@
 """Simulator-throughput benchmark: the perf trajectory every PR is judged by.
 
-Two tracked tiers:
+Three tracked tiers:
 
 * ``std`` — ``paper_workload_1``/``paper_workload_2`` at several scales on
   a 200-worker cluster (8 SGSs x 25 workers — one rack per SGS, §4.1).
@@ -12,6 +12,17 @@ Two tracked tiers:
   exists for: request accounting is append-only numpy columns, so the
   simulator's working set stays bounded by in-flight requests rather than
   the full request history.
+* ``xxl`` — the sharded-core tier (PR 8): 20,000 workers (800 SGSs x 25),
+  800 tenants, >= 10 million requests per run, executed through
+  ``Experiment.shards`` (``repro.sim.shard``: SGS islands in separate
+  processes, epoch-synchronized at LBS decision boundaries).  Run it
+  explicitly with ``--tier xxl`` — it is deliberately not part of
+  ``--tier all`` (a full run is minutes even on a many-core box).
+
+Sharded scenarios report per-shard event counts, epoch count, and the
+coordinator's cumulative barrier-wait time alongside the usual columns,
+and the payload records ``host_cpus`` — events/sec for a sharded run is
+only meaningful relative to the cores it actually had.
 
 Reported per scenario: wall time, ``events/sec`` (discrete events through
 the engine), ``requests/sec``, deadline-met fraction, and peak RSS.  The
@@ -22,9 +33,13 @@ noise, not simulator cost) — collection runs between scenarios.
 Results are written to ``BENCH_sim_throughput.json`` at the repo root so
 successive PRs can track the trajectory.  ``--min-events-per-s`` turns the
 run into a regression gate (CI uses it with a conservative floor).
+``--profile`` wraps each timed region in cProfile (coordinator process
+only for sharded runs), dumps ``BENCH_profile_<name>.pstats`` next to the
+output file, and prints the top-25 cumulative entries.
 
 Run:
-    python benchmarks/bench_sim_throughput.py [--quick] [--tier std|xl|all]
+    python benchmarks/bench_sim_throughput.py [--quick]
+                                              [--tier std|xl|xxl|all]
 """
 from __future__ import annotations
 
@@ -53,6 +68,9 @@ CLUSTERS = {
     # 2,000 workers: 80 rack-sized SGS pools of 25 machines
     "xl": dict(n_sgs=80, workers_per_sgs=25, cores_per_worker=20,
                pool_mem_mb=65536.0),
+    # 20,000 workers: 800 rack-sized SGS pools of 25 machines (sharded core)
+    "xxl": dict(n_sgs=800, workers_per_sgs=25, cores_per_worker=20,
+                pool_mem_mb=65536.0),
 }
 
 # Pre-refactor throughput on the same scenarios/machine class (seed scheduler
@@ -75,8 +93,9 @@ BASELINE_BEFORE = {
 # should scale with the cluster.
 XL_AUTOSCALE = AutoscaleConfig()
 
-# (name, workload factory, workload kwargs, experiment params) per tier;
-# std names are the PR-1 trajectory keys and must not change.
+# (name, workload factory, workload kwargs, experiment params[, shards])
+# per tier; std names are the PR-1 trajectory keys and must not change.
+# The optional 5th element routes the run through the sharded core.
 SCENARIOS = {
     "std": [
         ("wl1_scale0.25", "paper_workload_1",
@@ -94,6 +113,16 @@ SCENARIOS = {
          dict(duration=40.0, scale=10.0, dags_per_class=20), {}),
         ("xl_wl2_scale10", "paper_workload_2",
          dict(duration=40.0, scale=10.0, dags_per_class=20), {}),
+        # the same xl_wl1 cell through the sharded core: decision-identical
+        # rows, SGS islands advancing in 4 processes
+        ("xl_wl1_scale10_sh4", "paper_workload_1",
+         dict(duration=40.0, scale=10.0, dags_per_class=20), {}, 4),
+    ],
+    # 800 tenants at ~260 k rps aggregate for 40 s -> >= 10 M requests
+    # (~35 M events): only tractable through the sharded core
+    "xxl": [
+        ("xxl_wl1_scale100_sh8", "paper_workload_1",
+         dict(duration=40.0, scale=100.0, dags_per_class=200), {}, 8),
     ],
 }
 
@@ -102,34 +131,51 @@ QUICK_SCENARIOS = {
         ("wl1_quick", "paper_workload_1", dict(duration=5.0, scale=0.1), {}),
         ("wl2_quick", "paper_workload_2", dict(duration=5.0, scale=0.1), {}),
     ],
-    # trimmed 2,000-worker cell: full cluster + tenant fan-out, short trace
+    # trimmed 2,000-worker cells: full cluster + tenant fan-out, short
+    # trace; the sharded twin keeps the epoch protocol under the CI floor
     "xl": [
         ("xl_wl1_quick", "paper_workload_1",
          dict(duration=4.0, scale=2.0, dags_per_class=20), {}),
+        ("xl_wl1_quick_sh2", "paper_workload_1",
+         dict(duration=4.0, scale=2.0, dags_per_class=20), {}, 2),
+    ],
+    # trimmed 20,000-worker sharded cell
+    "xxl": [
+        ("xxl_wl1_quick_sh4", "paper_workload_1",
+         dict(duration=2.0, scale=10.0, dags_per_class=200), {}, 4),
     ],
 }
 
 
 def run_one(name: str, tier: str, factory: str, kw: dict, params: dict,
-            repeats: int = 1,
-            autoscale: AutoscaleConfig = None) -> dict:
+            repeats: int = 1, autoscale: AutoscaleConfig = None,
+            shards: int = None, profile_dir: Path = None) -> dict:
     cluster = ClusterConfig(**CLUSTERS[tier])
     # timeit-style best-of-N: on a noisy shared machine the minimum wall
     # time is the informative statistic (every run does identical
     # deterministic work; anything above the minimum is interference)
     wall = float("inf")
     res = None
+    prof = None
     for _ in range(max(1, repeats)):
         res = None      # free the previous repeat before timing the next
         gc.collect()
         gc.disable()    # see module docstring: timed region is GC-free
+        if profile_dir is not None:
+            import cProfile
+            prof = cProfile.Profile()
         try:
             t0 = time.perf_counter()
+            if prof is not None:
+                prof.enable()
             res = simulate(Experiment(stack="archipelago",
                                       workload_factory=factory,
                                       workload_kwargs=kw, name=name,
                                       cluster=cluster, params=dict(params),
-                                      autoscale=autoscale, seed=0))
+                                      autoscale=autoscale, shards=shards,
+                                      seed=0))
+            if prof is not None:
+                prof.disable()
             wall = min(wall, time.perf_counter() - t0)
         finally:
             gc.enable()
@@ -148,6 +194,24 @@ def run_one(name: str, tier: str, factory: str, kw: dict, params: dict,
         "peak_rss_mb": round(
             resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024.0, 1),
     }
+    # accounting integrity: every request must be either completed or still
+    # in flight at the horizon — a nonzero count means rows were dropped
+    # (the sharded merge is the path this guards)
+    try:
+        n_pending = len(res.sim.metrics._cols.pending)
+    except AttributeError:
+        n_pending = None
+    if n_pending is not None:
+        row["n_pending"] = n_pending
+        row["lost_requests"] = (res.n_requests_total - res.n_completed
+                                - n_pending)
+    shard_stats = getattr(res.sim, "shard_stats", None) if res.sim else None
+    if shard_stats is not None:
+        row["shards"] = shard_stats["shards"]
+        row["parent_events"] = shard_stats["parent_events"]
+        row["shard_events"] = shard_stats["shard_events"]
+        row["n_epochs"] = shard_stats["n_epochs"]
+        row["barrier_wait_s"] = shard_stats["barrier_wait_s"]
     if autoscale is not None:
         row["autoscale"] = autoscale.to_dict()
         row["scaling"] = scaling_summary(res.scaling_events)
@@ -155,9 +219,20 @@ def run_one(name: str, tier: str, factory: str, kw: dict, params: dict,
     if before:
         row["speedup_vs_before"] = round(
             row["events_per_s"] / before["events_per_s"], 2)
+    if prof is not None:
+        import pstats
+        ppath = profile_dir / f"BENCH_profile_{name}.pstats"
+        st = pstats.Stats(prof)
+        st.dump_stats(str(ppath))
+        print(f"-- profile ({name}): top 25 by cumulative time "
+              f"-> {ppath}")
+        st.sort_stats("cumulative").print_stats(25)
     print(f"{name}: {row['wall_s']}s  {row['events_per_s']:.0f} ev/s  "
           f"{row['requests_per_s']:.0f} req/s  "
           f"n={row['n_requests']} rss={row['peak_rss_mb']}MB"
+          + (f"  shards={row['shards']} epochs={row['n_epochs']} "
+             f"barrier_wait={row['barrier_wait_s']}s"
+             if shard_stats is not None else "")
           + (f"  ({row['speedup_vs_before']}x vs pre-refactor)"
              if before else ""),
           flush=True)
@@ -170,9 +245,17 @@ def main() -> None:
                     help="small scenarios only (CI smoke); writes to "
                          "BENCH_sim_throughput.quick.json so the tracked "
                          "full-run trajectory is never clobbered")
-    ap.add_argument("--tier", choices=["std", "xl", "all"], default="all",
-                    help="which cluster tier(s) to run (default: all; "
+    ap.add_argument("--tier", choices=["std", "xl", "xxl", "all"],
+                    default="all",
+                    help="which cluster tier(s) to run (default: all = "
+                         "std+xl; xxl only runs when named explicitly; "
                          "--quick defaults to std unless --tier is given)")
+    ap.add_argument("--profile", action="store_true",
+                    help="cProfile each scenario's timed region (the "
+                         "coordinator process only for sharded runs), dump "
+                         "BENCH_profile_<name>.pstats next to the output "
+                         "file, and print the top-25 cumulative entries; "
+                         "forces repeats=1 (profiling skews timing)")
     ap.add_argument("--min-events-per-s", type=float, default=0.0,
                     help="regression floor: exit 1 if any scenario falls "
                          "below this events/sec (CI gate)")
@@ -197,16 +280,23 @@ def main() -> None:
         tiers = ["std"]
     table = QUICK_SCENARIOS if args.quick else SCENARIOS
     repeats = args.repeats if args.repeats > 0 else (1 if args.quick else 2)
+    if args.profile:
+        repeats = 1
     runs = {}
     for tier in tiers:
-        for name, make, kw, params in table[tier]:
+        for entry in table[tier]:
+            name, make, kw, params = entry[:4]
+            shards = entry[4] if len(entry) > 4 else None
             runs[name] = run_one(
                 name, tier, make, kw, params, repeats=repeats,
-                # the xl routing tier sizes itself (no hand-tuned n_lbs)
-                autoscale=XL_AUTOSCALE if tier == "xl" else None)
+                # the xl/xxl routing tiers size themselves (no hand-tuned
+                # n_lbs)
+                autoscale=XL_AUTOSCALE if tier in ("xl", "xxl") else None,
+                shards=shards,
+                profile_dir=out_path.parent if args.profile else None)
 
     payload = {
-        "schema": 2,
+        "schema": 3,
         "bench": "sim_throughput",
         "quick": bool(args.quick),
         "tiers": tiers,
@@ -214,6 +304,9 @@ def main() -> None:
         # legacy (schema 1) alias for the std cluster shape
         "cluster": CLUSTERS["std"],
         "python": sys.version.split()[0],
+        # sharded events/sec only means anything relative to the cores the
+        # run actually had — record the host honestly
+        "host_cpus": os.cpu_count(),
         "baseline_before": BASELINE_BEFORE,
         "runs": runs,
     }

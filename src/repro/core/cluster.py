@@ -22,6 +22,30 @@ class ClusterConfig:
     pool_mem_mb: float = 65536.0
 
 
+def build_sgs_pool(env: Env, cc: ClusterConfig,
+                   sgs_cfg: Optional[SGSConfig],
+                   sgs_ids: List[int],
+                   execute: Optional[ExecuteFn] = None,
+                   backend_submit: Optional[SubmitFn] = None
+                   ) -> List[SemiGlobalScheduler]:
+    """Construct the SGSs named by ``sgs_ids`` (a subset of
+    ``range(cc.n_sgs)``), each over its rack-sized worker pool.  Worker ids
+    are globally consistent — SGS ``sid`` always owns workers
+    ``[sid * workers_per_sgs, (sid+1) * workers_per_sgs)`` — so a sharded
+    run (``repro.sim.shard``) building disjoint subsets in separate
+    processes assigns exactly the ids a full ``build_cluster`` would."""
+    sgss: List[SemiGlobalScheduler] = []
+    for sid in sgs_ids:
+        wid = sid * cc.workers_per_sgs
+        pool = [Worker(worker_id=wid + j, cores=cc.cores_per_worker,
+                       pool_mem_mb=cc.pool_mem_mb)
+                for j in range(cc.workers_per_sgs)]
+        sgss.append(SemiGlobalScheduler(sgs_id=sid, workers=pool, env=env,
+                                        config=sgs_cfg, execute=execute,
+                                        backend_submit=backend_submit))
+    return sgss
+
+
 def build_cluster(env: Env, cluster: Optional[ClusterConfig] = None,
                   sgs_cfg: Optional[SGSConfig] = None,
                   lbs_cfg: Optional[LBSConfig] = None,
@@ -34,17 +58,8 @@ def build_cluster(env: Env, cluster: Optional[ClusterConfig] = None,
     ``execute`` is the legacy synchronous hook.  Both ``None`` keeps the
     modeled fast path (invocations charge ``fn.exec_time``)."""
     cc = cluster or ClusterConfig()
-    sgss: List[SemiGlobalScheduler] = []
-    wid = 0
-    for sid in range(cc.n_sgs):
-        pool = []
-        for _ in range(cc.workers_per_sgs):
-            pool.append(Worker(worker_id=wid, cores=cc.cores_per_worker,
-                               pool_mem_mb=cc.pool_mem_mb))
-            wid += 1
-        sgss.append(SemiGlobalScheduler(sgs_id=sid, workers=pool, env=env,
-                                        config=sgs_cfg, execute=execute,
-                                        backend_submit=backend_submit))
+    sgss = build_sgs_pool(env, cc, sgs_cfg, list(range(cc.n_sgs)),
+                          execute=execute, backend_submit=backend_submit)
     return LoadBalancer(sgss, config=lbs_cfg)
 
 

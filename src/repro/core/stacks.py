@@ -65,6 +65,125 @@ class _ServiceClock:
         return self.busy_until
 
 
+def make_archipelago_submit(lb_clocks: List[_ServiceClock],
+                            sgs_clocks: Dict[int, _ServiceClock],
+                            select, call_at, lb_cost: float, sgs_cost: float,
+                            scaler=None, deliver=None):
+    """Build the Archipelago per-arrival hot-path closure.
+
+    The two-hop control-plane arithmetic (LBS routing clock → SGS decision
+    clock, both hand-inlined M/D/1 acquires) is shared by four variants:
+
+    * ``scaler is None`` — static LB replica pool, round-robin via
+      ``itertools.cycle`` (the historical hot path, byte-identical to the
+      equivalence goldens); otherwise the elastic pool re-reads the live
+      clock-list length and counts routed requests for the autoscaler.
+    * ``deliver is None`` — in-process submission: the routed request
+      becomes an event (``call_at(t_sched, sgs.submit_request, req)``).
+      A sharded coordinator (``repro.sim.shard``) instead passes
+      ``deliver(t_sched, sgs_id, req)`` to route the submission into the
+      owning shard's outbox; ``select`` then returns SGS *proxies* and
+      ``call_at`` is unused.
+
+    Each variant is its own flat closure so the dominant sequential path
+    pays zero extra call frames or branches per arrival.
+    """
+    if deliver is None:
+        if scaler is None:
+            # static pool: round-robin over the LB replicas without a
+            # counter/modulo.  This closure is the historical hot path —
+            # byte-identical decisions to the equivalence goldens.
+            next_lb_clock = itertools.cycle(lb_clocks).__next__
+
+            def submit(req: Request, now: float) -> None:
+                # hop 1: LBS routing decision (a scalable service: many
+                # LBs).  Both clock acquires are hand-inlined M/D/1
+                # waits (identical arithmetic to _ServiceClock.acquire).
+                c = next_lb_clock()
+                t = c.busy_until
+                if now > t:
+                    t = now
+                c.busy_until = t_routed = t + lb_cost
+                sgs = select(req, now)
+                # hop 2: SGS scheduling decision, serialized per SGS
+                c = sgs_clocks[sgs.sgs_id]
+                t = c.busy_until
+                if t_routed > t:
+                    t = t_routed
+                c.busy_until = t_sched = \
+                    t + sgs_cost * req.dag._n_fns
+                call_at(t_sched, sgs.submit_request, req)
+        else:
+            # elastic pool: the autoscaler grows/shrinks `clocks` in
+            # place between arrivals, so round-robin with a cursor that
+            # re-reads the live length, and count routed requests for
+            # the utilization signal
+            clocks = lb_clocks
+            cursor = [0]
+
+            def submit(req: Request, now: float) -> None:
+                i = cursor[0]
+                if i >= len(clocks):
+                    i = 0
+                cursor[0] = i + 1
+                c = clocks[i]
+                t = c.busy_until
+                if now > t:
+                    t = now
+                c.busy_until = t_routed = t + lb_cost
+                scaler.n_routed += 1
+                sgs = select(req, now)
+                c = sgs_clocks[sgs.sgs_id]
+                t = c.busy_until
+                if t_routed > t:
+                    t = t_routed
+                c.busy_until = t_sched = \
+                    t + sgs_cost * req.dag._n_fns
+                call_at(t_sched, sgs.submit_request, req)
+    elif scaler is None:
+        next_lb_clock = itertools.cycle(lb_clocks).__next__
+
+        def submit(req: Request, now: float) -> None:
+            c = next_lb_clock()
+            t = c.busy_until
+            if now > t:
+                t = now
+            c.busy_until = t_routed = t + lb_cost
+            sgs = select(req, now)
+            c = sgs_clocks[sgs.sgs_id]
+            t = c.busy_until
+            if t_routed > t:
+                t = t_routed
+            c.busy_until = t_sched = \
+                t + sgs_cost * req.dag._n_fns
+            deliver(t_sched, sgs.sgs_id, req)
+    else:
+        clocks = lb_clocks
+        cursor = [0]
+
+        def submit(req: Request, now: float) -> None:
+            i = cursor[0]
+            if i >= len(clocks):
+                i = 0
+            cursor[0] = i + 1
+            c = clocks[i]
+            t = c.busy_until
+            if now > t:
+                t = now
+            c.busy_until = t_routed = t + lb_cost
+            scaler.n_routed += 1
+            sgs = select(req, now)
+            c = sgs_clocks[sgs.sgs_id]
+            t = c.busy_until
+            if t_routed > t:
+                t = t_routed
+            c.busy_until = t_sched = \
+                t + sgs_cost * req.dag._n_fns
+            deliver(t_sched, sgs.sgs_id, req)
+
+    return submit
+
+
 class Stack(Protocol):
     """What ``simulate``'s generic pump loop needs from a scheduler stack.
 
@@ -182,65 +301,10 @@ class ArchipelagoStack:
         if type(self).submit is ArchipelagoStack.submit:
             # hot path: close over locals so the pump pays zero attribute
             # lookups per arrival (same constants as the pre-registry driver)
-            sgs_clocks = self._sgs_clocks
-            select = self.lbs.select
-            call_at = env.call_at
-            lb_cost = exp.lb_cost
-            sgs_cost = exp.sgs_cost
-            if auto is None:
-                # static pool: round-robin over the LB replicas without a
-                # counter/modulo.  This closure is the historical hot path —
-                # byte-identical decisions to the equivalence goldens.
-                next_lb_clock = itertools.cycle(self._lb_clocks).__next__
-
-                def submit(req: Request, now: float) -> None:
-                    # hop 1: LBS routing decision (a scalable service: many
-                    # LBs).  Both clock acquires are hand-inlined M/D/1
-                    # waits (identical arithmetic to _ServiceClock.acquire).
-                    c = next_lb_clock()
-                    t = c.busy_until
-                    if now > t:
-                        t = now
-                    c.busy_until = t_routed = t + lb_cost
-                    sgs = select(req, now)
-                    # hop 2: SGS scheduling decision, serialized per SGS
-                    c = sgs_clocks[sgs.sgs_id]
-                    t = c.busy_until
-                    if t_routed > t:
-                        t = t_routed
-                    c.busy_until = t_sched = \
-                        t + sgs_cost * req.dag._n_fns
-                    call_at(t_sched, sgs.submit_request, req)
-            else:
-                # elastic pool: the autoscaler grows/shrinks `clocks` in
-                # place between arrivals, so round-robin with a cursor that
-                # re-reads the live length, and count routed requests for
-                # the utilization signal
-                clocks = self._lb_clocks
-                scaler = self._autoscaler
-                cursor = [0]
-
-                def submit(req: Request, now: float) -> None:
-                    i = cursor[0]
-                    if i >= len(clocks):
-                        i = 0
-                    cursor[0] = i + 1
-                    c = clocks[i]
-                    t = c.busy_until
-                    if now > t:
-                        t = now
-                    c.busy_until = t_routed = t + lb_cost
-                    scaler.n_routed += 1
-                    sgs = select(req, now)
-                    c = sgs_clocks[sgs.sgs_id]
-                    t = c.busy_until
-                    if t_routed > t:
-                        t = t_routed
-                    c.busy_until = t_sched = \
-                        t + sgs_cost * req.dag._n_fns
-                    call_at(t_sched, sgs.submit_request, req)
-
-            self.submit = submit
+            self.submit = make_archipelago_submit(
+                self._lb_clocks, self._sgs_clocks, self.lbs.select,
+                env.call_at, exp.lb_cost, exp.sgs_cost,
+                scaler=self._autoscaler)
 
     def submit(self, req: Request, now: float) -> None:
         # hop 1: LBS routing decision (LBS is a scalable service: many LBs)

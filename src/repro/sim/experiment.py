@@ -177,6 +177,14 @@ class Experiment:
     # the archipelago stack's LBS replica pool autoscales from observed
     # decision-clock utilization instead of the static params["n_lbs"]
     autoscale: Optional[AutoscaleConfig] = None
+    # sharded parallel core (sim.shard, docs/PERF.md "Sharded core"): N > 1
+    # partitions the SGSs into N process-local islands advancing their own
+    # event loops, synchronized at LBS epoch boundaries.  None (the default)
+    # keeps the single-process path untouched; any shard count is required
+    # to produce byte-identical ExperimentResult rows (a hard contract,
+    # pinned by tests/test_shards.py).  Sweepable like any top-level field:
+    # ``run_sweep(base, {"shards": [None, 2, 4]})``.
+    shards: Optional[int] = None
     name: str = ""
 
     def resolve_workload(self) -> WorkloadSpec:
@@ -470,7 +478,21 @@ def simulate(exp: Experiment, *,
     given simulated time (fault injection).  Both run inside the event loop
     and may mutate the stack — they exist so benchmarks never have to
     re-plumb the pump by hand.
+
+    ``exp.shards`` > 1 routes the run through the sharded parallel core
+    (``repro.sim.shard``): SGS islands advance in separate processes with
+    epoch synchronization at LBS decision boundaries, returning a result
+    byte-identical to this single-process path.  Inside a daemonic
+    ``run_sweep`` pool worker (which cannot spawn children) the request is
+    honored by the sequential path instead — identical rows either way.
     """
+    if exp.shards is not None and int(exp.shards) > 1:
+        import multiprocessing
+
+        from .shard import simulate_sharded, validate_shardable
+        validate_shardable(exp, hooks, timed_calls)
+        if not multiprocessing.current_process().daemon:
+            return simulate_sharded(exp)
     exp_spec, sim, stack, wall = _run_experiment(exp, hooks, timed_calls)
     warm_hits = stack.counters().get("warm_hits", 0)
     sev = getattr(stack, "scaling_events", None)
@@ -670,6 +692,15 @@ def _expand_cells(base: Experiment, axes: Mapping[str, Sequence[Any]]
     return cells
 
 
+def _picklable(v: Any) -> bool:
+    import pickle
+    try:
+        pickle.dumps(v)
+    except Exception:
+        return False
+    return True
+
+
 def _run_cell(exp: Experiment) -> Dict[str, Any]:
     """Worker-process entry point: one fresh simulation, serialized through
     the lossless ``to_dict`` round-trip (the live ``sim`` handle never
@@ -699,15 +730,29 @@ def run_sweep(base: Experiment, axes: Mapping[str, Sequence[Any]],
     rows: List[Dict[str, Any]] = []
     objs: List[ExperimentResult] = []
     use_pool = workers > 1 and not keep_sim and len(cells) > 1
+    if workers > 1 and keep_sim:
+        import warnings
+        warnings.warn(
+            f"run_sweep(workers={workers}): keep_sim=True retains live "
+            f"simulation handles that cannot cross a process boundary; "
+            f"falling back to sequential execution",
+            RuntimeWarning, stacklevel=2)
     if use_pool:
         import pickle
         try:
             pickle.dumps([exp for _, exp in cells])
         except Exception as e:
             import warnings
+            # name the offending field so the fix ("use a *named* workload
+            # factory/backend") is obvious from the warning alone
+            bad = sorted({f.name for f in dataclasses.fields(base)
+                          for _, exp in cells
+                          if not _picklable(getattr(exp, f.name))})
+            detail = (f"field(s) {', '.join(map(repr, bad))} are not "
+                      f"picklable" if bad else "cells are not picklable")
             warnings.warn(
-                f"run_sweep(workers={workers}): cells are not picklable "
-                f"({e!r}); falling back to sequential execution",
+                f"run_sweep(workers={workers}): {detail} ({e!r}); falling "
+                f"back to sequential execution",
                 RuntimeWarning, stacklevel=2)
             use_pool = False
     if use_pool:

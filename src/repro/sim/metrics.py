@@ -181,6 +181,27 @@ class _FlatColumns:
         return out
 
 
+class _CompLen:
+    """Stands in for ``_FlatColumns.comp`` after a sharded merge: every
+    consumer keys on ``len(comp)`` (cache invalidation) and reads rows only
+    through ``finalized()``, so a merged run carries just the count — the
+    actual columns are installed directly as the finalized arrays, skipping
+    a pointless n-tuple Python list at 10M-request scale."""
+
+    __slots__ = ("n",)
+
+    def __init__(self, n: int):
+        self.n = n
+
+    def __len__(self) -> int:
+        return self.n
+
+    def append(self, row) -> None:  # pragma: no cover - guards misuse
+        raise RuntimeError(
+            "cannot record into a sharded-merged Metrics (completions were "
+            "absorbed as finalized columns)")
+
+
 class Metrics:
     """Unified metrics container — see the module docstring for the two
     recording modes.  The constructor signature (``requests``,
@@ -252,6 +273,27 @@ class Metrics:
         if self._cols is not None:
             return self._cols.record_completion
         return self.record_completion
+
+    def absorb_sharded(self, comp_idx: np.ndarray, comp_time: np.ndarray,
+                       comp_cold: np.ndarray, comp_sgs: np.ndarray,
+                       comp_qd: np.ndarray,
+                       pending: Dict[int, Request]) -> None:
+        """Install a sharded run's merged completion columns (flat mode
+        only — ``repro.sim.shard`` coordinator).  The five arrays are the
+        exact shape ``_FlatColumns.finalized()`` would build from per-tuple
+        recording (row idx, completion time, cold starts, SGS id, total
+        queuing delay); order across rows is irrelevant to every statistic
+        (percentiles sort, the rest are sums/masks/scatters by row index).
+        ``pending`` holds reconstructed stand-ins for requests still in
+        flight at the horizon, exactly like the live objects the sequential
+        pump would have left behind."""
+        c = self._cols
+        if c is None:
+            raise RuntimeError("absorb_sharded requires flat-column mode")
+        n = len(comp_idx)
+        c._fin = (n, (comp_idx, comp_time, comp_cold, comp_sgs, comp_qd))
+        c.comp = _CompLen(n)
+        c.pending = pending
 
     def add_queuing_samples(self, delays: Sequence[float],
                             times: Sequence[float]) -> None:

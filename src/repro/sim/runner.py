@@ -6,7 +6,10 @@ call sites (and the decision-identity goldens in
 ``tests/test_equivalence.py``) keep working unchanged, but new code should
 build an :class:`~repro.sim.experiment.Experiment` and call
 :func:`~repro.sim.experiment.simulate` — same pump loop, richer results,
-and any registered stack (``repro.core.stacks``) instead of these three.
+any registered stack (``repro.core.stacks``) instead of these three, and
+access to the sharded parallel core (``Experiment.shards``,
+:mod:`repro.sim.shard`), which these legacy shims deliberately do not
+expose.
 """
 from __future__ import annotations
 

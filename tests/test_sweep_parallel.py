@@ -56,13 +56,30 @@ def test_parallel_falls_back_on_unpicklable_cells():
         sweep = run_sweep(base, {"seed": [0, 1]}, workers=2)
     assert len(sweep.rows) == 2
     assert any("picklable" in str(w.message) for w in caught)
+    # the warning must name WHICH field blocks pickling (the fix — a named
+    # factory — should be obvious from the message alone)
+    msg = next(str(w.message) for w in caught if "picklable" in str(w.message))
+    assert "workload_factory" in msg
+    assert "sequential" in msg
 
 
 def test_keep_sim_runs_sequentially_and_keeps_handles():
     base = _grid_base()
-    sweep = run_sweep(base, {"seed": [0, 1]}, keep_sim=True, workers=4)
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        sweep = run_sweep(base, {"seed": [0, 1]}, keep_sim=True, workers=4)
     assert sweep.experiment_results is not None
     assert all(r.sim is not None for r in sweep.experiment_results)
+    # the sequential fallback must say WHY (keep_sim, not pickling)
+    msgs = [str(w.message) for w in caught]
+    assert any("keep_sim" in m and "sequential" in m for m in msgs)
+
+
+def test_keep_sim_without_pool_request_does_not_warn():
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        run_sweep(_grid_base(), {"seed": [0]}, keep_sim=True)
+    assert not [w for w in caught if "keep_sim" in str(w.message)]
 
 
 def test_detach_sim_is_explicit_and_keeps_serializability():
