@@ -27,9 +27,9 @@ from .lbs import ConsistentHashRing, LBSConfig, LoadBalancer
 from .baselines import CentralizedFIFO, SparrowScheduler
 from .cluster import ClusterConfig, build_cluster, build_flat_workers
 from .backends import (BatchCoalescer, BatchedJaxBackend, CompletionQueue,
-                       ExecutionBackend, JaxBackend, ModeledBackend,
-                       StubBackend, StubBatchedBackend, available_backends,
-                       get_backend, register_backend)
+                       ContinuousBatcher, ExecutionBackend, JaxBackend,
+                       ModeledBackend, StubBackend, StubBatchedBackend,
+                       available_backends, get_backend, register_backend)
 from .stacks import (Stack, available_stacks, get_stack, register_stack)
 from .autoscale import (AutoscaleConfig, LBSReplicaAutoscaler, ScalingEvent,
                         scaling_summary)
@@ -49,6 +49,7 @@ __all__ = [
     "Stack", "available_stacks", "get_stack", "register_stack",
     "ExecutionBackend", "ModeledBackend", "StubBackend", "StubBatchedBackend",
     "JaxBackend", "BatchedJaxBackend", "BatchCoalescer", "CompletionQueue",
+    "ContinuousBatcher",
     "available_backends", "get_backend", "register_backend",
     "StateStore", "checkpoint_lbs", "checkpoint_sgs", "fail_worker",
     "restore_lbs", "restore_sgs", "fail_sgs",

@@ -38,6 +38,15 @@ Built-ins:
   in-flight invocations of the same served model into padded batches
   (bucketed by powers of two, per-bucket executables compiled at
   calibration time — ``repro.serving.executor.BatchingJaxExecutor``).
+  ``batching="continuous"`` swaps the request-window coalescer for
+  step-granular continuous batching (:class:`ContinuousBatcher` over
+  ``repro.serving.executor.ContinuousJaxExecutor``): decode-style requests
+  join/leave a running batch at token-step boundaries.
+
+The jax backends also take ``kernels={"xla","pallas","pallas_interpret"}``
+(see ``repro.kernels.ops``): which implementation serves the model hot
+spots.  Both axes are ordinary sweepable ``backend_kwargs`` and are
+recorded per result row via :meth:`ExecutionBackend.data_plane`.
 
 The execution contract is *asynchronous*: schedulers dispatch through
 ``submit(inv, done, delay)`` and the backend completes later by firing
@@ -64,10 +73,17 @@ if TYPE_CHECKING:   # pragma: no cover - typing only, avoids a core->sim cycle
 __all__ = [
     "ExecutionBackend", "ModeledBackend", "StubBackend",
     "StubBatchedBackend", "JaxBackend", "BatchedJaxBackend",
-    "CompletionQueue", "BatchCoalescer",
+    "CompletionQueue", "BatchCoalescer", "ContinuousBatcher",
     "register_backend", "get_backend", "available_backends",
     "resolve_backend", "respec_dag", "respec_workload", "served_model_key",
+    "KERNEL_CHOICES", "BATCHING_CHOICES",
 ]
+
+# kernel-dispatch backends a jax data plane accepts (mirrors
+# repro.kernels.ops.KernelType without importing jax at module scope)
+KERNEL_CHOICES = ("xla", "pallas", "pallas_interpret")
+# batching disciplines of the batched data planes
+BATCHING_CHOICES = ("windowed", "continuous")
 
 
 class ExecutionBackend:
@@ -136,6 +152,13 @@ class ExecutionBackend:
             self.submit = submit
 
     def counters(self) -> Dict[str, int]:
+        return {}
+
+    def data_plane(self) -> Dict[str, str]:
+        """Data-plane identity for result rows: which kernel backend served
+        the model hot spots (``kernels``) and which batching discipline the
+        submit hook ran (``batching``).  Empty for modeled backends —
+        there is no data plane to identify."""
         return {}
 
 
@@ -316,6 +339,135 @@ class BatchCoalescer:
                 "max_batch_occupancy": self.max_occupancy}
 
 
+class ContinuousBatcher:
+    """Step-granular *continuous* batching on top of the async seam.
+
+    Where :class:`BatchCoalescer` gathers whole requests into one padded
+    execution (every member runs prefill AND all decode steps together),
+    this batcher decomposes a decode-style request into *token steps*:
+    in-flight invocations of the same function join and leave a running
+    batch at step boundaries.  A new arrival never waits for the current
+    generation to finish — it is admitted at the next tick (one batched
+    prefill), decodes alongside the residents, and completes as soon as its
+    own ``steps_for(fn)`` decode steps have elapsed.  This is the vLLM-style
+    iteration-level scheduling discipline, driving the GPU/TPU at decode
+    batch occupancy instead of request-window occupancy.
+
+    The data plane supplies three hooks (see
+    ``repro.serving.executor.ContinuousJaxExecutor`` for the real twin and
+    ``StubBatchedBackend(batching="continuous")`` for the scripted one):
+
+    * ``admit(fn_name, invs, slots) -> seconds`` — batched prefill of the
+      joiners into cache slots ``slots``; returns measured wall seconds.
+    * ``step(fn_name, slots) -> seconds`` — ONE decode step for every
+      active slot; returns measured wall seconds.
+    * ``steps_for(fn_name) -> int`` — decode steps a request owes after its
+      admitting prefill (the prefill itself yields the first token).
+
+    Determinism: pending joiners are admitted in ``inv_id`` order into the
+    lowest free slots; same-instant submissions all join the same first
+    tick (the tick is deferred to the end of the current instant); members
+    finishing on the same tick complete in ``inv_id`` order via
+    :class:`CompletionQueue`.  A cold invocation (``delay`` = sandbox
+    setup) enrolls only once its setup has elapsed.
+    """
+
+    def __init__(self, env: "Env",
+                 admit: Callable[[str, List[Invocation], List[int]], float],
+                 step: Callable[[str, List[int]], float],
+                 steps_for: Callable[[str], int],
+                 max_batch: int = 8):
+        if max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        self.env = env
+        self.admit = admit
+        self.step = step
+        self.steps_for = steps_for
+        self.max_batch = max_batch
+        self._cq = CompletionQueue(env)
+        self._pending: Dict[str, List[Tuple[Invocation, DoneFn]]] = {}
+        # slot -> [inv, done, steps_left, join_time]
+        self._active: Dict[str, Dict[int, list]] = {}
+        self._free: Dict[str, List[int]] = {}       # min-heap of free slots
+        self._running: Dict[str, bool] = {}
+        # occupancy counters (surfaced through backend.counters())
+        self.n_prefill_batches = 0
+        self.n_joins = 0
+        self.n_ticks = 0
+        self.n_step_slots = 0           # sum of active sizes over all ticks
+        self.max_occupancy = 0
+
+    def submit(self, inv: Invocation, done: DoneFn, delay: float = 0.0
+               ) -> None:
+        if delay > 0.0:
+            self.env.call_after(delay, self._enroll, inv, done)
+        else:
+            self._enroll(inv, done)
+
+    def _enroll(self, inv: Invocation, done: DoneFn) -> None:
+        fn = inv.fn.name
+        self._pending.setdefault(fn, []).append((inv, done))
+        if not self._running.get(fn, False):
+            self._running[fn] = True
+            # defer the first tick to the end of the current instant so
+            # every same-instant submission joins the same prefill batch
+            self.env.call_after(0.0, self._tick, fn)
+
+    def _tick(self, fn: str) -> None:
+        now = self.env.now()
+        pending = self._pending.setdefault(fn, [])
+        active = self._active.setdefault(fn, {})
+        free = self._free.setdefault(fn, list(range(self.max_batch)))
+        dur = 0.0
+        if pending and free:
+            pending.sort(key=lambda p: p[0].inv_id)
+            k = min(len(pending), len(free))
+            joiners, self._pending[fn] = pending[:k], pending[k:]
+            slots = sorted(heapq.heappop(free) for _ in range(k))
+            dur += self.admit(fn, [inv for inv, _ in joiners], slots)
+            self.n_prefill_batches += 1
+            self.n_joins += k
+            steps = self.steps_for(fn)
+            for (inv, done), s in zip(joiners, slots):
+                active[s] = [inv, done, steps, now]
+            if steps <= 0:
+                # degenerate prefill-only functions: done at admission,
+                # before (and without) any decode step
+                self._finish(fn, now, dur)
+        if active:
+            slots = sorted(active)
+            dur += self.step(fn, slots)
+            self.n_ticks += 1
+            self.n_step_slots += len(slots)
+            if len(slots) > self.max_occupancy:
+                self.max_occupancy = len(slots)
+            for s in slots:
+                active[s][2] -= 1
+        self._finish(fn, now, dur)
+        if self._active[fn] or self._pending.get(fn):
+            self.env.call_after(dur, self._tick, fn)
+        else:
+            self._running[fn] = False
+
+    def _finish(self, fn: str, now: float, dur: float) -> None:
+        """Complete every active member that owes no further steps, at
+        ``now + dur``; ``exec_s`` reports the member's total residency
+        (its own prefill through its last decode step)."""
+        active, free = self._active[fn], self._free[fn]
+        for s in [s for s, e in active.items() if e[2] <= 0]:
+            inv, done, _, join_t = active.pop(s)
+            heapq.heappush(free, s)
+            total = now + dur - join_t
+            self._cq.schedule(inv, total, done, delay=dur - total)
+
+    def counters(self) -> Dict[str, int]:
+        return {"n_prefill_batches": self.n_prefill_batches,
+                "n_joins": self.n_joins,
+                "n_decode_ticks": self.n_ticks,
+                "n_step_slots": self.n_step_slots,
+                "max_batch_occupancy": self.max_occupancy}
+
+
 def pow2_bucket(k: int) -> int:
     """Smallest power of two >= k (the padded batch size a batch of ``k``
     executes at)."""
@@ -447,20 +599,59 @@ class StubBatchedBackend(StubBackend):
                  exec_time: Union[float, Mapping[str, float], None] = None,
                  setup_time: Union[float, Mapping[str, float], None] = None,
                  batch_window: float = 0.005, max_batch: int = 8,
-                 batch_cost: float = 0.0):
+                 batch_cost: float = 0.0, batching: str = "windowed",
+                 n_steps: int = 4):
         super().__init__(exec_time, setup_time)
+        if batching not in BATCHING_CHOICES:
+            raise ValueError(f"batching must be one of {BATCHING_CHOICES}, "
+                             f"got {batching!r}")
+        if n_steps < 0:
+            raise ValueError(f"n_steps must be >= 0, got {n_steps}")
         self.batch_window = batch_window
         self.max_batch = max_batch
         self.batch_cost = batch_cost
+        self.batching = batching
+        self.n_steps = n_steps
         self._coalescer: Optional[BatchCoalescer] = None
+        self._batcher: Optional[ContinuousBatcher] = None
+        self._fn_exec: Dict[str, float] = {}
 
     def build(self, exp: "Experiment", spec: "WorkloadSpec") -> "WorkloadSpec":
         spec = super().build(exp, spec)
+        # scripted per-function exec times, addressable by name (the
+        # continuous hooks receive fn_name, not an Invocation)
+        self._fn_exec = {f.name: f.exec_time
+                         for dag, _ in spec.tenants for f in dag.functions}
         self.execute = None     # native async submit: skip the legacy adapter
         return spec
 
     def bind(self, env: "Env") -> None:
         self.env = env
+        if self.batching == "continuous":
+            # scripted continuous twin: a lone request still costs exactly
+            # exec_time (half in the admitting prefill, half spread over
+            # n_steps decode ticks), so windowed/continuous stub runs are
+            # directly comparable; batch_cost charges padded-slot overhead
+            # per tick just like the windowed script does per batch
+            def admit(fn_name: str, invs: List[Invocation],
+                      slots: List[int]) -> float:
+                self.n_executions += 1
+                bucket = pow2_bucket(len(slots))
+                return (self._fn_exec[fn_name] * 0.5
+                        + self.batch_cost * (bucket - 1))
+
+            def step(fn_name: str, slots: List[int]) -> float:
+                self.n_executions += 1
+                bucket = pow2_bucket(len(slots))
+                per_step = self._fn_exec[fn_name] * 0.5 / max(1, self.n_steps)
+                return per_step + self.batch_cost * (bucket - 1)
+
+            self._batcher = ContinuousBatcher(env, admit, step,
+                                              lambda fn: self.n_steps,
+                                              max_batch=self.max_batch)
+            self.submit = self._batcher.submit
+            self._coalescer = None
+            return
 
         def run_batch(fn_name: str, invs: List[Invocation]) -> float:
             self.n_executions += 1
@@ -471,12 +662,18 @@ class StubBatchedBackend(StubBackend):
                                          batch_window=self.batch_window,
                                          max_batch=self.max_batch)
         self.submit = self._coalescer.submit
+        self._batcher = None
 
     def counters(self) -> Dict[str, int]:
         c = dict(super().counters())
         if self._coalescer is not None:
             c.update(self._coalescer.counters())
+        if self._batcher is not None:
+            c.update(self._batcher.counters())
         return c
+
+    def data_plane(self) -> Dict[str, str]:
+        return {"kernels": "none", "batching": self.batching}
 
 
 def served_model_key(served: Mapping[str, "ServedModel"]) -> tuple:
@@ -489,7 +686,7 @@ def served_model_key(served: Mapping[str, "ServedModel"]) -> tuple:
     """
     return tuple(sorted(
         (name, m.cfg.name, m.cfg.arch_type, m.cfg.n_layers, m.cfg.d_model,
-         m.prompt_len, m.gen_len, m.batch)
+         getattr(m.cfg, "kernels", "xla"), m.prompt_len, m.gen_len, m.batch)
         for name, m in served.items()))
 
 
@@ -510,10 +707,15 @@ class JaxBackend(ExecutionBackend):
     """
 
     def __init__(self, served: Optional[Mapping[str, "ServedModel"]] = None,
-                 mem_mb: float = 512.0, calib_runs: int = 3):
+                 mem_mb: float = 512.0, calib_runs: int = 3,
+                 kernels: str = "xla"):
+        if kernels not in KERNEL_CHOICES:
+            raise ValueError(f"kernels must be one of {KERNEL_CHOICES}, "
+                             f"got {kernels!r}")
         self.served = served
         self.mem_mb = mem_mb
         self.calib_runs = calib_runs
+        self.kernels = kernels
         self.executor: Optional["JaxModelExecutor"] = None
         self.fn_specs: Optional[Dict[str, FunctionSpec]] = None
         self._calibrated_key: Optional[tuple] = None
@@ -527,6 +729,12 @@ class JaxBackend(ExecutionBackend):
                 f'backend="{self.name}" needs served models: use a serving '
                 'workload (repro.serving.engine.serving_workload) or pass '
                 'backend_kwargs=dict(served={fn_name: ServedModel})')
+        if any(m.cfg.kernels != self.kernels for m in served.values()):
+            # the backend's kernel choice overrides the models': one sweep
+            # axis flips every served model between xla and Pallas
+            served = {name: dataclasses.replace(
+                          m, cfg=m.cfg.with_(kernels=self.kernels))
+                      for name, m in served.items()}
         return served
 
     def _make_executor(self, served: Mapping[str, "ServedModel"]):
@@ -551,6 +759,9 @@ class JaxBackend(ExecutionBackend):
         n = self.executor.n_executions if self.executor is not None else 0
         return {"n_executions": n}
 
+    def data_plane(self) -> Dict[str, str]:
+        return {"kernels": self.kernels, "batching": "none"}
+
 
 @register_backend("jax-batched")
 class BatchedJaxBackend(JaxBackend):
@@ -573,25 +784,50 @@ class BatchedJaxBackend(JaxBackend):
 
     def __init__(self, served: Optional[Mapping[str, "ServedModel"]] = None,
                  mem_mb: float = 512.0, calib_runs: int = 3,
-                 batch_window: float = 0.005, max_batch: int = 8):
-        super().__init__(served, mem_mb=mem_mb, calib_runs=calib_runs)
+                 batch_window: float = 0.005, max_batch: int = 8,
+                 batching: str = "windowed", kernels: str = "xla"):
+        super().__init__(served, mem_mb=mem_mb, calib_runs=calib_runs,
+                         kernels=kernels)
+        if batching not in BATCHING_CHOICES:
+            raise ValueError(f"batching must be one of {BATCHING_CHOICES}, "
+                             f"got {batching!r}")
         self.batch_window = batch_window
         self.max_batch = max_batch
+        self.batching = batching
         self._coalescer: Optional[BatchCoalescer] = None
+        self._batcher: Optional[ContinuousBatcher] = None
 
     def _make_executor(self, served: Mapping[str, "ServedModel"]):
+        if self.batching == "continuous":
+            from ..serving.executor import ContinuousJaxExecutor  # lazy: jax
+            return ContinuousJaxExecutor(dict(served),
+                                         max_batch=self.max_batch)
         from ..serving.executor import BatchingJaxExecutor  # lazy: needs jax
         return BatchingJaxExecutor(dict(served), max_batch=self.max_batch)
 
     def bind(self, env: "Env") -> None:
         self.env = env
+        if self.batching == "continuous":
+            ex = self.executor
+            self._batcher = ContinuousBatcher(env, ex.admit, ex.step,
+                                              ex.gen_steps,
+                                              max_batch=self.max_batch)
+            self.submit = self._batcher.submit
+            self._coalescer = None
+            return
         self._coalescer = BatchCoalescer(env, self.executor.run_batch,
                                          batch_window=self.batch_window,
                                          max_batch=self.max_batch)
         self.submit = self._coalescer.submit
+        self._batcher = None
 
     def counters(self) -> Dict[str, int]:
         c = dict(super().counters())
         if self._coalescer is not None:
             c.update(self._coalescer.counters())
+        if self._batcher is not None:
+            c.update(self._batcher.counters())
         return c
+
+    def data_plane(self) -> Dict[str, str]:
+        return {"kernels": self.kernels, "batching": self.batching}

@@ -11,8 +11,6 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from ..models.layers import ssd_chunked as _ssd_chunked_ref
-
 f32 = jnp.float32
 
 
@@ -63,6 +61,9 @@ def ssd_scan_ref(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Chunked SSD (Mamba2) — delegates to the model-layer reference.
     x: (B,S,H,P), dt: (B,S,H), A: (H,), Bm/Cm: (B,S,N)."""
+    # lazy: models.layers imports kernels.ops (dispatch), which imports this
+    # module — a top-level import here would close the cycle
+    from ..models.layers import ssd_chunked as _ssd_chunked_ref
     return _ssd_chunked_ref(x, dt, A, Bm, Cm, chunk, init_state=init_state)
 
 

@@ -26,14 +26,16 @@ from jax.experimental.pallas import tpu as pltpu
 f32 = jnp.float32
 
 
-def _ssd_kernel(x_ref, dt_ref, da_ref, b_ref, c_ref, y_ref, st_ref,
+def _ssd_kernel(x_ref, dt_ref, da_ref, b_ref, c_ref, s0_ref, y_ref, st_ref,
                 state_scr, *, Q: int):
     ic = pl.program_id(1)
     nc = pl.num_programs(1)
 
     @pl.when(ic == 0)
     def _init():
-        state_scr[...] = jnp.zeros_like(state_scr)
+        # seed the inter-chunk carry from the caller's state (decode-time
+        # prefill over an existing cache); zeros for a fresh sequence
+        state_scr[...] = s0_ref[0].astype(f32)
 
     x = x_ref[0].astype(f32)           # (Q, P)
     dt = dt_ref[0].astype(f32)         # (Q, 1)
@@ -74,9 +76,10 @@ def _ssd_kernel(x_ref, dt_ref, da_ref, b_ref, c_ref, y_ref, st_ref,
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
 def ssd_scan(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
              Bm: jnp.ndarray, Cm: jnp.ndarray, *, chunk: int = 64,
-             interpret: bool = False):
+             init_state: jnp.ndarray = None, interpret: bool = False):
     """See module docstring.  S must be a multiple of ``chunk`` (the ops.py
-    wrapper pads with dt=0, which provably leaves the state untouched)."""
+    wrapper pads with dt=0, which provably leaves the state untouched).
+    ``init_state`` (B,H,P,N) seeds the recurrence (None = zeros)."""
     B, S, H, P = x.shape
     N = Bm.shape[-1]
     assert S % chunk == 0, "pad S to a chunk multiple (see ops.ssd)"
@@ -87,6 +90,8 @@ def ssd_scan(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
     dAt = dtt * A.reshape(1, H, 1, 1).repeat(B, 0).reshape(B * H, 1, 1)
     bt = Bm                                             # (B, S, N)
     ct = Cm
+    s0 = (jnp.zeros((B * H, P, N), f32) if init_state is None
+          else init_state.astype(f32).reshape(B * H, P, N))
 
     kernel = functools.partial(_ssd_kernel, Q=chunk)
     y, st = pl.pallas_call(
@@ -98,6 +103,7 @@ def ssd_scan(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
             pl.BlockSpec((1, chunk, 1), lambda h, c: (h, c, 0)),
             pl.BlockSpec((1, chunk, N), lambda h, c, H=H: (h // H, c, 0)),
             pl.BlockSpec((1, chunk, N), lambda h, c, H=H: (h // H, c, 0)),
+            pl.BlockSpec((1, P, N), lambda h, c: (h, 0, 0)),
         ],
         out_specs=[
             pl.BlockSpec((1, chunk, P), lambda h, c: (h, c, 0)),
@@ -109,6 +115,6 @@ def ssd_scan(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
         ],
         scratch_shapes=[pltpu.VMEM((P, N), f32)],
         interpret=interpret,
-    )(xt, dtt, dAt, bt, ct)
+    )(xt, dtt, dAt, bt, ct, s0)
     y = jnp.moveaxis(y.reshape(B, H, S, P), 1, 2)
     return y, st.reshape(B, H, P, N)

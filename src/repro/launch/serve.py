@@ -33,6 +33,16 @@ def main() -> None:
     ap.add_argument("--max-batch", type=int, default=8,
                     help="batched backends: flush when this many invocations "
                          "of one model have gathered")
+    ap.add_argument("--kernels", default="xla",
+                    choices=["xla", "pallas", "pallas_interpret"],
+                    help="jax backends: which implementation serves the "
+                         "model hot spots (attention / decode attention / "
+                         "SSD scan) — see docs/KERNELS.md")
+    ap.add_argument("--batching", default="windowed",
+                    choices=["windowed", "continuous"],
+                    help="batched backends: request-window coalescing vs "
+                         "step-granular continuous batching "
+                         "(docs/SERVING.md)")
     ap.add_argument("--stack", default="archipelago")
     ap.add_argument("--warmup", type=float, default=None,
                     help="steady-state window start (exclude the pre-warm "
@@ -48,7 +58,10 @@ def main() -> None:
     backend_kwargs = {}
     if args.backend.endswith("-batched"):
         backend_kwargs = dict(batch_window=args.batch_window,
-                              max_batch=args.max_batch)
+                              max_batch=args.max_batch,
+                              batching=args.batching)
+    if real_jax:
+        backend_kwargs["kernels"] = args.kernels
 
     app = ServingApp(
         dag_id=args.arch,
@@ -82,8 +95,9 @@ def main() -> None:
           f"p99={(lat['p99'] or 0)*1e3:.1f}ms "
           f"deadlines_met={(r.deadline_met_frac or 0)*100:.2f}% "
           f"cold_starts={r.cold_start_count}")
+    dp = "".join(f" {k}={v}" for k, v in sorted(r.data_plane.items()))
     print(f"  executions: {backend.counters().get('n_executions', 0)} "
-          f"({r.backend} backend)")
+          f"({r.backend} backend{dp})")
     bc = r.backend_counters
     if bc.get("n_batches"):
         print(f"  batches: {bc['n_batches']} "
@@ -92,6 +106,12 @@ def main() -> None:
               f"max {bc['max_batch_occupancy']}, "
               f"padding efficiency "
               f"{bc['n_batched_invocations'] / bc['n_batch_slots']:.2f})")
+    if bc.get("n_decode_ticks"):
+        print(f"  continuous: {bc['n_prefill_batches']} prefill batches, "
+              f"{bc['n_decode_ticks']} decode ticks "
+              f"(mean step occupancy "
+              f"{bc['n_step_slots'] / bc['n_decode_ticks']:.2f}, "
+              f"max {bc['max_batch_occupancy']})")
 
 
 if __name__ == "__main__":

@@ -1,7 +1,7 @@
 """Model zoo: config-driven unified architectures in pure JAX."""
 from .config import LayerGroup, ModelConfig
-from .transformer import (decode_step, forward, init_cache, init_params,
-                          lm_loss, prefill)
+from .transformer import (decode_step, decode_step_ragged, forward,
+                          init_cache, init_params, lm_loss, prefill)
 
-__all__ = ["LayerGroup", "ModelConfig", "decode_step", "forward",
-           "init_cache", "init_params", "lm_loss", "prefill"]
+__all__ = ["LayerGroup", "ModelConfig", "decode_step", "decode_step_ragged",
+           "forward", "init_cache", "init_params", "lm_loss", "prefill"]

@@ -73,6 +73,15 @@ class ModelConfig:
     frontend: str = ""          # "" | "vision" | "audio"
     n_frontend_tokens: int = 0  # patch/frame embeddings prepended to the seq
 
+    # -- kernel dispatch -----------------------------------------------------
+    # which implementation services the hot spots (attention, decode
+    # attention over KV caches, the SSD scan): "xla" = pure-jnp reference
+    # (default; byte-compatible with the pre-dispatch model), "pallas" =
+    # compiled Pallas TPU kernels, "pallas_interpret" = Pallas in interpret
+    # mode (CPU validation).  See repro.kernels.ops.KERNEL_TABLE and
+    # docs/KERNELS.md.
+    kernels: str = "xla"
+
     # -- misc ------------------------------------------------------------------
     mlp: str = "swiglu"         # "swiglu" | "gelu"
     norm_eps: float = 1e-6

@@ -12,6 +12,8 @@ from typing import Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from ..kernels import ops as kernel_ops
+
 Params = Dict[str, jnp.ndarray]
 f32 = jnp.float32
 
@@ -106,12 +108,19 @@ def attention_block(x: jnp.ndarray, p: Params, *, n_heads: int,
                     n_kv_heads: int, hd: int, positions: jnp.ndarray,
                     mask: Optional[jnp.ndarray], rope_theta: float,
                     kv_override: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
+                    kernel: str = "xla", causal: bool = True, window: int = 0,
                     ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Self- (or cross-) attention sublayer body (no residual / norm).
 
     Returns (out, k, v) so callers can stash K/V into a cache.
     ``kv_override`` supplies externally computed K/V (cross-attention or a
-    decode-time cache)."""
+    decode-time cache).
+
+    ``kernel`` selects the attention implementation (``repro.kernels.ops``):
+    the default ``"xla"`` applies the caller-built dense ``mask`` via the
+    jnp reference; any Pallas backend instead takes the *structural*
+    ``causal``/``window`` description (the flash kernel builds its masks
+    per tile — callers pass ``mask=None``)."""
     B, S, d = x.shape
     q = (x @ p["wq"]).reshape(B, S, n_heads, hd)
     if kv_override is None:
@@ -122,7 +131,11 @@ def attention_block(x: jnp.ndarray, p: Params, *, n_heads: int,
     else:
         k, v = kv_override
         q = apply_rope(q, positions, rope_theta)
-    out = gqa_attention(q, k, v, mask)
+    if kernel != "xla":
+        out = kernel_ops.attention(q, k, v, causal=causal, window=window,
+                                   backend=kernel)
+    else:
+        out = gqa_attention(q, k, v, mask)
     out = out.reshape(B, S, n_heads * hd) @ p["wo"]
     return out, k, v
 
@@ -293,11 +306,14 @@ def ssd_decode_step(state: jnp.ndarray, x: jnp.ndarray, dt: jnp.ndarray,
 def mamba2_block(x: jnp.ndarray, p: Params, *, n_heads: int, head_dim: int,
                  d_state: int, d_conv: int, chunk: int,
                  cache: Optional[Dict] = None, unroll: bool = False,
+                 kernel: str = "xla",
                  ) -> Tuple[jnp.ndarray, Optional[Dict]]:
     """Full Mamba2 mixer (in_proj -> conv -> SSD -> gated norm -> out_proj).
 
     x: (B,S,d).  With ``cache`` (dict with 'conv' (B,d_conv-1,d_xBC) and
     'state' (B,H,P,N)), runs in stateful decode mode (S may be 1).
+    ``kernel`` routes the chunked SSD scan through ``repro.kernels.ops``
+    (the S=1 recurrent step is jnp on every backend — see KERNEL_TABLE).
     """
     B, S, d = x.shape
     H, P, N = n_heads, head_dim, d_state
@@ -321,13 +337,19 @@ def mamba2_block(x: jnp.ndarray, p: Params, *, n_heads: int, head_dim: int,
     A = -jnp.exp(p["A_log"].astype(f32))                     # (H,)
 
     if cache is not None and S == 1:
-        y1, new_state = ssd_decode_step(cache["state"], xh[:, 0], dt[:, 0],
-                                        A, Bm[:, 0], Cm[:, 0])
+        y1, new_state = kernel_ops.ssd_step(cache["state"], xh[:, 0],
+                                            dt[:, 0], A, Bm[:, 0], Cm[:, 0],
+                                            backend=kernel)
         y = y1[:, None]
     else:
         init = cache["state"] if cache is not None else None
-        y, new_state = ssd_chunked(xh, dt.astype(xh.dtype), A, Bm, Cm, chunk,
-                                   init_state=init, unroll=unroll)
+        if kernel != "xla":
+            y, new_state = kernel_ops.ssd(xh, dt.astype(xh.dtype), A, Bm, Cm,
+                                          chunk=chunk, init_state=init,
+                                          backend=kernel)
+        else:
+            y, new_state = ssd_chunked(xh, dt.astype(xh.dtype), A, Bm, Cm,
+                                       chunk, init_state=init, unroll=unroll)
     y = y + xh * p["D"][None, None, :, None].astype(xh.dtype)
     y = y.reshape(B, S, di)
     # gated RMSNorm (mamba2 style): norm(y * silu(z))

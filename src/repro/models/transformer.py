@@ -26,6 +26,7 @@ from typing import Any, Dict, List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from ..kernels import ops as kernel_ops
 from .config import LayerGroup, ModelConfig
 from .layers import (attention_block, causal_window_mask, gqa_attention,
                      gelu_mlp, mamba2_block, moe_block, rms_norm, swiglu,
@@ -171,7 +172,8 @@ def _attn_group_fwd(cfg: ModelConfig, g: LayerGroup, gp: Params,
         a, k, v = attention_block(
             rms_norm(h, lp["ln1"], cfg.norm_eps), lp,
             n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads, hd=cfg.hd,
-            positions=positions, mask=mask, rope_theta=cfg.rope_theta)
+            positions=positions, mask=mask, rope_theta=cfg.rope_theta,
+            kernel=cfg.kernels, causal=True, window=g.window)
         h = h + a
         if g.cross_attn:
             xa, _, _ = attention_block(
@@ -180,7 +182,8 @@ def _attn_group_fwd(cfg: ModelConfig, g: LayerGroup, gp: Params,
                  "wo": lp["xwo"]},
                 n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads, hd=cfg.hd,
                 positions=positions, mask=None, rope_theta=cfg.rope_theta,
-                kv_override=_enc_kv(cfg, lp, enc_out))
+                kv_override=_enc_kv(cfg, lp, enc_out),
+                kernel=cfg.kernels, causal=False, window=0)
             h = h + xa
         f, a_loss = _ffn(cfg, g, lp, rms_norm(h, lp["ln2"], cfg.norm_eps))
         h = h + f
@@ -222,7 +225,7 @@ def _mamba_group_fwd(cfg: ModelConfig, gp: Params, x: jnp.ndarray,
             rms_norm(h, lp["ln"], cfg.norm_eps), lp,
             n_heads=cfg.n_ssm_heads, head_dim=cfg.ssm_head_dim,
             d_state=cfg.ssm_state, d_conv=cfg.ssm_conv, chunk=cfg.ssm_chunk,
-            cache=lc)
+            cache=lc, kernel=cfg.kernels)
         return h + y, (new_c if (collect_state or cache is not None) else None)
 
     if cfg.remat:
@@ -271,7 +274,8 @@ def _encode(cfg: ModelConfig, params: Params,
         a, _, _ = attention_block(
             rms_norm(hh, lp["ln1"], cfg.norm_eps), lp,
             n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads, hd=cfg.hd,
-            positions=pos, mask=None, rope_theta=cfg.rope_theta)
+            positions=pos, mask=None, rope_theta=cfg.rope_theta,
+            kernel=cfg.kernels, causal=False, window=0)
         hh = hh + a
         f, _ = _ffn(cfg, LayerGroup("attn", 1), lp,
                     rms_norm(hh, lp["ln2"], cfg.norm_eps))
@@ -429,9 +433,29 @@ def decode_step(cfg: ModelConfig, params: Params, cache: Dict[str, Any],
                 ) -> Tuple[jnp.ndarray, Dict[str, Any]]:
     """token: (B,1) int32; t: scalar int32 absolute position of this token.
     Returns (logits (B,1,V), updated cache)."""
-    h = params["embed"][token].astype(cfg.dtype()) * math.sqrt(cfg.d_model)
-    B = token.shape[0]
     positions = jnp.full((1, 1), t, jnp.int32)
+    return _decode_impl(cfg, params, cache, token, positions, t)
+
+
+def decode_step_ragged(cfg: ModelConfig, params: Params,
+                       cache: Dict[str, Any], token: jnp.ndarray,
+                       t: jnp.ndarray,
+                       ) -> Tuple[jnp.ndarray, Dict[str, Any]]:
+    """token: (B,1) int32; t: (B,) int32 — PER-ROW absolute positions.
+
+    The continuous-batching decode step: every batch row advances its own
+    sequence (per-row RoPE angle, per-row cache slot, per-row attention
+    mask / ``valid_len``), so in-flight requests at different depths share
+    one fused device step.  With a uniform ``t`` this computes exactly
+    :func:`decode_step`."""
+    positions = t[:, None].astype(jnp.int32)         # (B,1)
+    return _decode_impl(cfg, params, cache, token, positions, t)
+
+
+def _decode_impl(cfg: ModelConfig, params: Params, cache: Dict[str, Any],
+                 token: jnp.ndarray, positions: jnp.ndarray, t: jnp.ndarray,
+                 ) -> Tuple[jnp.ndarray, Dict[str, Any]]:
+    h = params["embed"][token].astype(cfg.dtype()) * math.sqrt(cfg.d_model)
     new_layers = []
     for g, gp, ce in zip(cfg.groups(), params["groups"], cache["layers"]):
         if g.kind == "mamba":
@@ -448,16 +472,28 @@ def decode_step(cfg: ModelConfig, params: Params, cache: Dict[str, Any],
 def _attn_group_decode(cfg: ModelConfig, g: LayerGroup, gp: Params,
                        ce: Dict[str, jnp.ndarray], x: jnp.ndarray,
                        positions: jnp.ndarray, t: jnp.ndarray):
+    """One-token attention-group step.  ``t`` is a scalar (uniform batch,
+    the classic ``decode_step``) or (B,) (ragged continuous-batching rows);
+    ``positions`` is the matching (1,1) / (B,1) RoPE position array."""
     W = ce["k"].shape[2]
-    slot = jnp.mod(t, W)
+    ragged = jnp.ndim(t) == 1
+    slot = jnp.mod(t, W)                    # () or (B,)
     slots = jnp.arange(W)
+    tb = t[:, None] if ragged else t        # (B,1) or scalar
     if g.window > 0:
         # absolute position stored in slot s: t - ((t - s) mod W)
-        k_pos = t - jnp.mod(t - slots, W)
+        k_pos = tb - jnp.mod(tb - slots, W)
     else:
-        k_pos = slots
-    valid = (k_pos >= 0) & (k_pos <= t)
-    mask = valid[None, None, None, None, :]          # (1,1,1,1,W)
+        k_pos = slots if not ragged else \
+            jnp.broadcast_to(slots, (t.shape[0], W))
+    valid = (k_pos >= 0) & (k_pos <= tb)    # (W,) or (B,W)
+    mask = valid[None, None, None, None, :] if not ragged \
+        else valid[:, None, None, None, :]  # (1,1,1,1,W) / (B,1,1,1,W)
+    # full-attention caches (W == max_len) hold slots [0, t] as a prefix, so
+    # decode routes to the flash-decoding kernel with valid_len = t+1;
+    # sliding-window rings are not a prefix layout and stay on the masked
+    # jnp reference (see docs/KERNELS.md)
+    use_dec_kernel = cfg.kernels != "xla" and g.window <= 0
 
     def body(carry, inp):
         h = carry
@@ -473,16 +509,32 @@ def _attn_group_decode(cfg: ModelConfig, g: LayerGroup, gp: Params,
         v1 = (hn @ lp["wv"]).reshape(B, 1, cfg.n_kv_heads, cfg.hd)
         q = apply_rope(q, positions, cfg.rope_theta)
         k1 = apply_rope(k1, positions, cfg.rope_theta)
-        nk = jax.lax.dynamic_update_slice_in_dim(
-            lc["k"], k1.astype(lc["k"].dtype), slot, axis=1)
-        nv = jax.lax.dynamic_update_slice_in_dim(
-            lc["v"], v1.astype(lc["v"].dtype), slot, axis=1)
-        a = gqa_attention(q, nk, nv, mask)
+        if ragged:
+            rows = jnp.arange(B)
+            nk = lc["k"].at[rows, slot].set(k1[:, 0].astype(lc["k"].dtype))
+            nv = lc["v"].at[rows, slot].set(v1[:, 0].astype(lc["v"].dtype))
+        else:
+            nk = jax.lax.dynamic_update_slice_in_dim(
+                lc["k"], k1.astype(lc["k"].dtype), slot, axis=1)
+            nv = jax.lax.dynamic_update_slice_in_dim(
+                lc["v"], v1.astype(lc["v"].dtype), slot, axis=1)
+        if use_dec_kernel:
+            vlen = jnp.broadcast_to(t + 1, (B,)).astype(jnp.int32)
+            a1 = kernel_ops.decode_attention(q[:, 0], nk, nv, vlen,
+                                             backend=cfg.kernels)
+            a = a1[:, None]
+        else:
+            a = gqa_attention(q, nk, nv, mask)
         h = h + a.reshape(B, 1, cfg.n_heads * cfg.hd) @ lp["wo"]
         if g.cross_attn:
             hx = rms_norm(h, lp["ln_x"], cfg.norm_eps)
             qx = (hx @ lp["xwq"]).reshape(B, 1, cfg.n_heads, cfg.hd)
-            ax = gqa_attention(qx, lc["xk"], lc["xv"], None)
+            if cfg.kernels != "xla":
+                ax = kernel_ops.attention(qx, lc["xk"], lc["xv"],
+                                          causal=False, window=0,
+                                          backend=cfg.kernels)
+            else:
+                ax = gqa_attention(qx, lc["xk"], lc["xv"], None)
             h = h + ax.reshape(B, 1, cfg.n_heads * cfg.hd) @ lp["xwo"]
         f, _ = _ffn(cfg, g, lp, rms_norm(h, lp["ln2"], cfg.norm_eps))
         h = h + f

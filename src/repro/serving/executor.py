@@ -12,16 +12,30 @@ same 0.1-10 s range (T3's SNE regime).
 from __future__ import annotations
 
 import time
+import zlib
 from dataclasses import dataclass, field, replace
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, Iterable, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from ..core.backends import pow2_bucket
 from ..core.types import FunctionSpec, Invocation
-from ..models import decode_step, init_cache, init_params, prefill
+from ..models import (decode_step, decode_step_ragged, init_cache,
+                      init_params, prefill)
 from ..models.config import ModelConfig
+
+
+def batch_seed(inv_ids: Iterable[int]) -> int:
+    """Deterministic, order-INDEPENDENT seed for a batched execution.
+
+    The member set alone determines the seed: coalescing order (which
+    depends on flush timing) must not change what the batch computes.
+    Seeding from ``invs[0].inv_id`` broke that — the same member set
+    flushed in a different gather order executed different work."""
+    data = b"".join(i.to_bytes(8, "little")
+                    for i in sorted(int(i) for i in inv_ids))
+    return zlib.crc32(data)
 
 
 @dataclass
@@ -222,4 +236,207 @@ class BatchingJaxExecutor:
         bucket = pow2_bucket(len(invs))
         inst = self.ensure_instance(fn_name, bucket)
         self.n_executions += 1
-        return inst.run(seed=invs[0].inv_id)
+        return inst.run(seed=batch_seed(inv.inv_id for inv in invs))
+
+
+@dataclass
+class _ContinuousState:
+    """Per-function continuous-serving state: resident weights + a slot slab.
+
+    The *slab* is one persistent KV/SSM cache allocated at the padded
+    capacity (``pow2_bucket(max_batch)`` sequences); every request owns one
+    slot for its lifetime.  ``tok``/``pos`` hold each slot's last sampled
+    token and absolute decode position.  Slots not marked active by the
+    batcher are never gathered, so stale contents are harmless."""
+
+    served: ServedModel
+    cap: int
+    params: Any = None
+    slab: Any = None
+    tok: Any = None                       # (cap, 1) int32
+    pos: Any = None                       # (cap,)  int32
+    join_fns: Dict[int, Callable] = field(default_factory=dict)
+    step_fns: Dict[int, Callable] = field(default_factory=dict)
+    setup_seconds: float = 0.0
+
+
+class ContinuousJaxExecutor:
+    """Step-granular data plane: real continuous batching over a slot slab.
+
+    The real twin of ``repro.core.backends.ContinuousBatcher``'s hooks:
+
+    * ``admit(fn, invs, slots)`` — ONE batched prefill of the joiners,
+      scattered into their cache slots (plus the first sampled token).
+    * ``step(fn, slots)`` — ONE fused ragged decode step for every active
+      slot (``repro.models.decode_step_ragged``: per-row positions, so
+      requests at different depths share the device step).
+    * ``gen_steps(fn)`` — decode steps a request owes after its prefill.
+
+    Batches are padded to power-of-two *buckets*; each bucket gets its own
+    jitted (join, step) executable pair, all compiled in ``calibrate`` so
+    the serving path never compiles.  Padding duplicates the first member's
+    slot: duplicate gather rows compute identical values, so the duplicate
+    scatter is deterministic.  Prompts are seeded from the order-independent
+    ``batch_seed`` of the joining member set.
+
+    Limitations: models with a modality frontend or an encoder stack
+    (``cfg.frontend`` / encdec) keep the windowed data plane — their
+    prefill needs per-request frontend frames, which the slot slab does not
+    carry yet (see docs/SERVING.md).
+    """
+
+    def __init__(self, served: Dict[str, ServedModel], max_batch: int = 8):
+        if max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        for name, sm in served.items():
+            if sm.cfg.frontend or sm.cfg.arch_type == "encdec":
+                raise NotImplementedError(
+                    f"continuous batching does not support frontend/encdec "
+                    f"models yet (function {name!r}, model {sm.cfg.name}); "
+                    f"use batching='windowed'")
+        self.served = served
+        self.max_batch = max_batch
+        self._state: Dict[str, _ContinuousState] = {}
+        # calibration medians per (fn_name, bucket): batched prefill
+        # seconds and per-decode-step seconds (roofline reporting)
+        self.bucket_admit_s: Dict[Tuple[str, int], float] = {}
+        self.bucket_step_s: Dict[Tuple[str, int], float] = {}
+        self.n_executions = 0           # real device dispatches (admit+step)
+
+    def buckets(self) -> List[int]:
+        out, b = [], 1
+        top = pow2_bucket(self.max_batch)
+        while b <= top:
+            out.append(b)
+            b *= 2
+        return out
+
+    def gen_steps(self, fn_name: str) -> int:
+        return self.served[fn_name].gen_len
+
+    def _ensure(self, fn_name: str) -> _ContinuousState:
+        st = self._state.get(fn_name)
+        if st is None:
+            st = self._setup(fn_name)
+            self._state[fn_name] = st
+        return st
+
+    def _setup(self, fn_name: str) -> _ContinuousState:
+        t0 = time.perf_counter()
+        sm = self.served[fn_name]
+        cfg = sm.cfg
+        cap = pow2_bucket(self.max_batch)
+        max_len = sm.prompt_len + sm.gen_len
+        st = _ContinuousState(served=sm, cap=cap)
+        st.params = jax.jit(lambda k: init_params(cfg, k))(
+            jax.random.PRNGKey(0))
+        st.slab = init_cache(cfg, cap, max_len)
+        st.tok = jnp.zeros((cap, 1), jnp.int32)
+        st.pos = jnp.zeros((cap,), jnp.int32)
+
+        def make_join(b: int) -> Callable:
+            def _join(params, slab, tok, pos, tokens, slot_ids):
+                cache = init_cache(cfg, b, max_len)
+                lg, c = prefill(cfg, params, tokens, cache)
+                first = jnp.argmax(lg, axis=-1).astype(jnp.int32)  # (b,1)
+                slab = jax.tree.map(
+                    lambda s, cn: s.at[:, slot_ids].set(cn.astype(s.dtype)),
+                    slab, c)
+                tok = tok.at[slot_ids].set(first)
+                pos = pos.at[slot_ids].set(
+                    jnp.full((b,), sm.prompt_len, jnp.int32))
+                return slab, tok, pos
+            return jax.jit(_join)
+
+        def make_step(b: int) -> Callable:
+            def _step(params, slab, tok, pos, slot_ids):
+                sub = jax.tree.map(lambda s: s[:, slot_ids], slab)
+                lg, c2 = decode_step_ragged(cfg, params, sub,
+                                            tok[slot_ids], pos[slot_ids])
+                ntok = jnp.argmax(lg, axis=-1).astype(jnp.int32)   # (b,1)
+                slab = jax.tree.map(
+                    lambda s, cn: s.at[:, slot_ids].set(cn.astype(s.dtype)),
+                    slab, c2)
+                tok = tok.at[slot_ids].set(ntok)
+                pos = pos.at[slot_ids].set(pos[slot_ids] + 1)
+                return slab, tok, pos
+            return jax.jit(_step)
+
+        # compile every bucket up front (the whole compile bill is setup,
+        # off the serving path — container build, in paper terms)
+        for b in self.buckets():
+            jf, sf = make_join(b), make_step(b)
+            toks = jnp.zeros((b, sm.prompt_len), jnp.int32)
+            ids = jnp.arange(b, dtype=jnp.int32)
+            slab, tok, pos = jf(st.params, st.slab, st.tok, st.pos, toks, ids)
+            slab, tok, pos = sf(st.params, slab, tok, pos, ids)
+            jax.block_until_ready(tok)
+            st.join_fns[b], st.step_fns[b] = jf, sf
+        st.setup_seconds = time.perf_counter() - t0
+        return st
+
+    def _pad_slots(self, slots: List[int]) -> Tuple[int, jnp.ndarray]:
+        """Pad the slot list to its bucket by repeating the first slot
+        (duplicate rows compute identical values — deterministic)."""
+        b = pow2_bucket(len(slots))
+        pad = b - len(slots)
+        return b, jnp.asarray(list(slots) + [slots[0]] * pad, jnp.int32)
+
+    def admit(self, fn_name: str, invs: List[Invocation],
+              slots: List[int]) -> float:
+        return self._admit_seeded(fn_name,
+                                  [inv.inv_id for inv in invs], slots)
+
+    def _admit_seeded(self, fn_name: str, ids: List[int],
+                      slots: List[int]) -> float:
+        st = self._ensure(fn_name)
+        sm = st.served
+        t0 = time.perf_counter()
+        b, slot_ids = self._pad_slots(slots)
+        key = jax.random.PRNGKey(batch_seed(ids))
+        toks = jax.random.randint(key, (len(slots), sm.prompt_len), 0,
+                                  sm.cfg.vocab_size)
+        if b > len(slots):
+            toks = jnp.concatenate(
+                [toks, jnp.broadcast_to(toks[:1],
+                                        (b - len(slots),) + toks.shape[1:])])
+        st.slab, st.tok, st.pos = st.join_fns[b](
+            st.params, st.slab, st.tok, st.pos, toks, slot_ids)
+        jax.block_until_ready(st.tok)
+        self.n_executions += 1
+        return time.perf_counter() - t0
+
+    def step(self, fn_name: str, slots: List[int]) -> float:
+        st = self._ensure(fn_name)
+        t0 = time.perf_counter()
+        b, slot_ids = self._pad_slots(slots)
+        st.slab, st.tok, st.pos = st.step_fns[b](
+            st.params, st.slab, st.tok, st.pos, slot_ids)
+        jax.block_until_ready(st.tok)
+        self.n_executions += 1
+        return time.perf_counter() - t0
+
+    def calibrate(self, mem_mb: float = 512.0,
+                  runs: int = 3) -> Dict[str, FunctionSpec]:
+        """Compile every bucket executable per function and measure each
+        bucket's batched prefill + per-step decode medians.  The returned
+        ``FunctionSpec`` carries the batch-1 full-request time (prefill +
+        ``gen_len`` steps) so scheduling stays comparable with the
+        windowed/per-invocation backends; per-bucket medians live in
+        ``bucket_admit_s`` / ``bucket_step_s``."""
+        specs = {}
+        for name in self.served:
+            st = self._ensure(name)
+            for b in self.buckets():
+                slots = list(range(b))
+                a = sorted(self._admit_seeded(name, slots, slots)
+                           for _ in range(runs))
+                s = sorted(self.step(name, slots) for _ in range(runs))
+                self.bucket_admit_s[(name, b)] = a[runs // 2]
+                self.bucket_step_s[(name, b)] = s[runs // 2]
+            exec_s = (self.bucket_admit_s[(name, 1)]
+                      + st.served.gen_len * self.bucket_step_s[(name, 1)])
+            specs[name] = FunctionSpec(name=name, exec_time=exec_s,
+                                       mem_mb=mem_mb,
+                                       setup_time=st.setup_seconds)
+        return specs

@@ -299,6 +299,10 @@ class ExperimentResult:
     # batched backends add n_batches / n_batched_invocations / n_batch_slots
     # / max_batch_occupancy (see docs/SERVING.md "Batched serving")
     backend_counters: Dict[str, int] = field(default_factory=dict)
+    # data-plane identity: {"kernels": xla|pallas|pallas_interpret,
+    # "batching": none|windowed|continuous} for jax/stub-batched backends,
+    # {} for modeled (see docs/KERNELS.md)
+    data_plane: Dict[str, str] = field(default_factory=dict)
     # chaos-run fields (empty/zero on fault-free runs): fired fault events
     # ({"kind", "t", ...} per occurrence), total retried invocations, and
     # the per-fault windowed recovery report ({"window_s", "tolerance",
@@ -320,6 +324,7 @@ class ExperimentResult:
         d["latency_percentiles"] = dict(self.latency_percentiles)
         d["queuing_percentiles"] = dict(self.queuing_percentiles)
         d["backend_counters"] = dict(self.backend_counters)
+        d["data_plane"] = dict(self.data_plane)
         d["fault_events"] = [dict(e) for e in self.fault_events]
         d["recovery"] = dict(self.recovery)
         d["scaling_events"] = [dict(e) for e in self.scaling_events]
@@ -395,6 +400,8 @@ def _build_result(exp: Experiment, spec: WorkloadSpec, sim: SimResult,
         wall_s=round(wall_s, 4),
         backend=exp.backend_name(),
         backend_counters=dict(sim.backend_counters),
+        data_plane=(dict(sim.backend.data_plane())
+                    if sim.backend is not None else {}),
         fault_events=fault_events,
         n_retries=n_retries,
         recovery=recovery,

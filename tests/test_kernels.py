@@ -28,6 +28,12 @@ FA_CASES = [
     (1, 256, 256, 8, 2, 64, True, 64),     # sliding window
     (1, 96, 96, 2, 2, 32, False, 0),       # ragged, bidirectional
     (2, 100, 228, 6, 3, 64, True, 100),    # ragged + window + GQA
+    # edge shapes (PR 9): decode-suffix q, window wider than the cache,
+    # single-token windowed decode, sequences smaller than one block
+    (2, 1, 128, 4, 2, 64, True, 0),        # Sq=1: flash as decode suffix
+    (1, 64, 64, 4, 2, 64, True, 128),      # window > Sk: full-causal limit
+    (2, 1, 96, 6, 3, 64, True, 32),        # Sq=1 + window + GQA + ragged Sk
+    (1, 17, 17, 2, 1, 32, True, 8),        # S < block, ragged + window
 ]
 
 
@@ -51,7 +57,26 @@ DEC_CASES = [
     (1, 1000, 4, 4, 128, 256),
     (3, 256, 4, 1, 32, 64),
     (2, 300, 6, 3, 64, 128),
+    # edge shapes (PR 9): cache smaller than one block, MHA limit
+    (2, 33, 4, 2, 64, 128),                # L < block_k, ragged
+    (1, 64, 1, 1, 32, 64),                 # single-head MHA
 ]
+
+
+@pytest.mark.parametrize("fill", ["one", "full"])
+def test_decode_attention_valid_len_extremes(fill):
+    """valid_len at both ends of the legal range: 1 (only the first cache
+    slot attends) and L (the whole cache attends)."""
+    B, L, Hq, Hkv, hd = 2, 128, 4, 2, 64
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, Hq, hd))
+    k = jax.random.normal(ks[1], (B, L, Hkv, hd))
+    v = jax.random.normal(ks[2], (B, L, Hkv, hd))
+    vlen = jnp.full((B,), 1 if fill == "one" else L, jnp.int32)
+    out = decode_attention(q, k, v, vlen, block_k=64, interpret=True)
+    ref = decode_attention_ref(q, k, v, vlen)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=3e-5, atol=3e-5)
 
 
 @pytest.mark.parametrize("case", DEC_CASES)
@@ -102,6 +127,26 @@ def test_ssd_scan_vs_oracles(case, dtype):
         np.testing.assert_allclose(np.asarray(y), np.asarray(ys),
                                    rtol=1e-4, atol=1e-4)
         np.testing.assert_allclose(np.asarray(st), np.asarray(ss),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_ssd_scan_init_state_parity():
+    """The kernel's seeded inter-chunk carry (decode-time prefill over an
+    existing cache) must match both oracles given the same init_state."""
+    B, S, H, P, N, chunk = 2, 128, 2, 32, 16, 64
+    ks = jax.random.split(KEY, 6)
+    x = jax.random.normal(ks[0], (B, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.5)
+    Bm = jax.random.normal(ks[3], (B, S, N))
+    Cm = jax.random.normal(ks[4], (B, S, N))
+    s0 = jax.random.normal(ks[5], (B, H, P, N))
+    y, st = ssd_scan(x, dt, A, Bm, Cm, chunk=chunk, init_state=s0,
+                     interpret=True)
+    yr, sr = ssd_scan_ref(x, dt, A, Bm, Cm, chunk, init_state=s0)
+    ys, ss = ssd_scan_sequential_ref(x, dt, A, Bm, Cm, init_state=s0)
+    for got, ref in ((y, yr), (y, ys), (st, sr), (st, ss)):
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
                                    rtol=1e-4, atol=1e-4)
 
 
