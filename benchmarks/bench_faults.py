@@ -5,17 +5,25 @@ Two tracked tiers, mirroring ``bench_sim_throughput``:
 * ``std`` — a chaos sweep on the 200-worker cluster (8 SGSs x 25): crash
   storms, sustained Poisson crash rates, and SGS fail-stop x scheduler
   stacks (archipelago / fifo / sparrow).  ``faults`` is a literal
-  ``run_sweep`` axis — each cell is one ``FaultPlan``.
+  ``run_sweep`` axis — each cell is one ``FaultPlan``.  The std tier also
+  carries the **time-to-recovery scoreboard** (archipelago / sparrow /
+  pull under IDENTICAL correlated + gray plans: rack_power, az_outage,
+  cascading_crash, slow_worker, flaky_network, memory_pressure → payload
+  ``"scoreboard"``: plan -> stack -> ttr_s) and a **hedged-retry
+  ablation** (``params["hedge_timeout"]`` on/off under slow_worker,
+  reporting ``n_hedges`` and ``tail_reduction_p99.9``).
 * ``xl`` — one 2,000-worker (80 SGSs x 25) cell under a composite plan
-  firing every built-in fault shape at staggered times (crash storm at
+  firing every original fault shape at staggered times (crash storm at
   T/4, SGS fail-stop at 2T/4, mass eviction at 3T/4, a control-plane
   stall between), reporting deadline-met and per-fault time-to-recovery.
 
 Reported per cell: deadline-met fraction, completion accounting
-(completed == arrivals — retries re-drive every lost execution), retry
-count, and the windowed recovery report (baseline deadline-met, worst
-post-fault window, time until back within tolerance — ``Metrics.window``
-zero-copy views; see docs/FAULTS.md "Recovery metrics").
+(completed == arrivals — retries re-drive every lost execution), the
+``Metrics.accounting()`` request ledger (lost == duplicates == 0 is a
+hard exit gate), retry count, and the windowed recovery report (baseline
+deadline-met, worst post-fault window, time until back within tolerance —
+``Metrics.window`` zero-copy views; see docs/FAULTS.md "Recovery
+metrics" and "Benchmarks & CI" for ttr_s semantics).
 
 Results go to ``BENCH_faults.json`` at the repo root (tracked); ``--smoke``
 runs trimmed std cells only and writes ``BENCH_faults.partial.json``
@@ -41,8 +49,10 @@ except ImportError:                                     # pragma: no cover
 
 from repro.core.autoscale import AutoscaleConfig, scaling_summary
 from repro.core.cluster import ClusterConfig
-from repro.core.fault import (FaultPlan, control_plane_delay, mass_eviction,
-                              sgs_failstop, worker_crash)
+from repro.core.fault import (FaultPlan, az_outage, cascading_crash,
+                              control_plane_delay, flaky_network,
+                              mass_eviction, memory_pressure, rack_power,
+                              sgs_failstop, slow_worker, worker_crash)
 from repro.sim.experiment import Experiment, run_sweep, simulate
 
 CLUSTERS = {
@@ -58,6 +68,15 @@ CLUSTERS = {
 XL_AUTOSCALE = AutoscaleConfig()
 
 STACKS = ["archipelago", "fifo", "sparrow"]
+
+# the recovery scoreboard compares the paper's stack against the two
+# decentralized baselines under IDENTICAL seeded plans (docs/FAULTS.md
+# "Recovery scoreboard")
+SCOREBOARD_STACKS = ["archipelago", "sparrow", "pull"]
+
+# straggler-mitigation knob for the hedged ablation: duplicate an
+# invocation once it runs 1.5x over its expected execution time
+HEDGE_TIMEOUT = 1.5
 
 
 def std_plans(duration: float) -> Dict[str, Optional[FaultPlan]]:
@@ -80,6 +99,48 @@ def std_plans(duration: float) -> Dict[str, Optional[FaultPlan]]:
     }
 
 
+def gray_plans(duration: float) -> Dict[str, FaultPlan]:
+    """The gray-failure scoreboard axis: topology-correlated crashes plus
+    degraded-mode (non-fail-stop) shapes, all seeded so every stack sees
+    the identical schedule (docs/FAULTS.md "Gray failures")."""
+    t1 = round(duration / 3.0, 3)
+    return {
+        # correlated: one rack (= one SGS pool, 25 workers) loses power
+        "rack_power": FaultPlan(
+            events=(rack_power(at=t1),), seed=0, name="rack_power"),
+        # correlated: a whole availability zone (racks_per_az racks) goes
+        "az_outage": FaultPlan(
+            events=(az_outage(at=t1),), seed=0, name="az_outage"),
+        # correlated: seeded branching-process crash cascade
+        "cascading_crash": FaultPlan(
+            events=(cascading_crash(at=t1, p=0.6, k0=2),), seed=0,
+            name="cascading_crash"),
+        # degraded: stragglers — 8 workers run 16x slow (not fail-stop)
+        "slow_worker": FaultPlan(
+            events=(slow_worker(at=t1, k=8, factor=16.0),), seed=0,
+            name="slow_worker"),
+        # degraded: seeded jitter on the LBS<->SGS control-plane clocks
+        "flaky_network": FaultPlan(
+            events=(flaky_network(rate=2.0, jitter=0.02, start=1.0,
+                                  end=duration),), seed=0,
+            name="flaky_network"),
+        # degraded: pool memory shrinks 60% for 2 s -> real eviction storm
+        "memory_pressure": FaultPlan(
+            events=(memory_pressure(at=t1, frac=0.6, duration=2.0),),
+            seed=0, name="memory_pressure"),
+    }
+
+
+def _ttr(recovery: Dict) -> Optional[float]:
+    """Scoreboard time-to-recovery for one run: the worst per-fault
+    recovery time; 0.0 when no fault dipped past tolerance; None when any
+    fault never recovered within the horizon."""
+    if recovery.get("n_unrecovered"):
+        return None
+    m = recovery.get("max_recovery_s")
+    return 0.0 if m is None else m
+
+
 def xl_plan(duration: float) -> FaultPlan:
     """Every built-in fault shape, staggered so each recovery window is
     attributable to one fault."""
@@ -95,7 +156,8 @@ def xl_plan(duration: float) -> FaultPlan:
 def _cell_row(name: str, tier: str, stack: str, plan_label: str,
               rd: Dict, wall_s: float) -> Dict:
     """Compact tracked row: accounting + recovery, not the full result."""
-    return {
+    acct = rd.get("accounting", {})
+    row = {
         "tier": tier,
         "stack": stack,
         "plan": plan_label,
@@ -108,6 +170,125 @@ def _cell_row(name: str, tier: str, stack: str, plan_label: str,
         "fault_events": rd["fault_events"],
         "recovery": rd["recovery"],
     }
+    if acct:
+        row["accounting"] = acct
+        row["accounting_ok"] = (acct["lost"] == 0
+                                and acct["duplicate_completions"] == 0)
+    return row
+
+
+def _result_rd(r: Dict) -> Dict:
+    """The compact per-cell view `_cell_row` consumes, from a result dict."""
+    return {"n_requests_total": r["n_requests_total"],
+            "n_completed_total": r["n_completed"],
+            "deadline_met_frac": r["deadline_met_frac"],
+            "n_retries": r["n_retries"],
+            "fault_events": r["fault_events"],
+            "recovery": r["recovery"],
+            "accounting": r.get("accounting", {})}
+
+
+def run_scoreboard(duration: float, scale: float, workers: int
+                   ) -> Dict[str, Dict]:
+    """The time-to-recovery scoreboard: every SCOREBOARD stack under the
+    identical seeded gray plans (correlated + degraded shapes).  The drain
+    is long enough for 16x-slowed stragglers to finish, so zero-lost
+    accounting is a hard expectation, not an aspiration."""
+    plans = gray_plans(duration)
+    base = Experiment(workload_factory="paper_workload_1",
+                      workload_kwargs=dict(duration=duration, scale=scale),
+                      cluster=ClusterConfig(**CLUSTERS["std"]),
+                      drain=40.0, seed=0)
+    t0 = time.perf_counter()
+    sweep = run_sweep(base, {"stack": SCOREBOARD_STACKS,
+                             "faults": list(plans.values())},
+                      workers=workers)
+    wall = time.perf_counter() - t0
+    labels = list(plans)
+    rows: Dict[str, Dict] = {}
+    per_cell = wall / max(1, len(sweep))
+    for row in sweep:
+        stack = row["cell"]["stack"]
+        label = labels[list(plans.values()).index(row["cell"]["faults"])]
+        r = row["result"]
+        name = f"score_{stack}_{label}"
+        cell = _cell_row(name, "std", stack, label, _result_rd(r), per_cell)
+        cell["ttr_s"] = _ttr(r["recovery"])
+        cell["p99"] = r["latency_percentiles"]["p99"]
+        rows[name] = cell
+        print(f"{name}: ttr={cell['ttr_s']} met={cell['deadline_met_frac']} "
+              f"retries={cell['n_retries']} acct_ok={cell['accounting_ok']}",
+              flush=True)
+    return rows
+
+
+def run_hedge_ablation(duration: float, scale: float) -> Dict[str, Dict]:
+    """Hedged-retry on/off under the slow_worker plan (archipelago only:
+    the hedge lives in the SGS).  The tail above the workload's own heavy
+    band is where stragglers land, so the headline comparison is p99.9/max,
+    with p99 reported alongside."""
+    plan = gray_plans(duration)["slow_worker"]
+    rows: Dict[str, Dict] = {}
+    for label, params in (("off", {}),
+                          ("on", {"hedge_timeout": HEDGE_TIMEOUT})):
+        exp = Experiment(stack="archipelago",
+                         workload_factory="paper_workload_1",
+                         workload_kwargs=dict(duration=duration,
+                                              scale=scale),
+                         cluster=ClusterConfig(**CLUSTERS["std"]),
+                         drain=40.0, seed=0, faults=plan, params=params)
+        t0 = time.perf_counter()
+        res = simulate(exp)
+        wall = time.perf_counter() - t0
+        name = f"hedge_{label}_slow_worker"
+        cell = _cell_row(name, "std", "archipelago", "slow_worker",
+                         _result_rd(res.to_dict()), wall)
+        cell["hedge_timeout"] = params.get("hedge_timeout")
+        cell["n_hedges"] = res.n_hedges
+        cell["p99"] = res.latency_percentiles["p99"]
+        cell["p99.9"] = res.latency_percentiles["p99.9"]
+        rows[name] = cell
+        print(f"{name}: p99={cell['p99']} p99.9={cell['p99.9']} "
+              f"hedges={cell['n_hedges']} acct_ok={cell['accounting_ok']}",
+              flush=True)
+    off = rows["hedge_off_slow_worker"]
+    on = rows["hedge_on_slow_worker"]
+    if on["p99.9"] is not None and off["p99.9"] is not None:
+        on["tail_reduction_p99.9"] = round(off["p99.9"] - on["p99.9"], 6)
+    return rows
+
+
+def run_gray_smoke(duration: float, scale: float) -> Dict[str, Dict]:
+    """CI gray cells under the *stub* backend (the real-execution code
+    path, scripted times): one correlated-fault cell and one
+    slow_worker+hedging cell, both gated on the accounting invariant."""
+    cells = (
+        ("smoke_stub_rack_power",
+         dict(faults=gray_plans(duration)["rack_power"])),
+        ("smoke_stub_slow_worker_hedged",
+         dict(faults=gray_plans(duration)["slow_worker"],
+              params={"hedge_timeout": HEDGE_TIMEOUT})),
+    )
+    rows: Dict[str, Dict] = {}
+    for name, kw in cells:
+        exp = Experiment(stack="archipelago", backend="stub",
+                         workload_factory="paper_workload_1",
+                         workload_kwargs=dict(duration=duration,
+                                              scale=scale),
+                         cluster=ClusterConfig(**CLUSTERS["std"]),
+                         drain=40.0, seed=0, **kw)
+        t0 = time.perf_counter()
+        res = simulate(exp)
+        wall = time.perf_counter() - t0
+        cell = _cell_row(name, "std", "archipelago",
+                         kw["faults"].name, _result_rd(res.to_dict()), wall)
+        cell["backend"] = "stub"
+        cell["n_hedges"] = res.n_hedges
+        rows[name] = cell
+        print(f"{name}: met={cell['deadline_met_frac']} "
+              f"retries={cell['n_retries']} hedges={cell['n_hedges']} "
+              f"acct_ok={cell['accounting_ok']}", flush=True)
+    return rows
 
 
 def run_std(duration: float, scale: float, workers: int) -> Dict[str, Dict]:
@@ -131,12 +312,7 @@ def run_std(duration: float, scale: float, workers: int) -> Dict[str, Dict]:
         r = row["result"]
         # full-trace accounting: every arrival must complete (the window
         # metrics in `recovery` are where the dip shows up)
-        rd = {"n_requests_total": r["n_requests_total"],
-              "n_completed_total": r["n_completed"],
-              "deadline_met_frac": r["deadline_met_frac"],
-              "n_retries": r["n_retries"],
-              "fault_events": r["fault_events"],
-              "recovery": r["recovery"]}
+        rd = _result_rd(r)
         name = f"std_{stack}_{label}"
         rows[name] = _cell_row(name, "std", stack, label, rd, per_cell)
         print(f"{name}: met={rd['deadline_met_frac']} "
@@ -158,12 +334,7 @@ def run_xl(duration: float, scale: float) -> Dict[str, Dict]:
     t0 = time.perf_counter()
     res = simulate(exp)
     wall = time.perf_counter() - t0
-    rd = {"n_requests_total": res.n_requests_total,
-          "n_completed_total": res.n_completed,
-          "deadline_met_frac": res.deadline_met_frac,
-          "n_retries": res.n_retries,
-          "fault_events": res.fault_events,
-          "recovery": res.recovery}
+    rd = _result_rd(res.to_dict())
     name = "xl_composite_chaos"
     row = _cell_row(name, "xl", "archipelago", plan.name, rd, wall)
     row["autoscale"] = XL_AUTOSCALE.to_dict()
@@ -206,22 +377,36 @@ def main() -> None:
         if args.smoke:
             runs.update(run_std(duration=6.0, scale=0.25,
                                 workers=args.workers))
+            runs.update(run_scoreboard(duration=6.0, scale=0.25,
+                                       workers=args.workers))
+            runs.update(run_gray_smoke(duration=6.0, scale=0.25))
         else:
             runs.update(run_std(duration=20.0, scale=1.0,
                                 workers=args.workers))
+            runs.update(run_scoreboard(duration=20.0, scale=1.0,
+                                       workers=args.workers))
+            runs.update(run_hedge_ablation(duration=20.0, scale=1.0))
     if "xl" in tiers:
         if args.smoke:
             runs.update(run_xl(duration=4.0, scale=2.0))
         else:
             runs.update(run_xl(duration=40.0, scale=10.0))
 
+    # compact per-stack time-to-recovery scoreboard: plan -> stack -> TTR
+    # (identical seeded plans per stack; see docs/FAULTS.md)
+    scoreboard: Dict[str, Dict[str, Optional[float]]] = {}
+    for r in runs.values():
+        if "ttr_s" in r:
+            scoreboard.setdefault(r["plan"], {})[r["stack"]] = r["ttr_s"]
+
     payload = {
-        "schema": 1,
+        "schema": 2,
         "bench": "faults",
         "smoke": bool(args.smoke),
         "tiers": tiers,
         "clusters": {t: CLUSTERS[t] for t in tiers},
         "python": sys.version.split()[0],
+        "scoreboard": scoreboard,
         "runs": runs,
     }
     with open(out_path, "w") as f:
@@ -229,11 +414,19 @@ def main() -> None:
         f.write("\n")
     print(f"wrote {out_path}")
 
-    # hard accounting gate: chaos must never lose a request
+    # hard accounting gates: chaos must never lose a request, and the
+    # invariant completed + lost + pending == arrivals must hold with
+    # lost == 0 and no duplicate completions in every cell that carries
+    # full accounting
     lost = {n: r for n, r in runs.items() if not r["all_completed"]}
     if lost:
         print(f"ACCOUNTING FAILURE: incomplete requests in {sorted(lost)}",
               file=sys.stderr)
+        sys.exit(1)
+    bad = {n: r["accounting"] for n, r in runs.items()
+           if "accounting_ok" in r and not r["accounting_ok"]}
+    if bad:
+        print(f"ACCOUNTING INVARIANT FAILURE: {bad}", file=sys.stderr)
         sys.exit(1)
 
 

@@ -287,11 +287,15 @@ class BatchCoalescer:
         # generation per function: a window-flush event is stale if an
         # early (size-triggered) flush already took its batch
         self._gen: Dict[str, int] = {}
+        # dead-member tombstones (core.fault worker crash): inv_ids dropped
+        # while still in their setup-delay deferral; consumed by _enroll
+        self._dropped: set = set()
         # occupancy counters (surfaced through backend.counters())
         self.n_batches = 0
         self.n_batched_invocations = 0
         self.n_batch_slots = 0          # sum of padded bucket sizes
         self.max_occupancy = 0
+        self.n_dropped = 0
 
     def submit(self, inv: Invocation, done: DoneFn, delay: float = 0.0
                ) -> None:
@@ -300,7 +304,37 @@ class BatchCoalescer:
         else:
             self._enroll(inv, done)
 
+    def drop(self, inv_ids: List[int]) -> None:
+        """Purge dead members (their worker crashed) from the data plane.
+
+        Members still waiting in a window are removed before the flush, so
+        the batch that eventually runs contains only live invocations; a
+        window whose members ALL died flushes empty and is a no-op.  Members
+        whose setup delay has not elapsed are tombstoned and skipped at
+        enrollment.  Members already executing in a flushed batch cannot be
+        recalled — their completions fire and the scheduler's inflight guard
+        discards them (exactly-once accounting lives scheduler-side).
+        """
+        ids = set(inv_ids)
+        if not ids:
+            return
+        for fn, q in self._pending.items():
+            if any(inv.inv_id in ids for inv, _ in q):
+                kept = [(inv, d) for inv, d in q if inv.inv_id not in ids]
+                self.n_dropped += len(q) - len(kept)
+                ids -= {inv.inv_id for inv, _ in q}
+                self._pending[fn] = kept
+        # not pending: either in setup deferral (tombstone) or already
+        # flushed/complete (the stale tombstone is consumed by the inflight
+        # guard's silence — it never enrolls again, so it leaks at most one
+        # int per crash, bounded by inflight size)
+        self._dropped |= ids
+
     def _enroll(self, inv: Invocation, done: DoneFn) -> None:
+        if inv.inv_id in self._dropped:
+            self._dropped.discard(inv.inv_id)
+            self.n_dropped += 1
+            return
         q = self._pending.setdefault(inv.fn.name, [])
         q.append((inv, done))
         if len(q) >= self.max_batch:
@@ -336,7 +370,8 @@ class BatchCoalescer:
         return {"n_batches": self.n_batches,
                 "n_batched_invocations": self.n_batched_invocations,
                 "n_batch_slots": self.n_batch_slots,
-                "max_batch_occupancy": self.max_occupancy}
+                "max_batch_occupancy": self.max_occupancy,
+                "n_dropped_invocations": self.n_dropped}
 
 
 class ContinuousBatcher:
@@ -376,7 +411,8 @@ class ContinuousBatcher:
                  admit: Callable[[str, List[Invocation], List[int]], float],
                  step: Callable[[str, List[int]], float],
                  steps_for: Callable[[str], int],
-                 max_batch: int = 8):
+                 max_batch: int = 8,
+                 release: Optional[Callable[[str, List[int]], None]] = None):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
         self.env = env
@@ -384,18 +420,26 @@ class ContinuousBatcher:
         self.step = step
         self.steps_for = steps_for
         self.max_batch = max_batch
+        # optional slot-release hook: called with the cache slots of dropped
+        # members so the real executor can scrub its slab (serving.executor
+        # ContinuousJaxExecutor.release_slots)
+        self.release = release
         self._cq = CompletionQueue(env)
         self._pending: Dict[str, List[Tuple[Invocation, DoneFn]]] = {}
         # slot -> [inv, done, steps_left, join_time]
         self._active: Dict[str, Dict[int, list]] = {}
         self._free: Dict[str, List[int]] = {}       # min-heap of free slots
         self._running: Dict[str, bool] = {}
+        # dead-member tombstones (core.fault worker crash): inv_ids dropped
+        # while still in their setup-delay deferral; consumed by _enroll
+        self._dropped: set = set()
         # occupancy counters (surfaced through backend.counters())
         self.n_prefill_batches = 0
         self.n_joins = 0
         self.n_ticks = 0
         self.n_step_slots = 0           # sum of active sizes over all ticks
         self.max_occupancy = 0
+        self.n_dropped = 0
 
     def submit(self, inv: Invocation, done: DoneFn, delay: float = 0.0
                ) -> None:
@@ -404,7 +448,48 @@ class ContinuousBatcher:
         else:
             self._enroll(inv, done)
 
+    def drop(self, inv_ids: List[int]) -> None:
+        """Purge dead members (their worker crashed) from the data plane.
+
+        Pending joiners are removed before their admitting prefill; active
+        residents leave the running batch at the next step boundary — their
+        slot is freed immediately (and scrubbed via the ``release`` hook),
+        so the tick that follows steps only live members and new joiners are
+        admitted into the vacated slots.  Members in their setup deferral
+        are tombstoned and skipped at enrollment.  Counters stay coherent:
+        a dropped resident was already counted as a join, never as a
+        completion, and subsequent ticks no longer count its slot.
+        """
+        ids = set(inv_ids)
+        if not ids:
+            return
+        for fn, q in self._pending.items():
+            if any(inv.inv_id in ids for inv, _ in q):
+                kept = [(inv, d) for inv, d in q if inv.inv_id not in ids]
+                self.n_dropped += len(q) - len(kept)
+                ids -= {inv.inv_id for inv, _ in q}
+                self._pending[fn] = kept
+        for fn, active in self._active.items():
+            hit = sorted(s for s, e in active.items() if e[0].inv_id in ids)
+            if not hit:
+                continue
+            free = self._free[fn]
+            for s in hit:
+                entry = active.pop(s)
+                ids.discard(entry[0].inv_id)
+                heapq.heappush(free, s)
+            self.n_dropped += len(hit)
+            if self.release is not None:
+                self.release(fn, hit)
+        # remainder: in setup deferral (tombstone; consumed by _enroll) or
+        # already completed (stale id, at most one int leaked per crash)
+        self._dropped |= ids
+
     def _enroll(self, inv: Invocation, done: DoneFn) -> None:
+        if inv.inv_id in self._dropped:
+            self._dropped.discard(inv.inv_id)
+            self.n_dropped += 1
+            return
         fn = inv.fn.name
         self._pending.setdefault(fn, []).append((inv, done))
         if not self._running.get(fn, False):
@@ -465,7 +550,8 @@ class ContinuousBatcher:
                 "n_joins": self.n_joins,
                 "n_decode_ticks": self.n_ticks,
                 "n_step_slots": self.n_step_slots,
-                "max_batch_occupancy": self.max_occupancy}
+                "max_batch_occupancy": self.max_occupancy,
+                "n_dropped_invocations": self.n_dropped}
 
 
 def pow2_bucket(k: int) -> int:
@@ -664,6 +750,14 @@ class StubBatchedBackend(StubBackend):
         self.submit = self._coalescer.submit
         self._batcher = None
 
+    def drop_invocations(self, inv_ids: List[int]) -> None:
+        """Dead-member release (core.fault worker crash): purge the crashed
+        worker's in-flight members from whichever data plane is bound."""
+        if self._batcher is not None:
+            self._batcher.drop(inv_ids)
+        elif self._coalescer is not None:
+            self._coalescer.drop(inv_ids)
+
     def counters(self) -> Dict[str, int]:
         c = dict(super().counters())
         if self._coalescer is not None:
@@ -809,9 +903,10 @@ class BatchedJaxBackend(JaxBackend):
         self.env = env
         if self.batching == "continuous":
             ex = self.executor
-            self._batcher = ContinuousBatcher(env, ex.admit, ex.step,
-                                              ex.gen_steps,
-                                              max_batch=self.max_batch)
+            self._batcher = ContinuousBatcher(
+                env, ex.admit, ex.step, ex.gen_steps,
+                max_batch=self.max_batch,
+                release=getattr(ex, "release_slots", None))
             self.submit = self._batcher.submit
             self._coalescer = None
             return
@@ -820,6 +915,16 @@ class BatchedJaxBackend(JaxBackend):
                                          max_batch=self.max_batch)
         self.submit = self._coalescer.submit
         self._batcher = None
+
+    def drop_invocations(self, inv_ids: List[int]) -> None:
+        """Dead-member release (core.fault worker crash): purge the crashed
+        worker's in-flight members from whichever data plane is bound.  For
+        the continuous plane the freed cache slots are scrubbed in the
+        executor's slot slab via ``release_slots``."""
+        if self._batcher is not None:
+            self._batcher.drop(inv_ids)
+        elif self._coalescer is not None:
+            self._coalescer.drop(inv_ids)
 
     def counters(self) -> Dict[str, int]:
         c = dict(super().counters())

@@ -14,7 +14,7 @@ from collections import deque
 from typing import Callable, Deque, Dict, List, Optional, Tuple
 
 from .sandbox import Worker
-from .sgs import Env
+from .sgs import Env, _slowed_done
 from .types import (DagSpec, ExecuteFn, Invocation, Request, Sandbox,
                     SandboxState, SubmitFn)
 
@@ -41,6 +41,10 @@ class CentralizedFIFO:
         # never fires stale state mutations (core.fault.fail_worker)
         self._inflight: Dict[int, Dict[int, Invocation]] = {}
         self._dead_workers: set = set()
+        # gray-failure state (core.fault): per-worker slow-down multipliers
+        # + the batching data plane's dead-member release hook
+        self._slow: Dict[int, float] = {}
+        self.backend_drop: Optional[Callable[[List[int]], None]] = None
         self.n_cold_starts = 0
         self.n_warm_hits = 0
         self.queuing_delays: List[float] = []
@@ -109,15 +113,20 @@ class CentralizedFIFO:
         if inflight is None:
             inflight = self._inflight[w.worker_id] = {}
         inflight[inv.inv_id] = inv
+        slow = self._slow
+        m = slow.get(w.worker_id) if slow else None
         if self.backend_submit is not None:
             # async seam: dispatch returns immediately; the backend fires
             # the completion callback (possibly after batching)
             def done(exec_s: float, inv=inv, w=w, sbx=sbx) -> None:
                 self._complete(inv, w, sbx)
-            self.backend_submit(inv, done, setup)
+            self.backend_submit(inv, done if m is None
+                                else _slowed_done(self.env, done, m), setup)
             return
         exec_s = inv.fn.exec_time if self.execute is None \
             else self.execute(inv)
+        if m is not None:
+            exec_s *= m
         self.env.call_after(setup + exec_s, self._complete, inv, w, sbx)
 
     def _make_room(self, w: Worker, mem_mb: float, now: float) -> None:
@@ -191,6 +200,8 @@ class SparrowScheduler:
         # fault tolerance: see CentralizedFIFO (same registration shape)
         self._inflight: Dict[int, Dict[int, Invocation]] = {}
         self._dead_workers: set = set()
+        self._slow: Dict[int, float] = {}
+        self.backend_drop: Optional[Callable[[List[int]], None]] = None
         self.n_cold_starts = 0
         self.n_warm_hits = 0
         self.queuing_delays: List[float] = []
@@ -243,13 +254,19 @@ class SparrowScheduler:
             if inflight is None:
                 inflight = self._inflight[w.worker_id] = {}
             inflight[inv.inv_id] = inv
+            slow = self._slow
+            m = slow.get(w.worker_id) if slow else None
             if self.backend_submit is not None:
                 def done(exec_s: float, inv=inv, w=w, sbx=sbx) -> None:
                     self._complete(inv, w, sbx)
-                self.backend_submit(inv, done, setup)
+                self.backend_submit(inv, done if m is None
+                                    else _slowed_done(self.env, done, m),
+                                    setup)
                 continue
             exec_s = inv.fn.exec_time if self.execute is None \
                 else self.execute(inv)
+            if m is not None:
+                exec_s *= m
             self.env.call_after(setup + exec_s, self._complete, inv, w, sbx)
 
     def _complete(self, inv: Invocation, w: Worker, sbx: Sandbox) -> None:

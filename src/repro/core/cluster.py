@@ -20,6 +20,43 @@ class ClusterConfig:
     cores_per_worker: int = 20
     # paper machines have 256GB (§7.1); a quarter reserved as proactive pool
     pool_mem_mb: float = 65536.0
+    # Placement topology: one rack per SGS pool (§4.1), racks grouped into
+    # availability zones.  Worker ids are globally consistent
+    # (``wid = sid * workers_per_sgs + j``), so rack/AZ membership is pure
+    # arithmetic on the id — the same topology holds for the flat baseline
+    # pools, which share the id scheme.
+    racks_per_az: int = 4
+
+    @property
+    def n_workers(self) -> int:
+        return self.n_sgs * self.workers_per_sgs
+
+    @property
+    def n_racks(self) -> int:
+        return self.n_sgs
+
+    @property
+    def n_azs(self) -> int:
+        per = max(1, self.racks_per_az)
+        return (self.n_sgs + per - 1) // per
+
+    def rack_of(self, worker_id: int) -> int:
+        """Rack (== SGS pool id) that hosts ``worker_id``."""
+        return worker_id // self.workers_per_sgs
+
+    def az_of(self, worker_id: int) -> int:
+        """Availability zone that hosts ``worker_id``."""
+        return self.rack_of(worker_id) // max(1, self.racks_per_az)
+
+    def rack_workers(self, rack: int) -> range:
+        """Worker ids placed in ``rack``."""
+        return range(rack * self.workers_per_sgs,
+                     (rack + 1) * self.workers_per_sgs)
+
+    def az_racks(self, az: int) -> range:
+        """Rack ids grouped into availability zone ``az``."""
+        per = max(1, self.racks_per_az)
+        return range(az * per, min((az + 1) * per, self.n_sgs))
 
 
 def build_sgs_pool(env: Env, cc: ClusterConfig,

@@ -140,13 +140,21 @@ def _fail_worker_sgs(sgs: SemiGlobalScheduler, worker_id: int) -> int:
     # re-driven from the queue
     now = sgs.env.now()
     n_retry = 0
+    dropped: List[int] = []
     for inv in list(sgs._inflight.get(worker_id, {}).values()):
+        dropped.append(inv.inv_id)
         retry = Invocation(request=inv.request, fn=inv.fn, ready_time=now)
         k0, k1, k2 = retry.priority_key()
         heapq.heappush(sgs._queue, (k0, k1, k2, retry))
         n_retry += 1
     sgs._dead_workers.add(worker_id)
     sgs._inflight.pop(worker_id, None)
+    sgs._slow.pop(worker_id, None)
+    # a batching data plane may still hold the dead members in a pending
+    # window or an active decode slot: release them before the retries land
+    drop = getattr(sgs, "backend_drop", None)
+    if drop is not None and dropped:
+        drop(dropped)
     sgs._dispatch()
     return n_retry
 
@@ -161,7 +169,9 @@ def _fail_worker_flat(sched: Any, worker_id: int) -> int:
     sched._dead_workers.add(worker_id)
     now = sched.env.now()
     retries: List[Invocation] = []
+    dropped: List[int] = []
     for inv in list(sched._inflight.pop(worker_id, {}).values()):
+        dropped.append(inv.inv_id)
         retries.append(Invocation(request=inv.request, fn=inv.fn,
                                   ready_time=now))
     wq = getattr(sched, "_wqueues", None)
@@ -169,6 +179,12 @@ def _fail_worker_flat(sched: Any, worker_id: int) -> int:
         for inv in wq.pop(worker_id, ()):
             retries.append(Invocation(request=inv.request, fn=inv.fn,
                                       ready_time=now))
+    slow = getattr(sched, "_slow", None)
+    if slow is not None:
+        slow.pop(worker_id, None)
+    drop = getattr(sched, "backend_drop", None)
+    if drop is not None and dropped:
+        drop(dropped)
     place = getattr(sched, "_place", None)
     if place is not None:
         for retry in retries:
@@ -218,6 +234,15 @@ def fail_sgs(lbs: LoadBalancer, sgs_id: int, store: StateStore, env: Any,
     # here via _successor and pop from this same dict).
     replacement._inflight = victim._inflight
     replacement._dead_workers = victim._dead_workers
+    # Degraded-mode state rides the pool, not the scheduler process: slow
+    # workers stay slow across failover, the data-plane drop hook and the
+    # hedging config carry over (shared rng: the hedge stream continues).
+    replacement._slow = victim._slow
+    replacement.backend_drop = victim.backend_drop
+    replacement._hedge_timeout = victim._hedge_timeout
+    replacement._hedge_jitter = victim._hedge_jitter
+    replacement._hedge_rng = victim._hedge_rng
+    replacement.n_hedges = victim.n_hedges
     # Metric streams continue across the failover (same id, same pool).
     replacement.queuing_delays = victim.queuing_delays
     replacement.queuing_delay_times = victim.queuing_delay_times
@@ -239,6 +264,36 @@ def fail_sgs(lbs: LoadBalancer, sgs_id: int, store: StateStore, env: Any,
     lbs.replace_sgs(replacement)
     replacement._dispatch()
     return replacement, n_retry
+
+
+def evacuate_sgs(lbs: LoadBalancer, sgs_id: int) -> int:
+    """Re-home a worker-less SGS's load onto a surviving peer.
+
+    A rack-power / AZ-outage event can take an SGS's *entire* pool down; a
+    scheduler with zero workers would hold its queue (and everything the
+    LBS keeps routing to it) forever.  Model the LBS health-check re-route
+    with the same mechanism §6.1 failover uses: move the queued
+    invocations to the survivor and leave a ``_successor`` pointer so
+    in-flight submissions and completions forward there.  The survivor is
+    the peer with the most free cores (ties: lowest id) — deterministic,
+    so seeded plans replay exactly.  Returns the number of re-homed
+    queued invocations; no-op unless the pool is actually empty."""
+    victim = lbs.sgss.get(sgs_id)
+    if victim is None or victim._successor is not None or victim.workers:
+        return 0
+    survivors = [s for sid, s in sorted(lbs.sgss.items())
+                 if sid != sgs_id and s.workers and s._successor is None]
+    if not survivors:
+        return 0
+    succ = max(survivors, key=lambda s: s._free_cores)
+    n_moved = 0
+    for item in victim._queue:
+        heapq.heappush(succ._queue, item)
+        n_moved += 1
+    victim._queue = []
+    victim._successor = succ
+    succ._dispatch()
+    return n_moved
 
 
 # ---------------------------------------------------------------------------
@@ -367,6 +422,111 @@ def control_plane_delay(at: Optional[float] = None,
                       end=end,
                       kwargs=_freeze_kwargs(
                           {"stall": stall, "target": target}))
+
+
+# -- correlated / gray-failure event constructors ----------------------------
+
+
+def rack_power(at: float, rack: Optional[int] = None,
+               spare_racks: int = 1) -> FaultEvent:
+    """Power loss for one rack (== one SGS worker pool, §4.1): every
+    worker in it fail-stops at once.  ``rack=None`` picks a live rack with
+    the plan's seeded RNG; at least ``spare_racks`` other live racks are
+    always kept.  On archipelago the orphaned SGS is evacuated onto a
+    surviving peer (:func:`evacuate_sgs`)."""
+    return FaultEvent("rack_power", at=at,
+                      kwargs=_freeze_kwargs(
+                          {"rack": rack, "spare_racks": spare_racks}))
+
+
+def az_outage(at: float, az: Optional[int] = None,
+              spare_azs: int = 1) -> FaultEvent:
+    """Availability-zone outage: every rack in the zone loses power
+    simultaneously (``ClusterConfig.racks_per_az`` racks per AZ).
+    ``az=None`` picks a live zone with the plan's seeded RNG; at least
+    ``spare_azs`` other live zones always survive."""
+    return FaultEvent("az_outage", at=at,
+                      kwargs=_freeze_kwargs(
+                          {"az": az, "spare_azs": spare_azs}))
+
+
+def cascading_crash(at: Optional[float] = None,
+                    rate: Optional[float] = None, p: float = 0.5,
+                    k0: int = 1, max_kills: Optional[int] = None,
+                    start: float = 0.0, end: Optional[float] = None,
+                    sgs: Optional[int] = None,
+                    spare: int = 1) -> FaultEvent:
+    """Correlated cascade: ``k0`` seed crashes, each of which propagates
+    another crash with probability ``p`` (a seeded branching process — the
+    retry/overload storm one failure puts on its neighbours).  ``p`` is
+    part of the frozen event, so identical plans replay identical
+    cascades.  Bounded by ``max_kills`` and the ``spare``-per-pool floor."""
+    if (at is None) == (rate is None):
+        raise ValueError("cascading_crash needs exactly one of at= / rate=")
+    if not 0.0 <= float(p) <= 1.0:
+        raise ValueError(f"cascading_crash propagation p={p} must be in "
+                         f"[0, 1]")
+    return FaultEvent("cascading_crash", at=at, rate=rate, start=start,
+                      end=end,
+                      kwargs=_freeze_kwargs(
+                          {"p": p, "k0": k0, "max_kills": max_kills,
+                           "sgs": sgs, "spare": spare}))
+
+
+def slow_worker(k: int = 1, factor: float = 4.0, at: Optional[float] = None,
+                rate: Optional[float] = None, start: float = 0.0,
+                end: Optional[float] = None,
+                duration: Optional[float] = None,
+                sgs: Optional[int] = None) -> FaultEvent:
+    """Gray failure: ``k`` seeded workers keep accepting work but execute
+    it ``factor``× slower (thermal throttling, a noisy neighbour, a dying
+    disk).  Nothing is killed and no detector fires — mitigation is the
+    hedged-retry layer, not failover.  ``duration=None`` degrades for the
+    rest of the run."""
+    if (at is None) == (rate is None):
+        raise ValueError("slow_worker needs exactly one of at= / rate=")
+    if float(factor) <= 0.0:
+        raise ValueError(f"slow_worker factor={factor} must be > 0")
+    return FaultEvent("slow_worker", at=at, rate=rate, start=start, end=end,
+                      kwargs=_freeze_kwargs(
+                          {"k": k, "factor": factor, "duration": duration,
+                           "sgs": sgs}))
+
+
+def flaky_network(at: Optional[float] = None, rate: Optional[float] = None,
+                  jitter: float = 0.02, target: str = "both",
+                  start: float = 0.0, end: Optional[float] = None
+                  ) -> FaultEvent:
+    """Gray failure: seeded jitter on the LBS↔SGS control-plane service
+    clocks — each occurrence stalls every targeted decision server for an
+    independent uniform draw in ``[0, jitter)`` seconds (packet loss /
+    retransmit storms, not a clean partition).  Pair with ``rate=`` for a
+    sustained flaky link."""
+    if (at is None) == (rate is None):
+        raise ValueError("flaky_network needs exactly one of at= / rate=")
+    if float(jitter) <= 0.0:
+        raise ValueError(f"flaky_network jitter={jitter} must be > 0")
+    return FaultEvent("flaky_network", at=at, rate=rate, start=start,
+                      end=end,
+                      kwargs=_freeze_kwargs(
+                          {"jitter": jitter, "target": target}))
+
+
+def memory_pressure(at: float, frac: float = 0.5, duration: float = 1.0,
+                    sgs: Optional[int] = None) -> FaultEvent:
+    """Gray failure: the proactive pool temporarily loses ``frac`` of its
+    memory on every targeted worker (co-located batch job, page-cache
+    bloat).  Resident sandboxes over the shrunk budget are evicted
+    (oldest-first, never BUSY) — a real eviction storm, since demand
+    targets survive and proactive allocation immediately rebuilds the
+    pool.  Capacity restores after ``duration`` seconds."""
+    if not 0.0 < float(frac) <= 1.0:
+        raise ValueError(f"memory_pressure frac={frac} must be in (0, 1]")
+    if float(duration) <= 0.0:
+        raise ValueError(f"memory_pressure duration={duration} must be > 0")
+    return FaultEvent("memory_pressure", at=at,
+                      kwargs=_freeze_kwargs(
+                          {"frac": frac, "duration": duration, "sgs": sgs}))
 
 
 # -- fault registry (mirrors stacks/backends) --------------------------------
@@ -552,15 +712,9 @@ def _mass_eviction(ctx: FaultContext, frac: float = 1.0,
     ctx.record("mass_eviction", frac=frac, n_evicted=n_evicted)
 
 
-@register_fault("control_plane_delay")
-def _control_plane_delay(ctx: FaultContext, stall: float = 0.05,
-                         target: str = "both", **_: Any) -> None:
-    # Modeled by advancing the M/D/1 decision-service clocks' busy_until:
-    # decisions arriving behind the spike queue exactly as they would
-    # behind a blocked single-threaded decision loop.  Data plane untouched.
-    now = ctx.env.now()
-    stack = ctx.stack
-    n_clocks = 0
+def _collect_clocks(stack: Any, target: str) -> List[Any]:
+    """The M/D/1 decision-service clocks a control-plane fault targets:
+    LBS replica clocks and/or the per-SGS (or flat single) clocks."""
     clocks: List[Any] = []
     if target in ("lbs", "both"):
         clocks.extend(getattr(stack, "_lb_clocks", ()) or ())
@@ -571,11 +725,201 @@ def _control_plane_delay(ctx: FaultContext, stall: float = 0.05,
         c = getattr(stack, "_clock", None)     # flat stacks: one clock
         if c is not None:
             clocks.append(c)
-    for c in clocks:
+    return clocks
+
+
+@register_fault("control_plane_delay")
+def _control_plane_delay(ctx: FaultContext, stall: float = 0.05,
+                         target: str = "both", **_: Any) -> None:
+    # Modeled by advancing the M/D/1 decision-service clocks' busy_until:
+    # decisions arriving behind the spike queue exactly as they would
+    # behind a blocked single-threaded decision loop.  Data plane untouched.
+    now = ctx.env.now()
+    n_clocks = 0
+    for c in _collect_clocks(ctx.stack, target):
         c.busy_until = max(c.busy_until, now) + stall
         n_clocks += 1
     ctx.record("control_plane_delay", stall=stall, target=target,
                n_clocks=n_clocks)
+
+
+# -- correlated fault handlers (worker → rack → AZ topology) -----------------
+
+
+def _topology(ctx: FaultContext) -> Any:
+    """The cluster's placement topology.  Rack/AZ membership is arithmetic
+    on globally consistent worker ids, so one ``ClusterConfig`` describes
+    archipelago pools and the flat baseline pools alike."""
+    from .cluster import ClusterConfig
+    exp = getattr(ctx.stack, "exp", None)
+    cc = getattr(exp, "cluster", None) if exp is not None else None
+    return cc if cc is not None else ClusterConfig()
+
+
+def _live_racks(scheds: List[Any], cc: Any) -> Dict[int, List[Tuple[Any, int]]]:
+    """rack id → [(owning scheduler, worker_id)] over the live cluster."""
+    live: Dict[int, List[Tuple[Any, int]]] = {}
+    for s in scheds:
+        for w in s.workers:
+            live.setdefault(cc.rack_of(w.worker_id), []).append(
+                (s, w.worker_id))
+    return live
+
+
+def _kill_rack(ctx: FaultContext, rack: int,
+               members: List[Tuple[Any, int]]) -> int:
+    """Fail-stop every worker in ``rack``; on archipelago the rack IS an
+    SGS pool, so the orphaned scheduler is evacuated onto a survivor."""
+    n_retry = 0
+    for s, wid in sorted(members, key=lambda m: m[1]):
+        n_retry += fail_worker(s, wid)
+    lbs = getattr(ctx.stack, "lbs", None)
+    if lbs is not None:
+        n_retry += evacuate_sgs(lbs, rack)
+    return n_retry
+
+
+@register_fault("rack_power")
+def _rack_power(ctx: FaultContext, rack: Optional[int] = None,
+                spare_racks: int = 1, **_: Any) -> None:
+    cc = _topology(ctx)
+    live = _live_racks(ctx.schedulers(), cc)
+    keep = max(0, int(spare_racks))
+    if len(live) <= keep or (rack is not None and rack not in live):
+        ctx.record("rack_power", rack=rack, skipped=True)
+        return
+    if rack is None:
+        racks = sorted(live)
+        rack = racks[ctx.rng.randrange(len(racks))]
+    n_killed = len(live[rack])
+    n_retry = _kill_rack(ctx, rack, live[rack])
+    ctx.injector.n_retries += n_retry
+    ctx.record("rack_power", rack=rack, n_killed=n_killed, n_retry=n_retry)
+
+
+@register_fault("az_outage")
+def _az_outage(ctx: FaultContext, az: Optional[int] = None,
+               spare_azs: int = 1, **_: Any) -> None:
+    cc = _topology(ctx)
+    live = _live_racks(ctx.schedulers(), cc)
+    per = max(1, cc.racks_per_az)
+    zones: Dict[int, List[int]] = {}
+    for r in sorted(live):
+        zones.setdefault(r // per, []).append(r)
+    keep = max(0, int(spare_azs))
+    if len(zones) <= keep or (az is not None and az not in zones):
+        ctx.record("az_outage", az=az, skipped=True)
+        return
+    if az is None:
+        ids = sorted(zones)
+        az = ids[ctx.rng.randrange(len(ids))]
+    racks = zones[az]
+    n_killed = sum(len(live[r]) for r in racks)
+    n_retry = 0
+    for r in racks:
+        n_retry += _kill_rack(ctx, r, live[r])
+    ctx.injector.n_retries += n_retry
+    ctx.record("az_outage", az=az, racks=racks, n_killed=n_killed,
+               n_retry=n_retry)
+
+
+@register_fault("cascading_crash")
+def _cascading_crash(ctx: FaultContext, p: float = 0.5, k0: int = 1,
+                     max_kills: Optional[int] = None,
+                     sgs: Optional[int] = None, spare: int = 1,
+                     **_: Any) -> None:
+    scheds = ctx.schedulers(sgs)
+    keep = max(1, int(spare))   # same floor as worker_crash: pools survive
+    limit = (int(max_kills) if max_kills is not None
+             else sum(len(s.workers) for s in scheds))
+    p = float(p)
+    killed: List[int] = []
+    n_retry = 0
+    pending = int(k0)
+    while pending > 0 and len(killed) < limit:
+        eligible = [(s, w) for s in scheds if len(s.workers) > keep
+                    for w in s.workers]
+        if not eligible:
+            break
+        s, w = eligible[ctx.rng.randrange(len(eligible))]
+        n_retry += fail_worker(s, w.worker_id)
+        killed.append(w.worker_id)
+        pending -= 1
+        if ctx.rng.random() < p:    # the failure propagates
+            pending += 1
+    ctx.injector.n_retries += n_retry
+    ctx.record("cascading_crash", p=p, killed=killed, n_retry=n_retry)
+
+
+# -- degraded-mode (gray failure) handlers -----------------------------------
+
+
+def _restore_speed(sched: Any, worker_id: int, factor: float) -> None:
+    if sched._slow.get(worker_id) == factor:
+        del sched._slow[worker_id]
+
+
+@register_fault("slow_worker")
+def _slow_worker(ctx: FaultContext, k: int = 1, factor: float = 4.0,
+                 duration: Optional[float] = None,
+                 sgs: Optional[int] = None, **_: Any) -> None:
+    factor = float(factor)
+    slowed: List[int] = []
+    eligible = [(s, w.worker_id) for s in ctx.schedulers(sgs)
+                if getattr(s, "_slow", None) is not None
+                for w in s.workers if w.worker_id not in s._slow]
+    for _i in range(int(k)):
+        if not eligible:
+            break
+        s, wid = eligible.pop(ctx.rng.randrange(len(eligible)))
+        s._slow[wid] = factor
+        slowed.append(wid)
+        if duration is not None:
+            ctx.env.call_after(float(duration), _restore_speed, s, wid,
+                               factor)
+    ctx.record("slow_worker", factor=factor, slowed=slowed)
+
+
+@register_fault("flaky_network")
+def _flaky_network(ctx: FaultContext, jitter: float = 0.02,
+                   target: str = "both", **_: Any) -> None:
+    # Same seam as control_plane_delay, but each clock draws its own
+    # seeded stall in [0, jitter) — jitter, not a synchronized pause.
+    now = ctx.env.now()
+    jitter = float(jitter)
+    n_clocks = 0
+    total = 0.0
+    for c in _collect_clocks(ctx.stack, target):
+        stall = ctx.rng.random() * jitter
+        c.busy_until = max(c.busy_until, now) + stall
+        n_clocks += 1
+        total += stall
+    ctx.record("flaky_network", jitter=jitter, n_clocks=n_clocks,
+               total_stall=round(total, 6))
+
+
+def _restore_pool_mem(w: Any, cut: float) -> None:
+    w.pool_mem_mb += cut
+
+
+@register_fault("memory_pressure")
+def _memory_pressure(ctx: FaultContext, frac: float = 0.5,
+                     duration: float = 1.0, sgs: Optional[int] = None,
+                     **_: Any) -> None:
+    frac = float(frac)
+    n_workers = 0
+    n_evicted = 0
+    for sched in ctx.schedulers(sgs):
+        for w in sched.workers:
+            cut = w.pool_mem_mb * frac
+            if cut <= 0.0:
+                continue
+            w.pool_mem_mb -= cut
+            n_evicted += w.shed_to_capacity()
+            n_workers += 1
+            ctx.env.call_after(float(duration), _restore_pool_mem, w, cut)
+    ctx.record("memory_pressure", frac=frac, duration=duration,
+               n_workers=n_workers, n_evicted=n_evicted)
 
 
 # ---------------------------------------------------------------------------
@@ -631,4 +975,12 @@ def recovery_summary(metrics: Any, injector: FaultInjector, horizon: float,
         if r is not None:
             entry.update(r)
         events.append(entry)
-    return {"window_s": window, "tolerance": tolerance, "events": events}
+    # roll-up for the bench scoreboards: worst time-to-recovery across the
+    # plan's fired faults, and how many measurable dips never recovered
+    recovered = [e["recovery_s"] for e in events
+                 if e.get("recovery_s") is not None]
+    n_unrecovered = sum(1 for e in events
+                        if "recovery_s" in e and e["recovery_s"] is None)
+    return {"window_s": window, "tolerance": tolerance,
+            "max_recovery_s": max(recovered) if recovered else None,
+            "n_unrecovered": n_unrecovered, "events": events}

@@ -188,6 +188,25 @@ class Worker:
     def free_pool_mem(self) -> float:
         return self.pool_mem_mb - self._used_pool_mem
 
+    def shed_to_capacity(self) -> int:
+        """Evict resident non-BUSY sandboxes (creation order — oldest
+        first) until used pool memory fits ``pool_mem_mb`` again.  The
+        eviction path for a ``memory_pressure`` gray failure after the
+        fault handler shrinks ``pool_mem_mb``: BUSY sandboxes are never
+        touched, so a worker can stay over budget until executions finish.
+        Returns the number of evicted sandboxes."""
+        n = 0
+        if self._used_pool_mem <= self.pool_mem_mb:
+            return n
+        for s in self.sandboxes:        # fresh list: safe to remove during
+            if self._used_pool_mem <= self.pool_mem_mb:
+                break
+            if s.state is _BUSY:
+                continue
+            self.remove_sandbox(s)
+            n += 1
+        return n
+
     @property
     def free_cores(self) -> int:
         return self.cores - self.busy_cores

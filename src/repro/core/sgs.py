@@ -65,6 +65,21 @@ _BUSY_ST = SandboxState.BUSY
 _WARM_ST = SandboxState.WARM
 
 
+def _slowed_done(env: Env, done: Callable[[float], None],
+                 factor: float) -> Callable[[float], None]:
+    """Degraded-worker wrapper for the async backend seam: the data plane
+    computes the batch's completion instant normally, then the slow
+    worker's copy surfaces ``(factor - 1) × exec_s`` later — the batch
+    itself (and every healthy member) is unaffected."""
+    def slowed(exec_s: float) -> None:
+        extra = (factor - 1.0) * exec_s
+        if extra > 0.0:
+            env.call_after(extra, done, exec_s)
+        else:
+            done(exec_s)
+    return slowed
+
+
 class SemiGlobalScheduler:
     def __init__(self, sgs_id: int, workers: List[Worker], env: Env,
                  config: Optional[SGSConfig] = None,
@@ -119,6 +134,17 @@ class SemiGlobalScheduler:
         self._free_cores = sum(w.cores - w.busy_cores for w in workers)
         # per-dag cached [_FnIndex, ...] for the piggyback sandbox count
         self._dag_fis: Dict[str, List[object]] = {}
+        # gray-failure state (core.fault): per-worker execution-time
+        # multipliers (slow_worker), the batching data plane's dead-member
+        # release hook, and the hedged-retry config (threaded from validated
+        # Experiment.params by ArchipelagoStack.build).  All default off —
+        # the zero-fault hot path only pays an ``if {}:`` / ``is None`` test.
+        self._slow: Dict[int, float] = {}
+        self.backend_drop: Optional[Callable[[List[int]], None]] = None
+        self._hedge_timeout: Optional[float] = None
+        self._hedge_jitter: float = 0.0
+        self._hedge_rng = None
+        self.n_hedges = 0
 
         # metrics
         self.n_cold_starts = 0
@@ -420,19 +446,41 @@ class SemiGlobalScheduler:
         if inflight is None:
             inflight = self._inflight[w.worker_id] = {}
         inflight[inv.inv_id] = inv
+        slow = self._slow
+        m = slow.get(w.worker_id) if slow else None
         if self.backend_submit is not None:
             # asynchronous seam: hand the invocation to the data plane and
             # keep scheduling — the backend (possibly batching it with other
             # in-flight invocations) fires `done` at the completion instant
-            self.backend_submit(inv, self._make_done(inv, w, sbx), setup)
+            done = self._make_done(inv, w, sbx)
+            if m is not None:
+                done = _slowed_done(self.env, done, m)
+            self.backend_submit(inv, done, setup)
         elif self.execute is not None:
             # legacy synchronous hook: runs the execution call inside the
             # dispatch path and blocks on it (kept for direct constructions)
-            runtime = setup + self.execute(inv)
-            self.env.call_after(runtime, self._complete, inv, w, sbx)
+            exec_s = self.execute(inv)
+            if m is not None:
+                exec_s *= m
+            self.env.call_after(setup + exec_s, self._complete, inv, w, sbx)
         else:
-            self.env.call_after(setup + inv.fn.exec_time,
+            exec_s = inv.fn.exec_time
+            if m is not None:
+                exec_s *= m
+            self.env.call_after(setup + exec_s,
                                 self._complete, inv, w, sbx)
+        ht = self._hedge_timeout
+        if ht is not None:
+            # per-invocation dispatch timeout: the hedge deadline scales
+            # with the invocation's expected execution time (a straggler is
+            # "ht× slower than expected"), plus seeded jitter so a stalled
+            # batch doesn't hedge in lockstep
+            t = ht * inv.fn.exec_time
+            rng = self._hedge_rng
+            if rng is not None and self._hedge_jitter > 0.0:
+                t *= 1.0 + self._hedge_jitter * rng.random()
+            self.env.call_after(setup + t, self._hedge_check, w.worker_id,
+                                inv.inv_id, inv)
         return True
 
     def _make_done(self, inv: Invocation, w: Worker, sbx: Sandbox
@@ -442,6 +490,38 @@ class SemiGlobalScheduler:
         def done(exec_s: float) -> None:
             self._complete(inv, w, sbx)
         return done
+
+    def _hedge_check(self, worker_id: int, inv_id: int,
+                     inv: Invocation) -> None:
+        """Straggler mitigation: if the dispatched copy has not completed
+        by its hedge deadline, enqueue a speculative duplicate (a fresh
+        ``Invocation``, so it dispatches like any retry — possibly onto a
+        healthy worker).  Whichever copy completes first wins; the loser's
+        completion is dropped by the inflight-generation guard and the
+        ``fns_done`` duplicate guard in ``_complete``, so a request is
+        never double-counted.  A duplicate that still straggles re-hedges
+        after its own timeout."""
+        succ = self._successor
+        if succ is not None:        # failed over: the replacement judges it
+            succ._hedge_check(worker_id, inv_id, inv)
+            return
+        inflight = self._inflight.get(worker_id)
+        if inflight is None or inv_id not in inflight:
+            return          # completed in time (or the worker died and the
+                            # crash path already queued a retry)
+        req = inv.request
+        done = req.fns_done
+        if done is None:
+            return          # request finished through another invocation
+        if done is not _SINGLE_FN and inv.fn.name in done:
+            return          # an earlier hedge already won this function
+        self.n_hedges += 1
+        retry = Invocation(request=req, fn=inv.fn,
+                           ready_time=self.env.now())
+        k0, k1, k2 = retry.priority_key()
+        _heappush(self._queue, (k0, k1, k2, retry))
+        if self._free_cores > 0:
+            self._dispatch()
 
     def _complete(self, inv: Invocation, w: Worker, sbx: Sandbox) -> None:
         succ = self._successor
@@ -502,6 +582,13 @@ class SemiGlobalScheduler:
         if done is _SINGLE_FN:
             finished = True
         else:
+            if inv.fn.name in done:
+                # hedged duplicate of an already-counted completion: the
+                # winner made the DAG progress and released the children —
+                # this copy only returns its core/sandbox (done above)
+                if self._queue and self._free_cores > 0:
+                    self._dispatch()
+                return
             done.add(inv.fn.name)
             finished = len(done) == dag._n_fns
         if finished:

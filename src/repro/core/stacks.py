@@ -23,6 +23,7 @@ registered purely through this module as the extensibility proof.
 from __future__ import annotations
 
 import itertools
+import random
 from dataclasses import dataclass
 from typing import (TYPE_CHECKING, Callable, Dict, List, Optional, Protocol,
                     Type)
@@ -267,9 +268,18 @@ class ArchipelagoStack:
     ``Experiment.autoscale`` set it is only the *initial* pool size —
     default ``min_replicas`` — and the LBS replica autoscaler grows/shrinks
     the pool from observed decision-clock utilization, ``core.autoscale``).
+
+    Straggler mitigation (docs/FAULTS.md "Hedged retries"):
+    ``hedge_timeout`` — per-invocation dispatch timeout as a multiple of
+    the invocation's expected ``exec_time`` (None/0 = off, the default); a
+    dispatched copy that has not completed by ``setup + hedge_timeout ×
+    exec_time`` gets a speculative duplicate enqueued, first completion
+    wins.  ``hedge_jitter`` — seeded uniform fraction (default 0.25) the
+    timeout is stretched by, so co-batched stragglers do not hedge in
+    lockstep.
     """
 
-    PARAMS = frozenset({"n_lbs"})
+    PARAMS = frozenset({"n_lbs", "hedge_timeout", "hedge_jitter"})
 
     lbs: Optional[LoadBalancer] = None
     scheduler: object = None
@@ -283,6 +293,24 @@ class ArchipelagoStack:
         self.lbs = build_cluster(env, exp.cluster, exp.sgs, exp.lbs,
                                  execute=backend.execute,
                                  backend_submit=backend.submit)
+        # batching data planes expose a dead-member release hook: a worker
+        # crash mid-batch must free the victims' pending/slot state
+        drop = getattr(backend, "drop_invocations", None)
+        # hedged-retry knobs (validated Experiment.params; zero-fault runs
+        # leave them unset, so the SGS hot path stays decision-identical)
+        hedge = exp.params.get("hedge_timeout")
+        hedge = float(hedge) if hedge else None
+        if hedge is not None and hedge <= 0.0:
+            hedge = None
+        jitter = float(exp.params.get("hedge_jitter", 0.25))
+        if drop is not None or hedge is not None:
+            for sid, s in self.lbs.sgss.items():
+                s.backend_drop = drop
+                if hedge is not None:
+                    s._hedge_timeout = hedge
+                    s._hedge_jitter = jitter
+                    # seeded per-SGS stream, independent of the workload rng
+                    s._hedge_rng = random.Random((exp.seed << 20) ^ sid)
         auto = getattr(exp, "autoscale", None)
         if auto is not None:
             n_lb = int(exp.params.get("n_lbs", auto.min_replicas))
@@ -357,7 +385,8 @@ class ArchipelagoStack:
     def counters(self) -> Dict[str, int]:
         sgss = self.lbs.sgss.values()
         return {"cold_starts": sum(s.n_cold_starts for s in sgss),
-                "warm_hits": sum(s.n_warm_hits for s in sgss)}
+                "warm_hits": sum(s.n_warm_hits for s in sgss),
+                "hedges": sum(s.n_hedges for s in sgss)}
 
 
 class FlatWorkerStack:
@@ -386,6 +415,10 @@ class FlatWorkerStack:
         elif backend.execute is not None:
             # pre-seam custom backends that were built without bind()
             self.scheduler.execute = backend.execute
+        drop = getattr(backend, "drop_invocations", None)
+        if drop is not None and hasattr(self.scheduler, "backend_drop"):
+            # batched data plane: release dead members on worker crash
+            self.scheduler.backend_drop = drop
         self._clock = _ServiceClock()
         if type(self).submit is FlatWorkerStack.submit:
             # hot path: same closure-over-locals trick as ArchipelagoStack,

@@ -416,6 +416,22 @@ class ContinuousJaxExecutor:
         self.n_executions += 1
         return time.perf_counter() - t0
 
+    def release_slots(self, fn_name: str, slots: List[int]) -> None:
+        """Scrub the token/position rows of vacated cache slots.
+
+        Called by the batcher when residents are dropped mid-flight (their
+        worker crashed, core.fault): freed slots are never gathered again
+        until re-admission overwrites them, so this is slab hygiene rather
+        than correctness — it keeps dead requests' sampled tokens out of the
+        state a debugger (or a later assertion) would inspect.  Cheap: two
+        scatter updates, no cache-slab traffic."""
+        st = self._state.get(fn_name)
+        if st is None or not slots:
+            return
+        slot_ids = jnp.asarray(sorted(slots), jnp.int32)
+        st.tok = st.tok.at[slot_ids].set(0)
+        st.pos = st.pos.at[slot_ids].set(0)
+
     def calibrate(self, mem_mb: float = 512.0,
                   runs: int = 3) -> Dict[str, FunctionSpec]:
         """Compile every bucket executable per function and measure each

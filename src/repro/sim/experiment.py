@@ -311,6 +311,14 @@ class ExperimentResult:
     fault_events: List[Dict[str, Any]] = field(default_factory=list)
     n_retries: int = 0
     recovery: Dict[str, Any] = field(default_factory=dict)
+    # whole-run request accounting (Metrics.accounting): {"arrivals",
+    # "completed", "unique_completed", "pending", "lost",
+    # "duplicate_completions"} — the fault-tolerance invariant is
+    # lost == 0 and duplicate_completions == 0 (docs/FAULTS.md)
+    accounting: Dict[str, int] = field(default_factory=dict)
+    # hedged-retry dispatches the SGSs issued (params["hedge_timeout"],
+    # docs/FAULTS.md "Straggler mitigation"); 0 when hedging is off
+    n_hedges: int = 0
     # typed control-plane scaling decisions in time order (LBS replica pool
     # + per-DAG SGS set; ``core.autoscale.ScalingEvent.to_dict`` shape:
     # {"t", "component", "action", "n_before", "n_after", "metric",
@@ -327,6 +335,7 @@ class ExperimentResult:
         d["data_plane"] = dict(self.data_plane)
         d["fault_events"] = [dict(e) for e in self.fault_events]
         d["recovery"] = dict(self.recovery)
+        d["accounting"] = dict(self.accounting)
         d["scaling_events"] = [dict(e) for e in self.scaling_events]
         d["per_class"] = {k: v.to_dict()
                           for k, v in sorted(self.per_class.items())}
@@ -353,8 +362,8 @@ class ExperimentResult:
 
 def _build_result(exp: Experiment, spec: WorkloadSpec, sim: SimResult,
                   warm_hits: int, wall_s: float,
-                  scaling_events: Optional[List[Dict[str, Any]]] = None
-                  ) -> ExperimentResult:
+                  scaling_events: Optional[List[Dict[str, Any]]] = None,
+                  n_hedges: int = 0) -> ExperimentResult:
     # one code path for both metrics modes: flat (column) metrics serve
     # ``latencies``/``n_requests``/``by_class`` as vectorized views, the
     # legacy object mode scans its request list exactly as before
@@ -405,6 +414,8 @@ def _build_result(exp: Experiment, spec: WorkloadSpec, sim: SimResult,
         fault_events=fault_events,
         n_retries=n_retries,
         recovery=recovery,
+        accounting=sim.metrics.accounting(),
+        n_hedges=n_hedges,
         scaling_events=list(scaling_events or []),
         sim=sim)
 
@@ -501,10 +512,12 @@ def simulate(exp: Experiment, *,
         if not multiprocessing.current_process().daemon:
             return simulate_sharded(exp)
     exp_spec, sim, stack, wall = _run_experiment(exp, hooks, timed_calls)
-    warm_hits = stack.counters().get("warm_hits", 0)
+    counters = stack.counters()
+    warm_hits = counters.get("warm_hits", 0)
     sev = getattr(stack, "scaling_events", None)
     scaling = sev() if callable(sev) else []
-    return _build_result(exp, exp_spec, sim, warm_hits, wall, scaling)
+    return _build_result(exp, exp_spec, sim, warm_hits, wall, scaling,
+                         n_hedges=counters.get("hedges", 0))
 
 
 def _run_experiment(exp: Experiment,

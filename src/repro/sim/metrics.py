@@ -547,6 +547,40 @@ class Metrics:
         n_inv = sum(len(r.dag.functions) for r in done)
         return n_cold / max(1, n_inv)
 
+    def accounting(self) -> Dict[str, int]:
+        """Full-run request accounting for the fault-tolerance invariant
+        ``completed + lost + pending == arrivals`` (docs/FAULTS.md).
+
+        Always describes the WHOLE attached trace, ignoring any
+        ``after_warmup``/``window``/class restriction — loss is a global
+        property of a run, not of a view.  ``lost`` counts arrivals that
+        neither completed nor remain in flight (a scheduler leak: a fault
+        path dropped a request without retrying it); ``duplicate_completions``
+        counts completion records beyond the first per request (a
+        suppression bug: hedged retries or stale batch completions recorded
+        twice).  A fault-tolerant run has both at zero — under any fault
+        plan, since every in-flight request is retried and the drain phase
+        runs the queues dry.  Object mode cannot distinguish lost from
+        in-flight (incomplete requests are simply incomplete objects), so
+        it reports them all as ``pending``.
+        """
+        c = self._cols
+        if c is None:
+            arrivals = len(self._requests)
+            completed = sum(1 for r in self._requests
+                            if r.completion_time is not None)
+            return {"arrivals": arrivals, "completed": completed,
+                    "unique_completed": completed,
+                    "pending": arrivals - completed, "lost": 0,
+                    "duplicate_completions": 0}
+        completed = len(c.comp)
+        unique = int(len(np.unique(c.finalized()[0]))) if completed else 0
+        pending = len(c.pending)
+        return {"arrivals": c.n, "completed": completed,
+                "unique_completed": unique, "pending": pending,
+                "lost": c.n - unique - pending,
+                "duplicate_completions": completed - unique}
+
     def by_class(self) -> Dict[str, "Metrics"]:
         """Per-DAG-class views (C1..C4 style).  Flat mode: shared-column
         views keyed by class id; object mode: filtered copies, exactly the

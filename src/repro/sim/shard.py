@@ -91,6 +91,11 @@ def validate_shardable(exp, hooks: Sequence = (),
         raise ValueError(
             f"shards={n} does not support fault plans yet (fault events "
             f"mutate cross-shard control-plane state mid-epoch)")
+    if exp.params.get("hedge_timeout"):
+        raise ValueError(
+            f"shards={n} does not support hedged retries (shard processes "
+            f"build their SGS pools directly, bypassing the stack's hedge "
+            f"wiring); drop params['hedge_timeout'] or run sequentially")
     if hooks or timed_calls:
         raise ValueError(
             f"shards={n} does not support simulate(hooks=/timed_calls=) "

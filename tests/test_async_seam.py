@@ -92,7 +92,8 @@ def test_coalescer_window_flush_batches_concurrent_submits():
     # all complete at window + shared runtime, in inv_id order
     assert done == [(pytest.approx(0.11), i.inv_id) for i in invs]
     assert co.counters() == {"n_batches": 1, "n_batched_invocations": 3,
-                             "n_batch_slots": 4, "max_batch_occupancy": 3}
+                             "n_batch_slots": 4, "max_batch_occupancy": 3,
+                             "n_dropped_invocations": 0}
 
 
 def test_coalescer_size_flush_preempts_window():

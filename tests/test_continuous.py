@@ -57,7 +57,8 @@ def test_same_instant_submits_join_one_prefill_in_inv_id_order():
                     for i in invs]
     assert cb.counters() == {"n_prefill_batches": 1, "n_joins": 3,
                              "n_decode_ticks": 3, "n_step_slots": 9,
-                             "max_batch_occupancy": 3}
+                             "max_batch_occupancy": 3,
+                             "n_dropped_invocations": 0}
 
 
 def test_late_arrival_joins_running_batch_and_leaves_independently():
@@ -232,7 +233,7 @@ def test_jax_continuous_serves_a_tiny_app_end_to_end():
         workload_factory="serving_apps",
         workload_kwargs=dict(apps=smoke_apps(), duration=1.0, rps=4.0,
                              prewarm_per_fn=2),
-        cluster=SMALL, warmup=0.2, drain=10.0)
+        cluster=SMALL, warmup=0.2, drain=120.0)
     be = BatchedJaxBackend(max_batch=4, batching="continuous")
     res = simulate(replace(base, backend=be))
     assert res.n_completed == res.n_requests > 0

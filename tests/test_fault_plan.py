@@ -7,9 +7,11 @@ import pytest
 
 from repro.core import ClusterConfig
 from repro.core.fault import (FaultEvent, FaultInjector, FaultPlan,
-                              available_faults, control_plane_delay,
-                              get_fault, mass_eviction, register_fault,
-                              sgs_failstop, worker_crash)
+                              available_faults, az_outage, cascading_crash,
+                              control_plane_delay, flaky_network, get_fault,
+                              mass_eviction, memory_pressure, rack_power,
+                              register_fault, sgs_failstop, slow_worker,
+                              worker_crash)
 from repro.sim import Experiment, run_sweep, simulate
 
 SMALL = ClusterConfig(n_sgs=2, workers_per_sgs=3, cores_per_worker=4,
@@ -35,7 +37,9 @@ def _crash_plan(**kw):
 
 def test_builtin_faults_registered():
     assert {"worker_crash", "sgs_failstop", "mass_eviction",
-            "control_plane_delay"} <= set(available_faults())
+            "control_plane_delay", "rack_power", "az_outage",
+            "cascading_crash", "slow_worker", "flaky_network",
+            "memory_pressure"} <= set(available_faults())
 
 
 def test_unknown_fault_error_lists_registered():
@@ -76,6 +80,41 @@ def test_worker_crash_needs_exactly_one_schedule():
         worker_crash(k=1)
     with pytest.raises(ValueError, match="at= / rate="):
         worker_crash(k=1, at=1.0, rate=2.0)
+
+
+def test_gray_fault_constructors_validate():
+    with pytest.raises(ValueError, match="at= / rate="):
+        cascading_crash()
+    with pytest.raises(ValueError, match="at= / rate="):
+        cascading_crash(at=1.0, rate=0.5)
+    with pytest.raises(ValueError, match=r"p=1.5 must be in \[0, 1\]"):
+        cascading_crash(at=1.0, p=1.5)
+    with pytest.raises(ValueError, match="at= / rate="):
+        slow_worker()
+    with pytest.raises(ValueError, match="factor=0.0 must be > 0"):
+        slow_worker(at=1.0, factor=0.0)
+    with pytest.raises(ValueError, match="at= / rate="):
+        flaky_network()
+    with pytest.raises(ValueError, match="jitter=0.0 must be > 0"):
+        flaky_network(at=1.0, jitter=0.0)
+    with pytest.raises(ValueError, match=r"frac=0.0 must be in \(0, 1\]"):
+        memory_pressure(at=1.0, frac=0.0)
+    with pytest.raises(ValueError, match="duration=0.0 must be > 0"):
+        memory_pressure(at=1.0, duration=0.0)
+
+
+def test_gray_fault_plan_json_round_trip():
+    plan = FaultPlan(events=(rack_power(at=1.0, rack=2, spare_racks=1),
+                             az_outage(at=2.0),
+                             cascading_crash(rate=0.5, p=0.7, k0=2,
+                                             max_kills=6),
+                             slow_worker(at=3.0, k=2, factor=8.0,
+                                         duration=1.5),
+                             flaky_network(rate=2.0, jitter=0.01),
+                             memory_pressure(at=4.0, frac=0.25)),
+                     seed=13, name="gray")
+    back = FaultPlan.from_dict(json.loads(json.dumps(plan.to_dict())))
+    assert back == plan and back.label() == "gray"
 
 
 def test_fault_plan_json_round_trip():
@@ -215,6 +254,173 @@ def test_sgs_failstop_skips_flat_stacks():
         events=(sgs_failstop(at=1.0),))))
     assert res.fault_events[0].get("skipped") is True
     assert res.n_retries == 0
+
+
+# -- correlated fault shapes (worker → rack → AZ topology) -------------------
+
+# 4 racks (one per SGS pool, §4.1) grouped into 2 AZs of 2 racks each
+TOPO = ClusterConfig(n_sgs=4, workers_per_sgs=3, cores_per_worker=4,
+                     pool_mem_mb=2048.0, racks_per_az=2)
+
+
+def _live_worker_ids(res):
+    return {w.worker_id for s in res.sim.lbs.sgss.values()
+            for w in s.workers}
+
+
+def test_cluster_config_topology_arithmetic():
+    assert (TOPO.n_workers, TOPO.n_racks, TOPO.n_azs) == (12, 4, 2)
+    assert [TOPO.rack_of(w) for w in (0, 3, 6, 9)] == [0, 1, 2, 3]
+    assert [TOPO.az_of(w) for w in (0, 3, 6, 9)] == [0, 0, 1, 1]
+    assert list(TOPO.rack_workers(2)) == [6, 7, 8]
+    assert list(TOPO.az_racks(1)) == [2, 3]
+
+
+def test_rack_power_kills_one_whole_pool_and_evacuates():
+    plan = FaultPlan(events=(rack_power(at=1.5),), seed=1)
+    res = simulate(_exp(cluster=TOPO, faults=plan, drain=6.0))
+    ev = res.fault_events[0]
+    assert ev["kind"] == "rack_power" and ev["n_killed"] == 3
+    # one entire rack (== one SGS pool) is gone; 3 racks survive
+    assert len(_live_worker_ids(res)) == 9
+    assert res.n_retries == ev["n_retry"]
+    m = res.sim.metrics
+    assert m.n_completed == m.n_requests
+    assert res.accounting["lost"] == 0
+
+
+def test_az_outage_kills_racks_per_az_racks_together():
+    plan = FaultPlan(events=(az_outage(at=1.5),), seed=1)
+    res = simulate(_exp(cluster=TOPO, faults=plan, drain=6.0))
+    ev = res.fault_events[0]
+    assert ev["kind"] == "az_outage"
+    assert len(ev["racks"]) == TOPO.racks_per_az and ev["n_killed"] == 6
+    # the zone's racks are correlated: both die at the same instant
+    assert len(_live_worker_ids(res)) == 6
+    m = res.sim.metrics
+    assert m.n_completed == m.n_requests
+    assert res.accounting["lost"] == 0
+
+
+def test_rack_power_spares_the_last_rack():
+    lone = ClusterConfig(n_sgs=1, workers_per_sgs=3, cores_per_worker=4,
+                         pool_mem_mb=2048.0)
+    res = simulate(_exp(cluster=lone, faults=FaultPlan(
+        events=(rack_power(at=1.0),))))
+    assert res.fault_events[0].get("skipped") is True
+    assert res.sim.metrics.n_completed == res.sim.metrics.n_requests
+
+
+def test_cascading_crash_branching_is_seeded_and_bounded():
+    # p=0: the cascade never propagates — exactly k0 seed crashes
+    none = simulate(_exp(faults=FaultPlan(
+        events=(cascading_crash(at=1.0, p=0.0, k0=2),), seed=5), drain=6.0))
+    assert len(none.fault_events[0]["killed"]) == 2
+    # p=1: every crash propagates — bounded by max_kills
+    full = simulate(_exp(faults=FaultPlan(
+        events=(cascading_crash(at=1.0, p=1.0, k0=1, max_kills=3),),
+        seed=5), drain=6.0))
+    assert len(full.fault_events[0]["killed"]) == 3
+    # identical plan + seed replays the identical cascade (victims included)
+    again = simulate(_exp(faults=FaultPlan(
+        events=(cascading_crash(at=1.0, p=1.0, k0=1, max_kills=3),),
+        seed=5), drain=6.0))
+    assert again.fault_events == full.fault_events
+    for res in (none, full):
+        assert res.sim.metrics.n_completed == res.sim.metrics.n_requests
+
+
+# -- degraded-mode (gray failure) shapes -------------------------------------
+
+
+def test_slow_worker_degrades_tail_without_killing_anything():
+    calm = simulate(_exp(drain=20.0))
+    slow = simulate(_exp(faults=FaultPlan(
+        events=(slow_worker(at=0.5, k=2, factor=4.0),), seed=2),
+        drain=20.0))
+    ev = slow.fault_events[0]
+    assert ev["kind"] == "slow_worker" and len(ev["slowed"]) == 2
+    # gray: no worker dies, no retries fire — the work just runs slower
+    assert slow.n_retries == 0
+    assert len(_live_worker_ids(slow)) == SMALL.n_workers
+    assert slow.sim.metrics.sorted_latencies()[-1] \
+        > calm.sim.metrics.sorted_latencies()[-1]
+    assert slow.sim.metrics.n_completed == slow.sim.metrics.n_requests
+
+
+def test_slow_worker_duration_restores_full_speed():
+    res = simulate(_exp(faults=FaultPlan(
+        events=(slow_worker(at=1.0, k=2, factor=8.0, duration=0.5),),
+        seed=2), drain=20.0))
+    assert len(res.fault_events[0]["slowed"]) == 2
+    for s in res.sim.lbs.sgss.values():
+        assert s._slow == {}
+    assert res.sim.metrics.n_completed == res.sim.metrics.n_requests
+
+
+def test_flaky_network_jitters_control_plane_clocks():
+    res = simulate(_exp(faults=FaultPlan(
+        events=(flaky_network(rate=3.0, jitter=0.05, start=0.5),), seed=4),
+        drain=6.0))
+    assert res.fault_events
+    for ev in res.fault_events:
+        assert ev["kind"] == "flaky_network" and ev["n_clocks"] > 0
+        assert 0.0 <= ev["total_stall"] < 0.05 * ev["n_clocks"]
+    assert res.sim.metrics.n_completed == res.sim.metrics.n_requests
+
+
+def test_memory_pressure_evicts_then_restores_pool_capacity():
+    res = simulate(_exp(faults=FaultPlan(
+        events=(memory_pressure(at=2.5, frac=1.0, duration=1.0),), seed=0),
+        drain=6.0))
+    ev = res.fault_events[0]
+    assert ev["kind"] == "memory_pressure" and ev["n_workers"] > 0
+    assert ev["n_evicted"] > 0          # a real eviction storm fired
+    # capacity restored after `duration`; demand targets rebuilt the pool
+    for s in res.sim.lbs.sgss.values():
+        for w in s.workers:
+            assert w.pool_mem_mb == pytest.approx(SMALL.pool_mem_mb)
+            assert w.used_pool_mem <= w.pool_mem_mb + 1e-9
+    assert res.sim.metrics.n_completed == res.sim.metrics.n_requests
+
+
+def test_gray_plans_keep_every_request_accounted_under_every_stack():
+    """No-hypothesis twin of tests/test_properties.py::
+    test_fault_plan_accounting_invariant: a fixed matrix of correlated and
+    gray plans never loses or double-completes a request on any stack."""
+    from repro.core import available_stacks
+    plans = [
+        FaultPlan(events=(rack_power(at=1.0),), seed=0, name="rack"),
+        FaultPlan(events=(cascading_crash(at=1.0, p=0.8, k0=2),), seed=1,
+                  name="cascade"),
+        FaultPlan(events=(slow_worker(at=0.5, k=2, factor=4.0),
+                          flaky_network(rate=2.0, jitter=0.02)), seed=2,
+                  name="gray"),
+        FaultPlan(events=(memory_pressure(at=1.5, frac=0.5),
+                          worker_crash(k=1, rate=0.5)), seed=3,
+                  name="pressure"),
+    ]
+    for stack in available_stacks():
+        for plan in plans:
+            res = simulate(_exp(stack=stack, faults=plan, drain=20.0))
+            acc = res.accounting
+            assert acc["lost"] == 0, (stack, plan.name)
+            assert acc["duplicate_completions"] == 0, (stack, plan.name)
+            assert acc["completed"] + acc["pending"] == acc["arrivals"], \
+                (stack, plan.name)
+
+
+# -- sharded-core interlock ---------------------------------------------------
+
+
+def test_shards_reject_fault_plans_and_hedging_with_clear_errors():
+    """docs/PERF.md: fault plans and hedged retries are sequential-only;
+    the shard validator must say so rather than silently diverge."""
+    with pytest.raises(ValueError, match="does not support fault plans yet"):
+        simulate(_exp(faults=_crash_plan(), shards=2))
+    with pytest.raises(ValueError,
+                       match="does not support hedged retries"):
+        simulate(_exp(params={"hedge_timeout": 1.5}, shards=2))
 
 
 # -- Metrics.window ----------------------------------------------------------

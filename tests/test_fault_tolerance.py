@@ -2,13 +2,13 @@
 async-seam crash safety, and end-to-end SGS failover (docs/FAULTS.md)."""
 import pytest
 
-from repro.core import (ClusterConfig, Request, SGSConfig,
-                        SemiGlobalScheduler, Worker)
+from repro.core import (BatchCoalescer, ClusterConfig, ContinuousBatcher,
+                        Request, SGSConfig, SemiGlobalScheduler, Worker)
 from repro.core.cluster import build_cluster
 from repro.core.fault import (FaultPlan, StateStore, checkpoint_lbs,
                               checkpoint_sgs, fail_sgs, fail_worker,
                               restore_lbs, restore_sgs, sgs_failstop,
-                              worker_crash)
+                              slow_worker, worker_crash)
 from repro.core.types import DagSpec, FunctionSpec
 from repro.sim import ConstantRate, Experiment, WorkloadSpec, simulate
 from repro.sim.engine import SimEnv
@@ -301,3 +301,162 @@ def test_fail_sgs_requeues_and_forwards_completions():
     # completions (including pre-failure in-flight ones) landed once each
     assert len(replacement.completed_requests) == len(reqs)
     assert all(w.busy_cores == 0 for w in replacement.workers)
+
+
+# -- dead-member release in the batched data planes (satellite) ---------------
+
+
+def _batch_inv(exec_time=0.1):
+    from repro.core.types import DagSpec, FunctionSpec, Invocation
+    dag = DagSpec("d", (FunctionSpec("d/f", exec_time),), ())
+    req = Request(dag=dag, arrival_time=0.0)
+    return Invocation(request=req, fn=dag.fn("d/f"), ready_time=0.0)
+
+
+def test_coalescer_drop_removes_pending_and_tombstones_cold_members():
+    env = SimEnv()
+    flushed = []
+
+    def run_batch(fn, invs):
+        flushed.append([i.inv_id for i in invs])
+        return 0.01
+
+    co = BatchCoalescer(env, run_batch, batch_window=0.05, max_batch=8)
+    done = []
+    invs = [_batch_inv() for _ in range(3)]
+    for inv in invs:
+        co.submit(inv, lambda s, i=inv: done.append(i.inv_id))
+    cold = _batch_inv()
+    co.submit(cold, lambda s: done.append(cold.inv_id), 0.5)  # in setup
+    env.run_until(0.01)                  # window open, nothing flushed
+    co.drop([invs[1].inv_id, cold.inv_id])
+    env.run()
+    # the dropped pending member left the window; the cold member's
+    # deferred enrollment consumed its tombstone instead of joining
+    assert flushed == [[invs[0].inv_id, invs[2].inv_id]]
+    assert sorted(done) == sorted([invs[0].inv_id, invs[2].inv_id])
+    assert co.counters()["n_dropped_invocations"] == 2
+
+
+def test_continuous_batcher_drop_frees_slot_and_fires_release_hook():
+    env = SimEnv()
+    released = []
+
+    cb = ContinuousBatcher(env, lambda fn, invs, slots: 0.04,
+                           lambda fn, slots: 0.01, lambda fn: 50,
+                           max_batch=2,
+                           release=lambda fn, slots: released.append(
+                               (fn, list(slots))))
+    done = []
+    a, b = _batch_inv(), _batch_inv()
+    cb.submit(a, lambda s: done.append("a"))
+    cb.submit(b, lambda s: done.append("b"))
+    late = _batch_inv()
+    env.call_after(0.10, lambda: cb.submit(late,
+                                           lambda s: done.append("late")))
+    env.run_until(0.08)                  # both decoding, batch is full
+    cb.drop([a.inv_id])                  # a's worker died mid-generation
+    env.run_until(0.30)
+    # a never completes (the scheduler retries it elsewhere); its slot was
+    # zeroed via the release hook and handed to the late joiner
+    assert "a" not in done and "late" not in done  # late still decoding
+    assert released == [("d/f", [0])]
+    assert cb.counters()["n_dropped_invocations"] == 1
+    assert cb.counters()["max_batch_occupancy"] == 2
+    cb.drop([b.inv_id, late.inv_id])
+    env.run()
+    assert done == []
+    assert cb.counters()["n_dropped_invocations"] == 3
+
+
+def _batched_crash_exp(batching, **backend_kw):
+    kw = dict(exec_time=0.05, batching=batching, max_batch=4)
+    kw.update(backend_kw)
+    return Experiment(
+        stack="archipelago", backend="stub-batched", backend_kwargs=kw,
+        workload_factory="paper_workload_1",
+        workload_kwargs=dict(duration=4.0, scale=0.03, dags_per_class=1),
+        cluster=ClusterConfig(n_sgs=2, workers_per_sgs=3,
+                              cores_per_worker=4, pool_mem_mb=2048.0),
+        drain=8.0,
+        faults=FaultPlan(events=(worker_crash(k=2, at=1.0),
+                                 worker_crash(k=2, at=2.0)), seed=1))
+
+
+@pytest.mark.parametrize("batching,extra", [
+    ("windowed", {"batch_window": 0.2}),
+    ("continuous", {"n_steps": 6}),
+])
+def test_worker_crash_mid_batch_drops_members_cleanly(batching, extra):
+    """Satellite regression: a worker crash while its invocations sit in a
+    windowed batch / continuous slot slab must drop exactly those members
+    — retried cleanly, no CompletionQueue corruption, counters coherent."""
+    res = simulate(_batched_crash_exp(batching, **extra))
+    assert res.n_retries > 0
+    # the crash reached the data plane: members were released, not leaked
+    assert res.backend_counters["n_dropped_invocations"] > 0
+    acc = res.accounting
+    assert acc["lost"] == 0 and acc["duplicate_completions"] == 0
+    assert acc["completed"] == acc["arrivals"]
+    for sgs in res.sim.lbs.sgss.values():
+        assert all(w.busy_cores == 0 for w in sgs.workers)
+        assert sgs._free_cores == sum(w.cores for w in sgs.workers)
+    if batching == "continuous":
+        assert res.backend_counters["n_joins"] > 0
+        assert res.backend_counters["n_decode_ticks"] > 0
+
+
+# -- hedged retries under gray failure (mitigation layer) ---------------------
+
+
+def _slow_exp(**kw):
+    base = dict(stack="archipelago", workload_factory="paper_workload_1",
+                workload_kwargs=dict(duration=6.0, scale=0.05,
+                                     dags_per_class=2),
+                cluster=ClusterConfig(n_sgs=2, workers_per_sgs=4,
+                                      cores_per_worker=4,
+                                      pool_mem_mb=4096.0),
+                drain=30.0, seed=0,
+                faults=FaultPlan(events=(slow_worker(at=0.5, k=3,
+                                                     factor=16.0),),
+                                 seed=7))
+    base.update(kw)
+    return Experiment(**base)
+
+
+def test_hedged_retry_trims_the_slow_worker_tail():
+    plain = simulate(_slow_exp())
+    hedged = simulate(_slow_exp(params={"hedge_timeout": 1.5}))
+    assert plain.n_hedges == 0
+    assert hedged.n_hedges > 0
+    # speculative copies cut the gray-straggler tail
+    assert hedged.sim.metrics.sorted_latencies()[-1] \
+        < plain.sim.metrics.sorted_latencies()[-1]
+    # duplicate completions are suppressed: first copy wins, exactly once
+    for res in (plain, hedged):
+        acc = res.accounting
+        assert acc["lost"] == 0 and acc["duplicate_completions"] == 0
+        assert acc["completed"] == acc["arrivals"]
+    # n_hedges survives the JSON round-trip
+    from repro.sim import ExperimentResult
+    import json as _json
+    back = ExperimentResult.from_dict(
+        _json.loads(_json.dumps(hedged.to_dict())))
+    assert back.n_hedges == hedged.n_hedges
+    assert back.accounting == hedged.accounting
+
+
+def test_hedge_timeout_never_fires_on_healthy_workers():
+    """On the modeled path a healthy dispatch completes at exactly
+    setup + exec, strictly before the 1.5× hedge deadline: a faultless
+    hedged run does the same work as an unhedged one."""
+    off = simulate(_slow_exp(faults=None))
+    on = simulate(_slow_exp(faults=None, params={"hedge_timeout": 1.5}))
+    assert on.n_hedges == 0
+    assert on.latency_percentiles == off.latency_percentiles
+    assert on.accounting == off.accounting
+
+
+def test_hedge_params_rejected_on_stacks_without_the_sgs_layer():
+    with pytest.raises(ValueError, match="hedge_timeout"):
+        simulate(_slow_exp(stack="fifo", params={"hedge_timeout": 1.5}))

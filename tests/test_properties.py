@@ -192,6 +192,68 @@ def test_ring_empty_and_remove_to_empty_raise():
 # -- DAG / slack --------------------------------------------------------------
 
 
+# -- fault-plan request accounting (docs/FAULTS.md) ---------------------------
+
+
+@st.composite
+def _fault_event(draw):
+    """One seeded fault event with drawn-but-valid parameters, spanning the
+    fail-stop, correlated, and gray (degraded-mode) shapes."""
+    from repro.core import fault as f
+    t = draw(st.floats(0.5, 3.0))
+    kind = draw(st.sampled_from(
+        ["worker_crash", "rack_power", "az_outage", "cascading_crash",
+         "slow_worker", "flaky_network", "memory_pressure",
+         "mass_eviction"]))
+    if kind == "worker_crash":
+        return f.worker_crash(k=draw(st.integers(1, 3)), at=t)
+    if kind == "rack_power":
+        return f.rack_power(at=t)
+    if kind == "az_outage":
+        return f.az_outage(at=t)
+    if kind == "cascading_crash":
+        return f.cascading_crash(at=t, p=draw(st.floats(0.0, 1.0)),
+                                 k0=draw(st.integers(1, 2)), max_kills=4)
+    if kind == "slow_worker":
+        return f.slow_worker(at=t, k=draw(st.integers(1, 2)),
+                             factor=draw(st.floats(1.5, 8.0)))
+    if kind == "flaky_network":
+        return f.flaky_network(at=t, jitter=draw(st.floats(0.001, 0.1)))
+    if kind == "memory_pressure":
+        return f.memory_pressure(at=t, frac=draw(st.floats(0.1, 1.0)),
+                                 duration=draw(st.floats(0.2, 2.0)))
+    return f.mass_eviction(at=t, frac=draw(st.floats(0.1, 1.0)))
+
+
+@given(events=st.lists(_fault_event(), min_size=1, max_size=3),
+       plan_seed=st.integers(0, 2**16),
+       stack=st.sampled_from(["archipelago", "fifo", "sparrow", "pull"]),
+       hedge=st.booleans())
+@settings(max_examples=12, deadline=None)
+def test_fault_plan_accounting_invariant(events, plan_seed, stack, hedge):
+    """For ANY seeded FaultPlan, under every registered stack:
+    completed + pending == arrivals, nothing lost, nothing completed twice
+    (deterministic twin: tests/test_fault_plan.py::
+    test_gray_plans_keep_every_request_accounted_under_every_stack)."""
+    from repro.core import ClusterConfig
+    from repro.core.fault import FaultPlan
+    from repro.sim import Experiment, simulate
+    params = ({"hedge_timeout": 1.5}
+              if hedge and stack == "archipelago" else {})
+    res = simulate(Experiment(
+        stack=stack, workload_factory="paper_workload_1",
+        workload_kwargs=dict(duration=3.0, scale=0.03, dags_per_class=1),
+        cluster=ClusterConfig(n_sgs=2, workers_per_sgs=3,
+                              cores_per_worker=4, pool_mem_mb=2048.0),
+        drain=10.0, params=params,
+        faults=FaultPlan(events=tuple(events), seed=plan_seed)))
+    acc = res.accounting
+    assert acc["lost"] == 0
+    assert acc["duplicate_completions"] == 0
+    assert acc["completed"] + acc["pending"] == acc["arrivals"]
+    assert acc["completed"] == acc["unique_completed"]
+
+
 @given(times=st.lists(st.floats(0.01, 2.0), min_size=1, max_size=6),
        slack=st.floats(0.0, 5.0))
 @settings(max_examples=60, deadline=None)
